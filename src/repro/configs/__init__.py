@@ -1,0 +1,9 @@
+"""Architecture configs: one module per assigned architecture.
+
+``get(name)`` returns the full published config; ``get(name, smoke=True)``
+returns the reduced same-family config used by CPU smoke tests.
+"""
+
+from repro.configs.base import ARCH_REGISTRY, ModelConfig, get, list_archs
+
+__all__ = ["ARCH_REGISTRY", "ModelConfig", "get", "list_archs"]

@@ -1,0 +1,110 @@
+"""Fixpoint runners: naive and generalized semi-naive (GSN) evaluation.
+
+The paper's Sec. 3.1 shows GSN is an FGH-rewrite of the naive FG-program for
+any complete distributive lattice with idempotent ⊕:
+
+    naive:  X ← F(X)
+    GSN:    Y ← Y ⊕ Δ;  Δ ← δF(Y, Δ) ⊖ (Y ⊕ Δ)
+
+For *linear* programs F(X) = C ⊕ A(X) (A = the ⊕ of terms containing
+exactly one IDB atom), distributivity gives the differential
+``δF(Y, Δ) = A(Δ)`` — only the frontier is re-derived.  On TPU the Δ
+relation is a dense masked tensor (DESIGN.md §2).
+
+Both runners execute as a single ``jax.lax.while_loop`` under jit (so they
+stage into one XLA program and can be pjit-sharded), with a host-loop
+variant that reports per-iteration statistics for benchmarks.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import semiring as sr_mod
+
+State = dict[str, jnp.ndarray]
+
+
+def _tree_equal(a: State, b: State) -> jnp.ndarray:
+    flags = [jnp.all(a[k] == b[k]) for k in a]
+    out = flags[0]
+    for f in flags[1:]:
+        out = jnp.logical_and(out, f)
+    return out
+
+
+def naive_fixpoint(ico: Callable[[State], State], x0: State, *,
+                   max_iters: int = 10_000) -> tuple[State, jnp.ndarray]:
+    """Iterate X ← F(X) until X stops changing.  Returns (X*, iters)."""
+
+    def cond(carry):
+        x, prev_changed, it = carry
+        return jnp.logical_and(prev_changed, it < max_iters)
+
+    def body(carry):
+        x, _, it = carry
+        nx = ico(x)
+        return nx, jnp.logical_not(_tree_equal(nx, x)), it + 1
+
+    x, _, iters = jax.lax.while_loop(
+        cond, body, (x0, jnp.asarray(True), jnp.asarray(0)))
+    return x, iters
+
+
+def seminaive_fixpoint(ico: Callable[[State], State],
+                       delta_ico: Callable[[State], State],
+                       x0: State, semirings: dict[str, sr_mod.Semiring], *,
+                       max_iters: int = 10_000) -> tuple[State, jnp.ndarray]:
+    """GSN evaluation.  ``delta_ico`` is δF: applies only the linear part
+    A to the Δ state.  Requires idempotent ⊕ with a ⊖ (lattice) per IDB.
+    """
+    for name, sr in semirings.items():
+        if sr.minus is None:
+            raise ValueError(f"{name}: semiring {sr.name} lacks ⊖; "
+                             "GSN needs an idempotent complete lattice")
+
+    def minus(new: State, old: State) -> State:
+        return {k: semirings[k].minus(new[k], old[k]) for k in new}
+
+    def plus(a: State, b: State) -> State:
+        return {k: semirings[k].add(a[k], b[k]) for k in a}
+
+    d0 = minus(ico(x0), x0)
+
+    def cond(carry):
+        y, d, changed, it = carry
+        return jnp.logical_and(changed, it < max_iters)
+
+    def nonzero(d: State) -> jnp.ndarray:
+        flags = [jnp.any(d[k] != semirings[k].zero) for k in d]
+        out = flags[0]
+        for f in flags[1:]:
+            out = jnp.logical_or(out, f)
+        return out
+
+    def body(carry):
+        y, d, _, it = carry
+        y_new = plus(y, d)
+        d_new = minus(delta_ico(d), y_new)
+        return y_new, d_new, nonzero(d_new), it + 1
+
+    y, d, _, iters = jax.lax.while_loop(
+        cond, body, (x0, d0, jnp.asarray(True), jnp.asarray(0)))
+    return y, iters
+
+
+def host_fixpoint(ico: Callable[[State], State], x0: State, *,
+                  max_iters: int = 10_000) -> tuple[State, int]:
+    """Python-loop variant (per-iteration visibility; used by benchmarks)."""
+    x = {k: jnp.asarray(v) for k, v in x0.items()}
+    step = jax.jit(ico)
+    for it in range(max_iters):
+        nx = step(x)
+        same = all(bool(jnp.all(nx[k] == x[k])) for k in nx)
+        x = nx
+        if same:
+            return x, it + 1
+    return x, max_iters

@@ -1,0 +1,200 @@
+"""Datalog° programs: rules, strata, ICOs, and end-to-end execution.
+
+A :class:`Program` is a list of strata executed in order (paper Sec. 2:
+interpreted functions/casts may only apply to EDBs or IDBs of earlier
+strata, so each stratum's ICO is monotone and has a least fixpoint).  Each
+stratum holds one merged rule per IDB (multiple rules with the same head are
+OR-ed into one SSP, the paper's convention) plus an optional non-0̄ initial
+state (the GH-program's ``Y ← G(X₀)``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine, fixpoint, ir
+from repro.core import semiring as sr_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    head: str
+    body: ir.SSP  # body.head are the rule's head variables
+
+    def __post_init__(self):
+        assert isinstance(self.body, ir.SSP)
+
+
+@dataclasses.dataclass
+class Stratum:
+    """One fixpoint block: mutually recursive IDBs and their merged rules."""
+
+    rules: dict[str, Rule]
+    init: dict[str, ir.SSP] | None = None  # optional Y₀ expressions
+
+    @property
+    def idbs(self) -> tuple[str, ...]:
+        return tuple(self.rules)
+
+    def is_linear(self) -> bool:
+        for r in self.rules.values():
+            for t in r.body.terms:
+                n = sum(1 for a in t.atoms
+                        if isinstance(a, ir.RelAtom) and a.name in self.rules)
+                if n > 1:
+                    return False
+        return True
+
+
+@dataclasses.dataclass
+class Program:
+    """``strata`` run in order; then the ``outputs`` chain G = G_k∘…∘G_1 is
+    evaluated (each intermediate head registered as a relation — the paper's
+    single-relation G generalized to helper-function chains, Appendix A);
+    ``post`` is an optional host-side epilogue (e.g. WS's P[t]−P[t−10],
+    which uses a non-semiring minus)."""
+
+    name: str
+    schema: ir.Schema
+    strata: list[Stratum]
+    outputs: list[Rule]
+    post: object | None = None  # Callable[[jnp.ndarray, engine.Database], jnp.ndarray]
+    sort_hints: dict[str, str] = dataclasses.field(default_factory=dict)
+
+    def idb_semiring(self, name: str) -> sr_mod.Semiring:
+        return sr_mod.get(self.schema[name].semiring)
+
+    @property
+    def answer(self) -> str:
+        return self.outputs[-1].head
+
+
+# --------------------------------------------------------------------------
+# ICO construction
+# --------------------------------------------------------------------------
+
+
+def zero_state(stratum: Stratum, db: engine.Database,
+               backend: str = "jnp") -> fixpoint.State:
+    out = {}
+    for name in stratum.idbs:
+        rs = db.schema[name]
+        sr = sr_mod.get(rs.semiring, lib=backend)
+        shape = tuple(db.dom(s) for s in rs.sorts)
+        out[name] = sr.zeros(shape)
+    return out
+
+
+def init_state(stratum: Stratum, db: engine.Database,
+               hints: Mapping[str, str],
+               backend: str = "jnp") -> fixpoint.State:
+    state = zero_state(stratum, db, backend)
+    if stratum.init:
+        for name, expr in stratum.init.items():
+            state[name] = engine.eval_ssp(expr, db, hints, backend=backend)
+    return state
+
+
+def make_ico(stratum: Stratum, db: engine.Database,
+             hints: Mapping[str, str], backend: str = "jnp"):
+    def ico(state: fixpoint.State) -> fixpoint.State:
+        cur = db.with_relations(state)
+        return {name: engine.eval_ssp(rule.body, cur, hints, backend=backend)
+                for name, rule in stratum.rules.items()}
+    return ico
+
+
+def make_delta_ico(stratum: Stratum, db: engine.Database,
+                   hints: Mapping[str, str]):
+    """δF for linear strata: keep only terms containing an IDB atom and
+    evaluate them against the Δ state (DESIGN of fixpoint.py)."""
+    assert stratum.is_linear(), "GSN differential needs a linear program"
+    delta_rules = {}
+    for name, rule in stratum.rules.items():
+        lin_terms = tuple(
+            t for t in rule.body.terms
+            if any(isinstance(a, ir.RelAtom) and a.name in stratum.rules
+                   for a in t.atoms))
+        delta_rules[name] = Rule(name, ir.SSP(rule.body.head, lin_terms,
+                                              rule.body.semiring))
+
+    def dico(delta: fixpoint.State) -> fixpoint.State:
+        cur = db.with_relations(delta)
+        out = {}
+        for name, rule in delta_rules.items():
+            if rule.body.terms:
+                out[name] = engine.eval_ssp(rule.body, cur, hints)
+            else:
+                sr = sr_mod.get(db.schema[name].semiring)
+                shape = tuple(db.dom(s) for s in db.schema[name].sorts)
+                out[name] = sr.zeros(shape)
+        return out
+
+    return dico
+
+
+# --------------------------------------------------------------------------
+# Execution
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RunStats:
+    iterations: list[int]
+    mode: str
+
+
+def run_program(prog: Program, db: engine.Database, *, mode: str = "naive",
+                max_iters: int = 10_000, jit_whole: bool = False,
+                ) -> tuple[jnp.ndarray, RunStats]:
+    """Run all strata to fixpoint, then evaluate the output rule G."""
+    hints = prog.sort_hints
+    iters_log: list[int] = []
+    cur_db = db
+    # query-plan cache: repeated executions of the same program against the
+    # same database reuse the staged fixpoint (keyed per stratum/mode/db)
+    plan_cache = prog.__dict__.setdefault("_plan_cache", {})
+    for si, stratum in enumerate(prog.strata):
+        cache_key = (si, mode, max_iters,
+                     tuple(sorted((k, id(v))
+                                  for k, v in cur_db.relations.items())))
+        ico = make_ico(stratum, cur_db, hints)
+        x0 = init_state(stratum, cur_db, hints)
+        if mode == "seminaive":
+            srs = {n: sr_mod.get(cur_db.schema[n].semiring)
+                   for n in stratum.idbs}
+            dico = make_delta_ico(stratum, cur_db, hints)
+            if cache_key not in plan_cache:
+                plan_cache[cache_key] = jax.jit(
+                    lambda x0, ico=ico, dico=dico, srs=srs:
+                    fixpoint.seminaive_fixpoint(ico, dico, x0, srs,
+                                                max_iters=max_iters))
+            x, iters = plan_cache[cache_key](x0)
+        elif mode == "naive":
+            if cache_key not in plan_cache:
+                plan_cache[cache_key] = jax.jit(
+                    lambda x0, ico=ico: fixpoint.naive_fixpoint(
+                        ico, x0, max_iters=max_iters))
+            x, iters = plan_cache[cache_key](x0)
+        else:  # host loop, per-iteration stats
+            x, iters = fixpoint.host_fixpoint(ico, x0, max_iters=max_iters)
+        iters_log.append(int(iters))
+        cur_db = cur_db.with_relations(x)
+    out = None
+    for rule in prog.outputs:
+        out = engine.eval_ssp(rule.body, cur_db, hints)
+        cur_db = cur_db.with_relations({rule.head: out})
+    if prog.post is not None:
+        out = prog.post(out, cur_db)
+    return out, RunStats(iters_log, mode)
+
+
+def declare_idbs(prog: Program) -> None:
+    """Sanity: every IDB referenced by rules must be in the schema."""
+    for stratum in prog.strata:
+        for name in stratum.idbs:
+            assert name in prog.schema, f"IDB {name} missing from schema"

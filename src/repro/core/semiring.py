@@ -1,0 +1,248 @@
+"""Ordered (pre-)semirings as JAX-compatible value spaces.
+
+The paper (Sec. 2) generalizes Datalog to Datalog° over ordered
+(pre-)semirings ``(S, ⊕, ⊗, 0̄, 1̄, ≤)``.  Each semiring here carries:
+
+* elementwise ``add``/``mul`` (⊕/⊗) and a reduction ``add_reduce`` (⊕ over an
+  axis) implemented with jnp ops, so S-relations are dense jnp arrays;
+* the lattice order ``leq`` used for monotone-convergence reasoning;
+* ``minus`` (⊖, Sec. 3.1: ``b ⊖ a = ⋀{c | b ≤ a ⊕ c}``) for generalized
+  semi-naive evaluation — defined only for idempotent complete lattices;
+* ``from_bool`` — the cast operator ``[-]₀̄¹̄ : 𝔹 → S`` (Sec. 2, Datalog°).
+
+Concrete semirings (paper Sec. 2): 𝔹, Trop (min,+), Tropʳ (max,+), ℕ∞ (+,×)
+and the lifted reals ℝ (+,×).  Values use float32 tensors except 𝔹 (bool):
+``inf`` encodes both ℕ∞'s ∞ and Trop's 0̄.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """A commutative ordered (pre-)semiring over a jnp/numpy dtype.
+
+    ``lib`` selects the array library: "jnp" for staged/distributed
+    execution, "np" for the synthesizer/verifier's eager tiny-database
+    evaluations (numpy avoids per-op dispatch overhead — the CEGIS inner
+    loop evaluates thousands of micro-expressions).
+    """
+
+    name: str
+    dtype: object
+    zero: float
+    one: float
+    add: Callable[[Array, Array], Array]
+    mul: Callable[[Array, Array], Array]
+    add_reduce: Callable[..., Array]  # (x, axis=...) -> x reduced with ⊕
+    leq: Callable[[Array, Array], Array]  # the semiring's partial order
+    idempotent: bool  # ⊕ idempotent (⇒ GSN applies, Sec. 3.1)
+    minus: Callable[[Array, Array], Array] | None = None  # b ⊖ a
+    # ``total`` orders admit argmin-style extraction; informational.
+    naturally_ordered: bool = True
+    lib: str = "jnp"
+
+    @property
+    def xp(self):
+        return np if self.lib == "np" else jnp
+
+    # -- casts ---------------------------------------------------------------
+    def from_bool(self, b: Array) -> Array:
+        """The cast operator [-] : 𝔹 → S mapping 0 ↦ 0̄ and 1 ↦ 1̄."""
+        if self.name == "bool":
+            return b
+        xp = self.xp
+        return xp.where(b, xp.asarray(self.one, self.dtype),
+                        xp.asarray(self.zero, self.dtype))
+
+    def lift_value(self, v: Array) -> Array:
+        """Interpret a numeric key value as an element of S (ValAtom)."""
+        if self.name == "bool":
+            raise TypeError("𝔹 has no numeric value atoms")
+        return v.astype(self.dtype)
+
+    def const(self, c: float) -> Array:
+        return self.xp.asarray(c, self.dtype)
+
+    def zeros(self, shape) -> Array:
+        return self.xp.full(shape, self.zero, self.dtype)
+
+    def ones(self, shape) -> Array:
+        return self.xp.full(shape, self.one, self.dtype)
+
+    def equal(self, a: Array, b: Array) -> Array:
+        """Elementwise equality (used for fixpoint detection)."""
+        return a == b
+
+    def __repr__(self) -> str:  # keep reprs small in test output
+        return f"Semiring({self.name}/{self.lib})"
+
+
+def _min_reduce(x, axis=None, keepdims=False):
+    return jnp.min(x, axis=axis, keepdims=keepdims)
+
+
+def _max_reduce(x, axis=None, keepdims=False):
+    return jnp.max(x, axis=axis, keepdims=keepdims)
+
+
+def _sum_reduce(x, axis=None, keepdims=False):
+    return jnp.sum(x, axis=axis, keepdims=keepdims)
+
+
+def _any_reduce(x, axis=None, keepdims=False):
+    return jnp.any(x, axis=axis, keepdims=keepdims)
+
+
+INF = float("inf")
+
+#: Booleans 𝔹 = ({0,1}, ∨, ∧, 0, 1); the classic Datalog semiring.
+BOOL = Semiring(
+    name="bool",
+    dtype=jnp.bool_,
+    zero=False,
+    one=True,
+    add=jnp.logical_or,
+    mul=jnp.logical_and,
+    add_reduce=_any_reduce,
+    leq=lambda a, b: jnp.logical_or(jnp.logical_not(a), b),  # a ⇒ b
+    idempotent=True,
+    minus=lambda b, a: jnp.logical_and(b, jnp.logical_not(a)),
+)
+
+#: Tropical semiring Trop = (ℕ∪{∞}, min, +, ∞, 0).  NOTE (paper Sec. 2): the
+#: order is *reversed*: ∞ is the smallest element, so "a ≤ b" is "a ≥ b" on ℝ.
+TROP = Semiring(
+    name="trop",
+    dtype=jnp.float32,
+    zero=INF,
+    one=0.0,
+    add=jnp.minimum,
+    mul=lambda a, b: a + b,
+    add_reduce=_min_reduce,
+    leq=lambda a, b: a >= b,  # natural order of Trop is reversed
+    idempotent=True,
+    # b ⊖ a keeps b only where it strictly improves on a (min-lattice delta).
+    minus=lambda b, a: jnp.where(b < a, b, jnp.asarray(INF, jnp.float32)),
+)
+
+#: Reversed tropical Tropʳ = (ℕ, max, +, 0, 0) — a pre-semiring (no
+#: annihilation); used e.g. for the Graph Radius outer aggregate.
+MAXPLUS = Semiring(
+    name="maxplus",
+    dtype=jnp.float32,
+    zero=-INF,  # we lift to ℝ∪{-∞} so ⊕ has a true identity on tensors
+    one=0.0,
+    add=jnp.maximum,
+    mul=lambda a, b: a + b,
+    add_reduce=_max_reduce,
+    leq=lambda a, b: a <= b,
+    idempotent=True,
+    minus=lambda b, a: jnp.where(b > a, b, jnp.asarray(-INF, jnp.float32)),
+)
+
+#: Closed naturals ℕ∞ = (ℕ∪{∞}, +, ×, 0, 1) — bag semantics / counting.
+NAT = Semiring(
+    name="nat",
+    dtype=jnp.float32,
+    zero=0.0,
+    one=1.0,
+    add=lambda a, b: a + b,
+    mul=lambda a, b: a * b,
+    add_reduce=_sum_reduce,
+    leq=lambda a, b: a <= b,
+    idempotent=False,
+    minus=None,
+)
+
+#: Lifted reals ℝ⊥ = (ℝ∪{⊥}, +, ×, 0, 1) — tensors.  ⊥ is not materialized by
+#: the engine (the paper uses it only for undefined entries).
+REAL = Semiring(
+    name="real",
+    dtype=jnp.float32,
+    zero=0.0,
+    one=1.0,
+    add=lambda a, b: a + b,
+    mul=lambda a, b: a * b,
+    add_reduce=_sum_reduce,
+    leq=lambda a, b: a <= b,
+    idempotent=False,
+    minus=None,
+    naturally_ordered=False,
+)
+
+SEMIRINGS: dict[str, Semiring] = {
+    s.name: s for s in (BOOL, TROP, MAXPLUS, NAT, REAL)
+}
+
+
+def _np_reduce(fn):
+    def red(x, axis=None, keepdims=False):
+        return fn(x, axis=axis, keepdims=keepdims)
+    return red
+
+
+def _numpy_twin(sr: Semiring) -> Semiring:
+    table = {
+        "bool": dict(add=np.logical_or, mul=np.logical_and,
+                     add_reduce=_np_reduce(np.any),
+                     leq=lambda a, b: np.logical_or(~np.asarray(a), b),
+                     minus=lambda b, a: np.logical_and(b, ~np.asarray(a)),
+                     dtype=np.bool_),
+        "trop": dict(add=np.minimum, mul=lambda a, b: a + b,
+                     add_reduce=_np_reduce(np.min),
+                     leq=lambda a, b: a >= b,
+                     minus=lambda b, a: np.where(b < a, b,
+                                                 np.float32(INF)),
+                     dtype=np.float32),
+        "maxplus": dict(add=np.maximum, mul=lambda a, b: a + b,
+                        add_reduce=_np_reduce(np.max),
+                        leq=lambda a, b: a <= b,
+                        minus=lambda b, a: np.where(b > a, b,
+                                                    np.float32(-INF)),
+                        dtype=np.float32),
+        "nat": dict(add=lambda a, b: a + b, mul=lambda a, b: a * b,
+                    add_reduce=_np_reduce(np.sum),
+                    leq=lambda a, b: a <= b, minus=None, dtype=np.float32),
+        "real": dict(add=lambda a, b: a + b, mul=lambda a, b: a * b,
+                     add_reduce=_np_reduce(np.sum),
+                     leq=lambda a, b: a <= b, minus=None, dtype=np.float32),
+    }
+    t = table[sr.name]
+    return dataclasses.replace(sr, lib="np", **t)
+
+
+_NP_SEMIRINGS: dict[str, Semiring] = {
+    name: _numpy_twin(s) for name, s in SEMIRINGS.items()
+}
+
+
+def get(name: str | Semiring, lib: str = "jnp") -> Semiring:
+    if isinstance(name, Semiring):
+        if name.lib == lib:
+            return name
+        name = name.name
+    try:
+        return _NP_SEMIRINGS[name] if lib == "np" else SEMIRINGS[name]
+    except KeyError:
+        raise KeyError(f"unknown semiring {name!r}; have {sorted(SEMIRINGS)}")
+
+
+def np_value_pool(sr: Semiring, *, small: bool = True) -> np.ndarray:
+    """A small pool of semiring values for bounded-model verification."""
+    if sr.name == "bool":
+        return np.array([False, True])
+    if sr.name == "trop":
+        return np.array([0.0, 1.0, 2.0, INF], np.float32)
+    if sr.name == "maxplus":
+        return np.array([-INF, 0.0, 1.0, 2.0], np.float32)
+    # nat / real: keep tiny so products stay distinguishable
+    return np.array([0.0, 1.0, 2.0, 3.0], np.float32)

@@ -1,0 +1,172 @@
+"""Verification of the FGH identity G(F(X)) = H(G(X))  (paper Sec. 5).
+
+The paper verifies with z3 over normalized expressions; offline we use a
+*bounded-model / orbit* check (DESIGN.md §4):
+
+* sample small databases D (Γ-constrained when the task has a constraint);
+* walk the F-orbit X₀, X₁ = F(X₀), … (⊆ 8 steps) — every loop invariant Φ
+  of F holds on the orbit *by construction*, so checking the commutation on
+  orbit states is exactly the premise of Theorem 3.1's diagram (invariants
+  are a proof device; the diagram only ever visits orbit states);
+* at each state, compare G(F(Xₜ)) with H(G(Xₜ)) numerically.
+
+Refutation is sound (a mismatch is a real counterexample — returned to the
+synthesizer as CEGIS feedback).  Acceptance is exhaustive over tiny boolean
+domains plus randomized over larger ones; the final program additionally
+passes a full Π₁-vs-Π₂ answer comparison.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import constraints as gamma
+from repro.core import engine, ir
+from repro.core import semiring as sr_mod
+from repro.core.program import Program, Rule, Stratum, make_ico, zero_state
+
+
+@dataclasses.dataclass
+class FGHTask:
+    """One stratum Π₁ = (F, G) to optimize, plus its verification context."""
+
+    name: str
+    schema: ir.Schema
+    stratum: Stratum                 # F: the recursive IDBs X
+    outputs: list[Rule]              # G chain; last head is the answer Y
+    edbs: list[str]
+    constraint: str | None = None
+    small_domains: dict[str, int] = dataclasses.field(default_factory=dict)
+    sampler: Callable | None = None  # custom Γ/shape-aware DB sampler
+    sort_hints: dict[str, str] = dataclasses.field(default_factory=dict)
+
+    @property
+    def y_name(self) -> str:
+        return self.outputs[-1].head
+
+    def y_semiring(self) -> sr_mod.Semiring:
+        return sr_mod.get(self.schema[self.y_name].semiring)
+
+
+_DEFAULT_SORT_SIZES = {"id": 3, "w": 3, "d": 12, "pos": 5, "cnt": 6}
+
+
+def task_from_program(prog: Program, edbs: list[str],
+                      constraint: str | None = None,
+                      small_domains: dict[str, int] | None = None,
+                      sampler: Callable | None = None) -> FGHTask:
+    assert len(prog.strata) == 1, "FGH optimizes one stratum at a time"
+    sorts: set[str] = set()
+    for rs in prog.schema.values():
+        sorts.update(rs.sorts)
+    doms = {s: _DEFAULT_SORT_SIZES.get(s, 4) for s in sorts}
+    doms.update(small_domains or {})
+    return FGHTask(prog.name, prog.schema, prog.strata[0], prog.outputs,
+                   edbs, constraint, doms, sampler, prog.sort_hints)
+
+
+@dataclasses.dataclass
+class OrbitPoint:
+    """One CEGIS counterexample: Y_in = G(Xₜ) and target = G(F(Xₜ))."""
+
+    db: engine.Database
+    y_in: jnp.ndarray
+    target: np.ndarray
+
+
+def eval_g(task: FGHTask, db: engine.Database,
+           state: dict[str, jnp.ndarray]) -> jnp.ndarray:
+    cur = db.with_relations(state)
+    out = None
+    for rule in task.outputs:
+        out = engine.eval_ssp(rule.body, cur, task.sort_hints, backend="np")
+        cur = cur.with_relations({rule.head: out})
+    return out
+
+
+def orbit_points(task: FGHTask, db: engine.Database, *,
+                 max_steps: int = 8) -> list[OrbitPoint]:
+    """G-images and G∘F-targets along the F-orbit from X₀ = 0̄."""
+    ico = make_ico(task.stratum, db, task.sort_hints, backend="np")
+    x = zero_state(task.stratum, db, backend="np")
+    pts = []
+    for _ in range(max_steps):
+        nx = ico(x)
+        pts.append(OrbitPoint(db, eval_g(task, db, x),
+                              np.asarray(eval_g(task, db, nx))))
+        if all(bool(np.all(nx[k] == x[k])) for k in nx):
+            break
+        x = nx
+    return pts
+
+
+def eval_h(task: FGHTask, h_body: ir.SSP, pt: OrbitPoint) -> np.ndarray:
+    db = pt.db.with_relations({task.y_name: pt.y_in})
+    return np.asarray(engine.eval_ssp(h_body, db, task.sort_hints,
+                                      backend="np"))
+
+
+def values_equal(a: np.ndarray, b: np.ndarray, atol: float = 1e-4) -> bool:
+    if a.dtype == bool:
+        return bool((a == b).all())
+    return bool(np.allclose(a, b, atol=atol, rtol=1e-4, equal_nan=True))
+
+
+def sample_dbs(task: FGHTask, rng: np.random.Generator, count: int,
+               ) -> list[engine.Database]:
+    doms = {"id": 3, **task.small_domains}
+    dbs: list[engine.Database] = []
+    if task.sampler is not None:
+        for _ in range(count):
+            dbs.append(task.sampler(rng, doms))
+        return dbs
+    # a slice of the exhaustive n=2 space plus random n∈{3,4} instances.
+    # Γ-constrained tasks skip the exhaustive slice: its instances ignore
+    # the V-covers-all-nodes aspect of the tree/dag constraints.
+    if task.constraint is None:
+        doms2 = {**doms, "id": 2}
+        dbs.extend(gamma.exhaustive_databases(
+            task.schema, task.edbs, doms2, constraint=task.constraint,
+            limit=8))
+    for i in range(count):
+        d = dict(doms)
+        d["id"] = 3 + (i % 2)
+        dbs.append(gamma.sample_database(task.schema, task.edbs, d, rng,
+                                         constraint=task.constraint))
+    return dbs
+
+
+@dataclasses.dataclass
+class VerifyResult:
+    ok: bool
+    counterexample: OrbitPoint | None = None
+    points_checked: int = 0
+
+
+def verify_h(task: FGHTask, h_body: ir.SSP, *, rng: np.random.Generator,
+             n_dbs: int = 10, max_steps: int = 8) -> VerifyResult:
+    """Check G(F(X)) = H(G(X)) on sampled orbits; CEGIS's verifier."""
+    checked = 0
+    for db in sample_dbs(task, rng, n_dbs):
+        for pt in orbit_points(task, db, max_steps=max_steps):
+            checked += 1
+            got = eval_h(task, h_body, pt)
+            if not values_equal(got, pt.target):
+                return VerifyResult(False, pt, checked)
+    return VerifyResult(True, None, checked)
+
+
+def verify_programs_equal(p1: Program, p2: Program, dbs, *,
+                          atol: float = 1e-4) -> bool:
+    """End-to-end Π₁ ≡ Π₂ answer check on concrete databases."""
+    from repro.core.program import run_program
+    for db in dbs:
+        a, _ = run_program(p1, db)
+        b, _ = run_program(p2, db)
+        if not values_equal(np.asarray(a), np.asarray(b), atol):
+            return False
+    return True

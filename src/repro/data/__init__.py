@@ -1,0 +1,7 @@
+"""Data pipeline: sharded synthetic + file-backed token streams."""
+
+from repro.data.pipeline import (DataConfig, synthetic_stream, file_stream,
+                                 make_train_iterator, Batch)
+
+__all__ = ["DataConfig", "synthetic_stream", "file_stream",
+           "make_train_iterator", "Batch"]

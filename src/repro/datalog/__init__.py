@@ -1,0 +1,1 @@
+"""Datalog° applications: the paper's benchmark programs and datasets."""

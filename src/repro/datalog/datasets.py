@@ -1,0 +1,104 @@
+"""Dataset generators for the paper's benchmarks (Sec. 8.1).
+
+The SNAP datasets (twitter/epinions/wiki) are not redistributable offline;
+we generate power-law stand-ins with matched degree structure
+(Barabási–Albert / Erdős–Rényi via networkx), plus the paper's synthetic
+families: Erdős–Rényi graphs (BC), random recursive trees with O(log n)
+expected depth and exponential-decay trees with O(n) expected depth (R,
+MLM, Fig. 12), and plain vectors (WS).
+
+All graphs are returned as dense boolean adjacency tensors (S-relations
+over 𝔹) together with the sort domain sizes used by the engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Graph:
+    n: int
+    edges: np.ndarray  # (m, 2) int array
+    weights: np.ndarray | None = None  # (m,) ints ≥ 1
+
+    def adjacency(self, symmetric: bool = False) -> jnp.ndarray:
+        a = np.zeros((self.n, self.n), bool)
+        a[self.edges[:, 0], self.edges[:, 1]] = True
+        if symmetric:
+            a |= a.T
+        return jnp.asarray(a)
+
+    def weighted_adjacency(self, wmax: int) -> jnp.ndarray:
+        """E(x, y, w) as a dense boolean (n, n, wmax) tensor."""
+        w = self.weights if self.weights is not None else \
+            np.ones(len(self.edges), np.int64)
+        t = np.zeros((self.n, self.n, wmax), bool)
+        t[self.edges[:, 0], self.edges[:, 1], np.minimum(w, wmax - 1)] = True
+        return jnp.asarray(t)
+
+    def vertex_set(self) -> jnp.ndarray:
+        return jnp.ones((self.n,), bool)
+
+
+def erdos_renyi(n: int, avg_deg: float, seed: int = 0,
+                weighted: bool = False, wmax: int = 8) -> Graph:
+    rng = np.random.default_rng(seed)
+    p = min(1.0, avg_deg / max(1, n - 1))
+    mask = rng.random((n, n)) < p
+    np.fill_diagonal(mask, False)
+    edges = np.argwhere(mask)
+    weights = rng.integers(1, wmax, len(edges)) if weighted else None
+    return Graph(n, edges, weights)
+
+
+def powerlaw(n: int, m_attach: int = 4, seed: int = 0) -> Graph:
+    """Barabási–Albert stand-in for the SNAP social graphs."""
+    import networkx as nx
+    g = nx.barabasi_albert_graph(n, m_attach, seed=seed)
+    edges = np.array(g.edges(), np.int64)
+    edges = np.concatenate([edges, edges[:, ::-1]])  # directed both ways
+    return Graph(n, edges)
+
+
+def random_recursive_tree(n: int, seed: int = 0) -> Graph:
+    """Node i attaches uniformly to j<i: expected depth O(log n)."""
+    rng = np.random.default_rng(seed)
+    parents = np.array([rng.integers(0, i) for i in range(1, n)])
+    edges = np.stack([parents, np.arange(1, n)], axis=1)  # parent -> child
+    return Graph(n, edges)
+
+
+def decay_tree(n: int, tau: float = 1.5, seed: int = 0) -> Graph:
+    """Exponential-decay attachment (paper Sec. 8.1, multi-level-marketing
+    association decay): node i attaches to j<i with P ∝ exp(-(i-j)/τ);
+    small τ yields expected depth O(n)."""
+    rng = np.random.default_rng(seed)
+    parents = []
+    for i in range(1, n):
+        w = np.exp(-np.arange(i, 0, -1) / tau)
+        parents.append(rng.choice(i, p=w / w.sum()))
+    edges = np.stack([np.array(parents), np.arange(1, n)], axis=1)
+    return Graph(n, edges)
+
+
+def path_graph(n: int) -> Graph:
+    edges = np.stack([np.arange(n - 1), np.arange(1, n)], axis=1)
+    return Graph(n, edges)
+
+
+def vector_data(n: int, seed: int = 0, vmax: int = 8) -> np.ndarray:
+    """A(j, w) for WS: the paper inputs [1..n]; values don't affect runtime.
+    We use small random ints so the dense value domain stays bounded."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, vmax, n)
+
+
+def tree_depth(g: Graph) -> int:
+    depth = np.zeros(g.n, np.int64)
+    for p, c in g.edges:  # edges are emitted parent->child in index order
+        depth[c] = depth[p] + 1
+    return int(depth.max())

@@ -1,0 +1,101 @@
+"""Logical-axis sharding: the bridge between models and meshes.
+
+Models annotate parameters/activations with *logical* axis names
+("embed", "heads", "batch", …).  The launcher installs a rule set mapping
+logical → mesh axes for the current mesh + workload shape; `constrain`
+then applies `with_sharding_constraint` only when a mesh is active, so the
+same model code runs unsharded on CPU tests and fully sharded under pjit.
+
+Rule sets are divisibility-aware: a logical axis maps to the first mesh
+axis (or axis tuple) whose size divides the dimension; otherwise it stays
+unsharded.  This is what lets e.g. an 8-kv-head cache fall back from a
+16-way "model" axis to sequence sharding (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_rules() -> dict | None:
+    return getattr(_state, "rules", None)
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: dict):
+    """Install logical→mesh axis rules for the duration of a lowering."""
+    prev = (current_mesh(), current_rules())
+    _state.mesh, _state.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def spec_for(logical: tuple, shape: tuple | None = None,
+             mesh: Mesh | None = None, rules: dict | None = None) -> P:
+    """Map logical axes to a PartitionSpec, skipping non-divisible dims."""
+    mesh = mesh or current_mesh()
+    rules = rules or current_rules() or {}
+    parts = []
+    used: set = set()
+    for i, name in enumerate(logical):
+        options = rules.get(name, None)
+        if options is None:
+            parts.append(None)
+            continue
+        if not isinstance(options, list):
+            options = [options]
+        chosen = None
+        for axis in options:
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            if any(a in used for a in axes):
+                continue
+            if shape is not None and mesh is not None:
+                if shape[i] % _axis_size(mesh, axis) != 0:
+                    continue
+            chosen = axis
+            break
+        if chosen is not None:
+            used.update(chosen if isinstance(chosen, tuple) else (chosen,))
+        parts.append(chosen)
+    return P(*parts)
+
+
+def constrain(x, logical: tuple):
+    """with_sharding_constraint when a mesh is active; no-op otherwise."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = spec_for(logical, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_shardings(specs, shapes, mesh: Mesh, rules: dict):
+    """NamedShardings for a whole param tree given logical-spec tree."""
+    def one(spec, shape_struct):
+        return NamedSharding(mesh, spec_for(tuple(spec), shape_struct.shape,
+                                            mesh, rules))
+    return jax.tree.map(one, specs, shapes,
+                        is_leaf=lambda s: isinstance(s, tuple))

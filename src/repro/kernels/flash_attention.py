@@ -1,0 +1,121 @@
+"""Flash attention (forward) as a Pallas TPU kernel.
+
+Online-softmax tiling: grid (batch, q_heads, q_blocks, kv_blocks) with the
+KV axis innermost; running max/denominator/accumulator live in VMEM scratch
+that persists across the sequential KV grid steps (TPU grids execute in
+order — the same accumulate-in-VMEM pattern as the semiring matmul).
+
+Supports GQA (kv head = q head // group, folded into the BlockSpec index
+map), causal masking, sliding windows (StarCoder2) and chunked attention
+(Llama 4) via position masks, and ``q_offset`` for decode.
+
+Oracle: ``repro.kernels.ref.attention_ref``.  Training uses the XLA path
+(`repro.models.attention`) — this kernel is the serving/prefill fast path on
+TPU and is validated in interpret mode here (CPU container).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 256
+DEFAULT_BKV = 256
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int | None,
+                  chunk: int | None, q_offset: int, bq: int, bkv: int,
+                  kv_steps: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bkv, d)
+    v = v_ref[0, 0].astype(jnp.float32)          # (bkv, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bkv)
+
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0) + q_offset
+    kpos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = jnp.ones((bq, bkv), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    if chunk is not None:
+        mask &= (kpos // chunk) == (qpos // chunk)
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_scr[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.where(mask, jnp.exp(s - m_cur), 0.0)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_cur
+
+    @pl.when(ki == kv_steps - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[...] = (acc_scr[...] / denom)[None, None].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "chunk", "q_offset", "bq", "bkv",
+                     "interpret"))
+def flash_attention_pallas(q, k, v, *, causal=True, window=None, chunk=None,
+                           q_offset=0, bq=DEFAULT_BQ, bkv=DEFAULT_BKV,
+                           interpret=False):
+    """q: (B, Tq, Hq, D); k/v: (B, Tk, Hkv, D) -> (B, Tq, Hq, D)."""
+    b, tq, hq, d = q.shape
+    _, tk, hkv, _ = k.shape
+    group = hq // hkv
+    bq = min(bq, tq)
+    bkv = min(bkv, tk)
+    assert tq % bq == 0 and tk % bkv == 0, (tq, bq, tk, bkv)
+    scale = 1.0 / np.sqrt(d)
+
+    qt = q.transpose(0, 2, 1, 3)  # (B, Hq, Tq, D)
+    kt = k.transpose(0, 2, 1, 3)  # (B, Hkv, Tk, D)
+    vt = v.transpose(0, 2, 1, 3)
+    grid = (b, hq, tq // bq, tk // bkv)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          window=window, chunk=chunk, q_offset=q_offset,
+                          bq=bq, bkv=bkv, kv_steps=grid[3]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bb, h, qi, ki: (bb, h, qi, 0)),
+            pl.BlockSpec((1, 1, bkv, d),
+                         lambda bb, h, qi, ki, g=group: (bb, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bkv, d),
+                         lambda bb, h, qi, ki, g=group: (bb, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bb, h, qi, ki: (bb, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, tq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

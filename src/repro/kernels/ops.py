@@ -1,0 +1,76 @@
+"""Public jit'd wrappers over the Pallas kernels with platform dispatch.
+
+On TPU the Pallas kernels run compiled; elsewhere (this CPU container) the
+``ref.py`` oracles execute.  ``force_pallas_interpret()`` lets tests route
+through the kernels in interpret mode regardless of platform.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.semiring_matmul import semiring_matmul_pallas
+from repro.kernels.ssm_scan import ssm_scan_pallas
+
+_FORCE_INTERPRET = False
+
+
+def force_pallas_interpret(on: bool = True) -> None:
+    """Route ops through the Pallas kernels in interpret mode (tests)."""
+    global _FORCE_INTERPRET
+    _FORCE_INTERPRET = on
+
+
+def _use_pallas() -> bool:
+    return _FORCE_INTERPRET or jax.default_backend() == "tpu"
+
+
+def semiring_matmul(sr, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C = A ⊕.⊗ B over semiring ``sr`` (2-D a, b)."""
+    if _use_pallas():
+        return semiring_matmul_pallas(a, b, sr_name=sr.name,
+                                      interpret=_FORCE_INTERPRET)
+    return ref.semiring_matmul_ref(sr, a, b)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, chunk=None,
+                    q_offset=0):
+    """GQA flash attention (forward); see ref.attention_ref for semantics."""
+    if _use_pallas():
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      chunk=chunk, q_offset=q_offset,
+                                      interpret=_FORCE_INTERPRET)
+    return ref.attention_ref(q, k, v, causal=causal, window=window,
+                             chunk=chunk, q_offset=q_offset)
+
+
+#: XLA-path scan lowering: "assoc" (full-length associative scan) or
+#: "chunked" (blocked GH-form; §Perf hillclimb)
+SCAN_IMPL = "assoc"
+
+
+def set_scan_impl(impl: str):
+    global SCAN_IMPL
+    assert impl in ("assoc", "chunked")
+    SCAN_IMPL = impl
+
+
+def ssm_scan(a, b):
+    """Diagonal linear recurrence h_t = a_t ⊙ h_{t-1} + b_t over axis 1."""
+    if _use_pallas():
+        t = a.shape[1]
+        bt = 256 if t % 256 == 0 else _largest_pow2_divisor(t)
+        return ssm_scan_pallas(a, b, bt=bt, interpret=_FORCE_INTERPRET)
+    if SCAN_IMPL == "chunked":
+        return ref.ssm_scan_chunked(a, b)
+    return ref.ssm_scan_ref(a, b)
+
+
+def _largest_pow2_divisor(t: int, cap: int = 256) -> int:
+    d = 1
+    while t % (d * 2) == 0 and d * 2 <= cap:
+        d *= 2
+    return d

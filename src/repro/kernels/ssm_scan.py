@@ -1,0 +1,69 @@
+"""Blocked linear-recurrence (SSM) scan as a Pallas TPU kernel.
+
+The diagonal recurrence ``h_t = a_t ⊙ h_{t-1} + b_t`` is an FG-program
+(DESIGN.md §Arch-applicability): F is the per-token state update, G the
+readout.  The FGH-rewritten GH-form used here is the *blocked associative
+scan*: within a time block the (a, b) pairs are combined with the
+associative monoid ``(a₁,b₁)∘(a₂,b₂) = (a₁a₂, a₂b₁+b₂)`` (O(log T) depth),
+and the cross-block carry rides in VMEM scratch across the sequential grid
+steps along the time axis — turning an O(T)-depth loop into O(T/bt) grid
+steps of O(log bt) depth.
+
+Used by the xLSTM (mLSTM state decay) and Mamba2/Zamba2 blocks
+(`repro.models.ssm`).  Oracle: ``repro.kernels.ref.ssm_scan_ref`` (and the
+literal sequential loop, ``ssm_scan_sequential``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BT = 256
+
+
+def _scan_kernel(a_ref, b_ref, h_ref, carry_scr, *, bt: int):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        carry_scr[...] = jnp.zeros_like(carry_scr)
+
+    a = a_ref[0]  # (bt, d)
+    b = b_ref[0]
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    av, bv = jax.lax.associative_scan(combine, (a, b), axis=0)
+    h = bv + av * carry_scr[...]  # inject cross-block carry
+    h_ref[...] = h[None].astype(h_ref.dtype)
+    carry_scr[...] = h[-1:]
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def ssm_scan_pallas(a: jnp.ndarray, b: jnp.ndarray, *, bt: int = DEFAULT_BT,
+                    interpret: bool = False) -> jnp.ndarray:
+    """a, b: (B, T, D) -> h: (B, T, D) with h_t = a_t*h_{t-1} + b_t."""
+    bsz, t, d = a.shape
+    bt = min(bt, t)
+    assert t % bt == 0, (t, bt)
+    grid = (bsz, t // bt)
+    return pl.pallas_call(
+        functools.partial(_scan_kernel, bt=bt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, d), lambda i, ti: (i, ti, 0)),
+            pl.BlockSpec((1, bt, d), lambda i, ti: (i, ti, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, d), lambda i, ti: (i, ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, t, d), a.dtype),
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,277 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod AOT dry-run (assignment deliverable (e)).
+
+For every (architecture × workload shape × mesh) cell:
+  lower jit(step) with production shardings → compile → record
+  memory_analysis / cost_analysis / per-collective byte volumes.
+
+The XLA_FLAGS line above must precede EVERY import (jax pins the device
+count at first init) — hence this module's unusual layout.  Do not set the
+flag globally: smoke tests and benchmarks should see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch minicpm-2b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results.json
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import configs                              # noqa: E402
+from repro.distributed import sharding as sh           # noqa: E402
+from repro.launch import hlo_cost                      # noqa: E402
+from repro.launch import rules as rules_mod            # noqa: E402
+from repro.launch import steps as steps_mod            # noqa: E402
+from repro.launch import workloads as wl_mod           # noqa: E402
+from repro.launch.mesh import make_production_mesh     # noqa: E402
+from repro.models import transformer as T              # noqa: E402
+from repro.optimizer import OptConfig                  # noqa: E402
+
+def abstract_params(cfg, dtype=jnp.bfloat16):
+    shapes, specs = T.shape_init(cfg, dtype)
+    return shapes, specs
+
+
+def build_cell(arch: str, shape: str, multi_pod: bool, *,
+               opt_kind: str = "adamw", remat: str = "full",
+               accum_steps: int = 1, attn_impl: str = "chunked",
+               scan_impl: str = "assoc", embed_spec: str = "vocab",
+               replicate_small: int = 0, moe_buf: str = "expert",
+               donate: bool = False):
+    """Returns (fn, abstract_args, in_shardings, mesh, rules)."""
+    from repro.kernels import ops as kops
+    from repro.models import attention as attn_mod
+    from repro.models import moe as moe_mod
+    attn_mod.set_attention_impl(attn_impl)
+    kops.set_scan_impl(scan_impl)
+    moe_mod.set_buf_shard(moe_buf)
+
+    cfg = configs.get(arch)
+    wl = wl_mod.WORKLOADS[shape]
+    reason = wl_mod.skip_reason(cfg, wl)
+    if reason:
+        return None, reason
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_mod.make_rules(mesh, wl.kind)
+    if embed_spec == "embedcol":
+        rules["vocab"] = ["data"]     # shard tables on d, gather stays local
+    elif embed_spec == "replicated":
+        rules["vocab"] = None
+    p_shapes, p_specs = abstract_params(cfg)
+    if replicate_small:
+        # replicate parameters below the threshold: avoids per-step
+        # all-gathers whose latency outweighs the memory saved
+        p_specs = jax.tree.map(
+            lambda spec, shp: ((None,) * len(spec)
+                               if _nbytes(shp) < replicate_small else spec),
+            p_specs, p_shapes,
+            is_leaf=lambda s: isinstance(s, tuple) and
+            all(isinstance(x, (str, type(None))) for x in s))
+
+    if wl.kind == "train":
+        step, opt_init = steps_mod.make_train_step(
+            cfg, OptConfig(kind=opt_kind), remat=remat,
+            accum_steps=accum_steps)
+        opt_shapes = jax.eval_shape(opt_init, p_shapes)
+        opt_specs = _opt_specs(opt_shapes, p_specs)
+        batch = wl_mod.batch_specs(cfg, wl)
+        batch_specs_tree = {k: rules_mod.batch_logical(k) for k in batch}
+        args = (p_shapes, opt_shapes, batch)
+        logical = (p_specs, opt_specs, batch_specs_tree)
+    elif wl.kind == "prefill":
+        step = steps_mod.make_prefill_step(cfg)
+        batch = wl_mod.prefill_specs(cfg, wl)
+        blog = {k: (rules_mod.cache_spec_tree(batch[k]) if k == "cache"
+                    else rules_mod.batch_logical(k)) for k in batch}
+        args = (p_shapes, batch)
+        logical = (p_specs, blog)
+    else:  # decode
+        step = steps_mod.make_serve_step(cfg)
+        batch = wl_mod.decode_specs(cfg, wl)
+        blog = {k: (rules_mod.cache_spec_tree(batch[k]) if k == "cache"
+                    else rules_mod.batch_logical(k)) for k in batch}
+        args = (p_shapes, batch)
+        logical = (p_specs, blog)
+
+    in_shardings = jax.tree.map(
+        lambda spec, shape_struct: sh.spec_for(tuple(spec),
+                                               shape_struct.shape, mesh,
+                                               rules),
+        logical, args, is_leaf=lambda s: isinstance(s, tuple) and
+        all(isinstance(x, (str, type(None))) for x in s))
+    from jax.sharding import NamedSharding
+    in_shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s)
+        if isinstance(s, jax.sharding.PartitionSpec) else s, in_shardings,
+        is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec))
+    return (step, args, in_shardings, mesh, rules, cfg, wl,
+            (1,) if (donate and wl.kind != "train") else ()), None
+
+
+def _nbytes(shp) -> int:
+    n = 1
+    for d in shp.shape:
+        n *= d
+    return n * shp.dtype.itemsize
+
+
+def _opt_specs(opt_shapes, p_specs):
+    """Optimizer state inherits the parameter sharding (ZeRO-style)."""
+    def spec_like(sub):
+        return jax.tree.map(lambda leaf: None, sub)
+
+    out = {}
+    for k, v in opt_shapes.items():
+        if k in ("m", "v"):
+            out[k] = p_specs
+        elif k == "f":  # adafactor: factored dims — replicate (small)
+            out[k] = jax.tree.map(lambda leaf: (None,) * leaf.ndim, v)
+        else:
+            out[k] = (None,) * getattr(v, "ndim", 0) if hasattr(v, "ndim") \
+                else v
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, **kw) -> dict:
+    t0 = time.time()
+    row = {"arch": arch, "shape": shape, "mesh": mesh_kind, **kw}
+    built, reason = build_cell(arch, shape, mesh_kind == "multi", **kw)
+    if built is None:
+        row.update(status="skipped", reason=reason)
+        return row
+    step, args, in_sh, mesh, rules, cfg, wl, donate_nums = built
+    try:
+        with sh.use_rules(mesh, rules):
+            jitted = jax.jit(step, in_shardings=in_sh,
+                             donate_argnums=donate_nums)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo_text = compiled.as_text()
+        walked = hlo_cost.analyze(hlo_text)
+        row.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            flops=walked.flops,                      # trip-count-aware
+            bytes_accessed=walked.bytes,
+            xla_flops=cost.get("flops", -1.0),       # body-counted-once ref
+            collectives={
+                "bytes": walked.per_collective,
+                "counts": walked.collective_counts,
+                "total_bytes": walked.collective_bytes,
+            },
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", -1),
+                "output_bytes": getattr(mem, "output_size_in_bytes", -1),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", -1),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", -1),
+            },
+            params_b=cfg.param_count(),
+            active_params_b=cfg.active_param_count(),
+            tokens=wl.global_batch * wl.seq_len,
+        )
+    except Exception as e:  # noqa: BLE001 — report the failure in the row
+        row.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    row["wall_s"] = round(time.time() - t0, 1)
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--meshes", default="single,multi")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--opt", default="adamw")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--attn", default="chunked",
+                    choices=["chunked", "online", "bf16"])
+    ap.add_argument("--moe-buf", default="expert",
+                    choices=["expert", "expert_data"])
+    ap.add_argument("--scan", default="assoc", choices=["assoc", "chunked"])
+    ap.add_argument("--embed-spec", default="vocab",
+                    choices=["vocab", "embedcol", "replicated"])
+    ap.add_argument("--replicate-small", type=int, default=0)
+    ap.add_argument("--donate", action="store_true",
+                    help="donate the cache buffer (decode/prefill): the "
+                         "KV update aliases in place instead of "
+                         "double-buffering")
+    args = ap.parse_args()
+
+    if args.all:
+        # one subprocess per cell: isolates compile-cache/host-memory
+        # growth across 80 large AOT compiles
+        import subprocess
+        import sys
+        results = []
+        if args.out and os.path.exists(args.out):
+            with open(args.out) as f:
+                results = json.load(f)
+        done = {(r["arch"], r["shape"], r["mesh"]) for r in results}
+        for arch in configs.list_archs():
+            for shape in wl_mod.WORKLOADS:
+                for mesh in args.meshes.split(","):
+                    if (arch, shape, mesh) in done:
+                        continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape, "--mesh", mesh,
+                           "--opt", args.opt, "--remat", args.remat,
+                           "--accum", str(args.accum)]
+                    try:
+                        proc = subprocess.run(
+                            cmd, capture_output=True, text=True,
+                            timeout=2400,
+                            env={**os.environ, "PYTHONPATH": "src"})
+                        row = None
+                        for line in proc.stdout.splitlines():
+                            if line.startswith("{"):
+                                row = json.loads(line)
+                        if row is None:
+                            row = {"arch": arch, "shape": shape,
+                                   "mesh": mesh, "status": "crashed",
+                                   "error": (proc.stderr or "")[-1500:]}
+                    except subprocess.TimeoutExpired:
+                        row = {"arch": arch, "shape": shape, "mesh": mesh,
+                               "status": "timeout"}
+                    results.append(row)
+                    print(json.dumps(row), flush=True)
+                    if args.out:
+                        with open(args.out, "w") as f:
+                            json.dump(results, f, indent=1)
+        return
+
+    row = run_cell(args.arch, args.shape, args.mesh, opt_kind=args.opt,
+                   remat=args.remat, accum_steps=args.accum,
+                   attn_impl=args.attn, scan_impl=args.scan,
+                   embed_spec=args.embed_spec,
+                   replicate_small=args.replicate_small,
+                   moe_buf=args.moe_buf, donate=args.donate)
+    print(json.dumps({k: v for k, v in row.items() if k != "trace"}),
+          flush=True)
+    if row.get("status") == "error":
+        print(row.get("trace", ""), flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump([row], f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""§Perf hillclimb runner: per-cell variant sweeps with before/after rows.
+
+Each variant is one hypothesis from EXPERIMENTS.md §Perf; the runner
+executes the dry-run cell via subprocess (fresh XLA state per compile) and
+collects the roofline terms for comparison.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --cell llama3 --out results/
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+#: the three chosen cells (EXPERIMENTS.md §Perf) and their variant ladders
+CELLS = {
+    # worst roofline fraction / memory-dominated flagship
+    "llama3": {
+        "arch": "llama3-405b", "shape": "train_4k", "mesh": "single",
+        "variants": [
+            ("baseline", []),
+            ("online-attn", ["--attn", "online"]),
+            ("online+accum8", ["--attn", "online", "--accum", "8"]),
+            ("online+accum8+adafactor",
+             ["--attn", "online", "--accum", "8", "--opt", "adafactor"]),
+        ],
+    },
+    # most collective-bound
+    "deepseek": {
+        "arch": "deepseek-moe-16b", "shape": "train_4k", "mesh": "single",
+        "variants": [
+            ("baseline", []),
+            ("online-attn", ["--attn", "online"]),
+            ("embedcol", ["--attn", "online", "--embed-spec", "embedcol"]),
+            ("replicate-small-8M",
+             ["--attn", "online", "--embed-spec", "embedcol",
+              "--replicate-small", str(8 << 20)]),
+        ],
+    },
+    # most representative of the paper's technique (FGH-rewritten scan)
+    "zamba2": {
+        "arch": "zamba2-2.7b", "shape": "train_4k", "mesh": "single",
+        "variants": [
+            ("baseline", []),
+            ("chunked-scan", ["--scan", "chunked"]),
+            ("chunked+online",
+             ["--scan", "chunked", "--attn", "online"]),
+            ("chunked+online+accum4",
+             ["--scan", "chunked", "--attn", "online", "--accum", "4"]),
+        ],
+    },
+}
+
+
+def run_cell(arch, shape, mesh, extra):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh] + list(extra)
+    proc = subprocess.run(cmd, capture_output=True, text=True, timeout=2400,
+                          env={**os.environ, "PYTHONPATH": "src"})
+    rows = [json.loads(l) for l in proc.stdout.splitlines()
+            if l.startswith("{")]
+    return rows[-1] if rows else {"status": "crashed",
+                                  "error": proc.stderr[-1000:]}
+
+
+def terms(row):
+    if row.get("status") != "ok":
+        return {"status": row.get("status"), "error": row.get("error")}
+    return {
+        "compute_s": row["flops"] / 197e12,
+        "memory_s": row["bytes_accessed"] / 819e9,
+        "collective_s": row["collectives"]["total_bytes"] / 50e9,
+        "temp_gib": row["memory"]["temp_bytes"] / 2 ** 30,
+        "arg_gib": row["memory"]["argument_bytes"] / 2 ** 30,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=list(CELLS))
+    ap.add_argument("--out", default="results")
+    args = ap.parse_args()
+    spec = CELLS[args.cell]
+    results = []
+    for name, extra in spec["variants"]:
+        row = run_cell(spec["arch"], spec["shape"], spec["mesh"], extra)
+        entry = {"variant": name, "flags": extra, **terms(row), "raw": row}
+        results.append(entry)
+        printable = {k: (round(v, 3) if isinstance(v, float) else v)
+                     for k, v in entry.items() if k != "raw"}
+        print(json.dumps(printable), flush=True)
+        with open(os.path.join(args.out,
+                               f"hillclimb_{args.cell}.json"), "w") as f:
+            json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

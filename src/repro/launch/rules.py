@@ -1,0 +1,79 @@
+"""Logical→mesh axis rule sets per workload kind (DESIGN.md §6).
+
+Each logical axis maps to an ordered list of candidate mesh axes; the
+divisibility-aware resolver (distributed.sharding.spec_for) picks the
+first that fits, so e.g. an 8-kv-head cache on a 16-way "model" axis
+falls back to sequence sharding automatically.
+"""
+
+from __future__ import annotations
+
+from jax.sharding import Mesh
+
+
+def make_rules(mesh: Mesh, kind: str) -> dict:
+    multi = "pod" in mesh.axis_names
+    data = ("pod", "data") if multi else "data"
+
+    rules = {
+        # --- parameters ---------------------------------------------------
+        "vocab": ["model"],
+        "embed": ["data"],            # FSDP dim (ZeRO-3 style)
+        "heads": ["model"],
+        "kv": ["model"],
+        "mlp": ["model"],
+        "expert": ["model"],
+        "layers": None,
+        "norm": None,
+        # --- activations ----------------------------------------------------
+        "batch": [data, "data", None],
+        "seq": [None],
+        "embed_act": [None],
+        "heads_act": ["model"],
+        "mlp_act": ["model"],
+        "vocab_act": ["model"],
+        # --- kv cache ---------------------------------------------------
+        "cache_batch": [data, "data"],
+        "cache_kv": ["model"],
+        "cache_seq": [("data", "model"), "model", "data"],
+    }
+    if kind == "decode":
+        # decode: prefer sharding cache heads; long-context falls through
+        # to sequence sharding via divisibility
+        pass
+    return rules
+
+
+CACHE_LOGICAL = {
+    "k": ("layers", "cache_batch", "cache_seq", "cache_kv", None),
+    "v": ("layers", "cache_batch", "cache_seq", "cache_kv", None),
+    "pos": (None,),
+}
+
+
+def cache_spec_tree(cache_tree):
+    """Logical axes for a cache pytree (matches models.init_cache)."""
+    def spec_of(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        if "k" in names or "v" in names:
+            return CACHE_LOGICAL["k"][:leaf.ndim] if leaf.ndim >= 4 else \
+                (None,) * leaf.ndim
+        if "state" in names:
+            return ("layers", "cache_batch", "mlp")
+        if "cross" in names:
+            if leaf.ndim >= 4:
+                return ("layers", "cache_batch", "cache_seq", "cache_kv",
+                        None)[:leaf.ndim]
+            return (None,) * leaf.ndim
+        return (None,) * leaf.ndim
+
+    import jax
+    return jax.tree_util.tree_map_with_path(spec_of, cache_tree)
+
+
+def batch_logical(name: str) -> tuple:
+    if name in ("tokens", "labels"):
+        return ("batch", "seq")
+    if name in ("embeds", "enc_embeds"):
+        return ("batch", "seq", "embed_act")
+    raise KeyError(name)

@@ -1,0 +1,71 @@
+"""train_step / prefill_step / serve_step builders + their shardings.
+
+These are the functions the dry-run lowers and the real launchers run.
+Gradient accumulation (microbatching) runs as a lax.scan with f32 grad
+accumulators so the reduce stays inside the step (collective overlap).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.optimizer import OptConfig, make_optimizer
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig, *,
+                    remat: str = "full", accum_steps: int = 1):
+    opt_init, opt_update = make_optimizer(opt_cfg)
+
+    def loss(params, batch):
+        return T.loss_fn(params, cfg, batch, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (l, (ce, aux)), grads = jax.value_and_grad(
+                loss, has_aux=True)(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, _ = carry
+                (l, (ce, aux)), g = jax.value_and_grad(
+                    loss, has_aux=True)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), acc, g)
+                return (acc, l), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, l), _ = jax.lax.scan(micro, (zeros, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+        new_params, new_opt, gnorm = opt_update(params, grads, opt_state)
+        metrics = {"loss": l, "grad_norm": gnorm}
+        return new_params, new_opt, metrics
+
+    return train_step, opt_init
+
+
+def make_prefill_step(cfg: ModelConfig, remat: str = "none"):
+    def prefill(params, batch):
+        logits, _, cache = T.forward(
+            params, cfg, batch.get("tokens"), embeds=batch.get("embeds"),
+            enc_embeds=batch.get("enc_embeds"), cache=batch["cache"],
+            remat=remat)
+        return logits[:, -1:], cache
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve(params, batch):
+        logits, cache = T.decode_step(params, cfg, batch["tokens"],
+                                      batch["cache"])
+        # greedy next token (sampling lives in the serving loop)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+    return serve

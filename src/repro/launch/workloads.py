@@ -1,0 +1,121 @@
+"""Workload shapes × architectures: abstract inputs for the AOT dry-run.
+
+Shapes (assignment): train_4k (train), prefill_32k (inference prefill),
+decode_32k / long_500k (one new token against a seq_len KV cache; these
+lower ``serve_step``, not ``train_step``).
+
+``input_specs`` returns weak-type-correct ShapeDtypeStruct stand-ins for
+every model input — shardable, no device allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+S = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+WORKLOADS = {
+    "train_4k": Workload("train_4k", 4096, 256, "train"),
+    "prefill_32k": Workload("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Workload("decode_32k", 32768, 128, "decode"),
+    "long_500k": Workload("long_500k", 524288, 1, "decode"),
+}
+
+def skip_reason(cfg: ModelConfig, wl: Workload) -> str | None:
+    if wl.name == "long_500k" and not cfg.subquadratic():
+        return ("pure full attention (no window/chunk/recurrence in the "
+                "published config) — long_500k needs sub-quadratic "
+                "attention; DESIGN.md §Shape skip rules")
+    return None
+
+
+def _vlm_split(cfg: ModelConfig, seq: int) -> tuple[int, int]:
+    n_patch = min(1024, seq // 4)
+    return n_patch, seq - n_patch
+
+
+def _dec_len(cfg: ModelConfig, seq: int) -> int:
+    # enc-dec training: encoder consumes seq frames, decoder seq//8 tokens
+    return max(seq // 8, 64)
+
+
+def batch_specs(cfg: ModelConfig, wl: Workload) -> dict:
+    """Abstract train batch (train kind)."""
+    b, s = wl.global_batch, wl.seq_len
+    tok = jnp.int32
+    if cfg.family == "vlm":
+        n_patch, n_text = _vlm_split(cfg, s)
+        return {"tokens": S((b, n_text), tok),
+                "labels": S((b, n_text), tok),
+                "embeds": S((b, n_patch, cfg.d_model), jnp.bfloat16)}
+    if cfg.family == "encdec":
+        dl = _dec_len(cfg, s)
+        return {"tokens": S((b, dl), tok), "labels": S((b, dl), tok),
+                "enc_embeds": S((b, s, cfg.d_model), jnp.bfloat16)}
+    return {"tokens": S((b, s), tok), "labels": S((b, s), tok)}
+
+
+def prefill_specs(cfg: ModelConfig, wl: Workload) -> dict:
+    b, s = wl.global_batch, wl.seq_len
+    if cfg.family == "vlm":
+        n_patch, n_text = _vlm_split(cfg, s)
+        return {"tokens": S((b, n_text), jnp.int32),
+                "embeds": S((b, n_patch, cfg.d_model), jnp.bfloat16),
+                "cache": cache_specs(cfg, b, s)}
+    if cfg.family == "encdec":
+        dl = _dec_len(cfg, s)
+        return {"tokens": S((b, dl), jnp.int32),
+                "enc_embeds": S((b, s, cfg.d_model), jnp.bfloat16),
+                "cache": cache_specs(cfg, b, s)}
+    return {"tokens": S((b, s), jnp.int32), "cache": cache_specs(cfg, b, s)}
+
+
+def decode_specs(cfg: ModelConfig, wl: Workload) -> dict:
+    b, s = wl.global_batch, wl.seq_len
+    spec = {"tokens": S((b, 1), jnp.int32),
+            "cache": cache_specs(cfg, b, s, with_cross=True)}
+    return spec
+
+
+def cache_specs(cfg: ModelConfig, batch: int, t_max: int,
+                with_cross: bool = False):
+    """ShapeDtypeStruct tree matching models.init_cache."""
+    def conv(x):
+        return S(x.shape, x.dtype)
+    enc_len = t_max if cfg.family == "encdec" else None
+    tree = jax.eval_shape(
+        lambda: T.init_cache(cfg, batch, t_max, jnp.bfloat16,
+                             enc_len=enc_len))
+    if cfg.family == "encdec":
+        if with_cross:
+            n = cfg.n_layers
+            te = t_max
+            tree = dict(tree)
+            tree["cross"] = (
+                S((n, batch, te, cfg.n_kv_heads, cfg.hd), jnp.bfloat16),
+                S((n, batch, te, cfg.n_kv_heads, cfg.hd), jnp.bfloat16),
+                S((te,), jnp.int32))
+    return tree
+
+
+def windowed_len(cfg: ModelConfig, s: int) -> int:
+    """Decode cache length actually needed: sliding-window archs keep a
+    rolling window (StarCoder2: 4096) instead of the full context."""
+    if cfg.window is not None and cfg.family in ("dense",):
+        return min(s, cfg.window)
+    return s

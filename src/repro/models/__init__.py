@@ -1,0 +1,7 @@
+"""Composable LM stack: dense/MoE/SSM/hybrid/enc-dec/VLM in pure JAX."""
+
+from repro.models.transformer import (init_params, forward, loss_fn,
+                                      init_cache, decode_step, param_specs)
+
+__all__ = ["init_params", "forward", "loss_fn", "init_cache", "decode_step",
+           "param_specs"]

@@ -1,0 +1,204 @@
+"""GQA attention: XLA path (differentiable, q-chunked) + KV-cache decode.
+
+The XLA path chunks queries (lax.map) so the (B,H,q,k) logit block stays
+bounded — the staged-out analogue of the Pallas flash kernel's VMEM tiling
+(the kernel itself is the TPU serving fast path; see kernels/).
+
+Masks support causal, sliding-window (StarCoder2) and chunked+periodic-
+global attention (Llama 4 iRoPE) via position arithmetic, so one
+implementation serves every assigned dense/MoE/VLM/enc-dec architecture.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import _init, rope
+
+Q_CHUNK = 512
+KV_CHUNK = 1024
+
+#: "chunked"  — q-chunked lax.map; materializes (q_chunk × T) f32 logits
+#: "bf16"     — as "chunked" with bf16 logit/prob tiles (f32 softmax math
+#:              stays fused): halves the O(T²) HBM traffic
+#: "online"   — flash-style online softmax over KV chunks inside a lax.scan
+#:              (the XLA analogue of the Pallas kernel's tiling; NOTE: the
+#:              scan carry routes the accumulator through HBM each step —
+#:              see EXPERIMENTS.md §Perf for when this wins/loses)
+ATTN_IMPL = "chunked"
+
+
+def set_attention_impl(impl: str):
+    global ATTN_IMPL
+    assert impl in ("chunked", "online", "bf16")
+    ATTN_IMPL = impl
+
+
+def attn_init(key, cfg, dtype):
+    d, hq, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d)
+    p = {"wq": _init(ks[0], (d, hq * hd), s, dtype),
+         "wk": _init(ks[1], (d, hk * hd), s, dtype),
+         "wv": _init(ks[2], (d, hk * hd), s, dtype),
+         "wo": _init(ks[3], (hq * hd, d), 1.0 / np.sqrt(hq * hd), dtype)}
+    specs = {"wq": ("embed", "heads"), "wk": ("embed", "kv"),
+             "wv": ("embed", "kv"), "wo": ("heads", "embed")}
+    return p, specs
+
+
+def _mask(qpos, kpos, *, causal, window, chunk, is_global):
+    qp = qpos[..., :, None]
+    kp = kpos[..., None, :]
+    m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        m &= kp <= qp
+    if window is not None:
+        m &= kp > qp - window
+    if chunk is not None:
+        local = (kp // chunk) == (qp // chunk)
+        m &= jnp.where(is_global, True, local)
+    return m
+
+
+def _sdpa(q, k, v, qpos, kpos, *, causal, window, chunk, is_global,
+          tile_dtype=jnp.float32):
+    """q: (B,Tq,Hq,hd); k/v: (B,Tk,Hkv,hd).  f32 softmax math; logit/prob
+    tiles stored in ``tile_dtype`` (bf16 halves the T² HBM traffic)."""
+    b, tq, hq, hd = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, tq, hkv, group, hd)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=tile_dtype)
+    logits = logits.astype(jnp.float32) / np.sqrt(hd)
+    m = _mask(qpos, kpos, causal=causal, window=window, chunk=chunk,
+              is_global=is_global)  # (B?,Tq,Tk) broadcastable
+    while m.ndim < logits.ndim:
+        m = m[:, None] if m.ndim >= 3 else m[None]
+    logits = jnp.where(m, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(
+        v.dtype if tile_dtype != jnp.float32 else jnp.float32)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(b, tq, hq, hd)
+
+
+def _sdpa_online(q, k, v, qpos, kpos, *, causal, window, chunk, is_global):
+    """Online-softmax over KV chunks (flash-style, pure XLA, differentiable).
+
+    Carries (m, l, acc) through a lax.scan over KV chunks so only a
+    (Tq × KV_CHUNK) logit tile exists at a time — HBM traffic drops from
+    O(Tq·Tk) to O(Tk·d) per q-block (§Perf)."""
+    b, tq, hq, hd = q.shape
+    tk = k.shape[1]
+    hkv = k.shape[2]
+    group = hq // hkv
+    kc = min(KV_CHUNK, tk)
+    if tk % kc != 0:
+        return _sdpa(q, k, v, qpos, kpos, causal=causal, window=window,
+                     chunk=chunk, is_global=is_global)
+    n_chunks = tk // kc
+    qg = q.reshape(b, tq, hkv, group, hd)
+    ks = k.reshape(b, n_chunks, kc, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, n_chunks, kc, hkv, hd).transpose(1, 0, 2, 3, 4)
+    kps = kpos.reshape(n_chunks, kc)
+
+    def step(carry, xs):
+        m_run, l_run, acc = carry
+        k_c, v_c, kp_c = xs
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_c,
+                       preferred_element_type=jnp.float32) / np.sqrt(hd)
+        msk = _mask(qpos, kp_c, causal=causal, window=window, chunk=chunk,
+                    is_global=is_global)
+        while msk.ndim < s.ndim:
+            msk = msk[:, None] if msk.ndim >= 3 else msk[None]
+        s = jnp.where(msk, s, -1e30)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_run - m_new)
+        l_new = alpha * l_run + p.sum(-1)
+        upd = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v_c.dtype), v_c)
+        acc = acc * alpha[..., None].astype(acc.dtype) + upd
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hkv, group, tq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, tq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, group, tq, hd), v.dtype)
+    (m_f, l_f, acc), _ = jax.lax.scan(step, (m0, l0, a0), (ks, vs, kps))
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None].astype(acc.dtype)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, tq, hq, hd)
+
+
+def attn_apply(p, x, cfg, *, positions, cache=None, layer_global=False,
+               kv_override=None, causal=True):
+    """Full-sequence attention (training/prefill) or cached decode.
+
+    cache: dict(k,v: (B,Tmax,Hkv,hd), pos scalar) — updated functionally.
+    kv_override: (k, v, kpos) for cross-attention.
+    """
+    b, t, d = x.shape
+    hq, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(b, t, hq, hd)
+    q = constrain(q, ("batch", "seq", "heads_act", None))
+    if kv_override is None:
+        k = (x @ p["wk"]).reshape(b, t, hk, hd)
+        v = (x @ p["wv"]).reshape(b, t, hk, hd)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    else:
+        k, v, kpos = kv_override
+
+    new_cache = None
+    if cache is not None and kv_override is None:
+        pos = cache["pos"]
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, pos, 0, 0))
+        new_cache = {"k": ck, "v": cv, "pos": pos + t}
+        k, v = ck, cv
+        kpos = jnp.arange(cache["k"].shape[1])
+        kvalid = kpos < (pos + t)
+    elif kv_override is None:
+        kpos = positions
+        kvalid = None
+    else:
+        kvalid = None
+
+    window = cfg.window
+    chunk = cfg.chunk if cfg.chunk else None
+
+    if ATTN_IMPL == "online" and t > 1:
+        impl = _sdpa_online
+    elif ATTN_IMPL == "bf16":
+        impl = functools.partial(_sdpa, tile_dtype=jnp.bfloat16)
+    else:
+        impl = _sdpa
+
+    def run(qc, qpos_c):
+        return impl(qc, k, v, qpos_c, kpos, causal=causal, window=window,
+                    chunk=chunk, is_global=layer_global)
+
+    # mask out unwritten cache slots by position validity
+    if kvalid is not None:
+        # fold into kpos trick: invalid slots get kpos = +inf-like sentinel
+        kpos = jnp.where(kvalid, kpos, jnp.iinfo(jnp.int32).max // 2)
+
+    if t > Q_CHUNK and t % Q_CHUNK == 0:
+        nchunk = t // Q_CHUNK
+        qs = q.reshape(b, nchunk, Q_CHUNK, hq, hd).transpose(1, 0, 2, 3, 4)
+        ps = positions.reshape(nchunk, Q_CHUNK) if positions.ndim == 1 else \
+            positions.reshape(b, nchunk, Q_CHUNK).transpose(1, 0, 2)
+        out = jax.lax.map(lambda args: run(*args), (qs, ps))
+        out = out.transpose(1, 0, 2, 3, 4).reshape(b, t, hq, hd)
+    else:
+        out = run(q, positions)
+
+    out = constrain(out, ("batch", "seq", "heads_act", None))
+    y = out.reshape(b, t, hq * hd) @ p["wo"]
+    return y, new_cache

@@ -1,0 +1,82 @@
+"""Shared building blocks: norms, MLPs, rotary embeddings, sharding hooks.
+
+Parameters are plain dict pytrees.  Each init function returns
+``(params, specs)`` where ``specs`` mirrors the param tree with tuples of
+*logical axis names*; the launcher maps logical axes to mesh axes
+(`repro.distributed.sharding`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+
+Dtype = jnp.dtype
+
+
+def _init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm_init(d, dtype):
+    return jnp.ones((d,), dtype), ("norm",)
+
+
+def rmsnorm(x, scale, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def mlp_init(key, d, f, gated, dtype):
+    ks = jax.random.split(key, 3)
+    scale = 1.0 / np.sqrt(d)
+    p = {"wi": _init(ks[0], (d, f), scale, dtype),
+         "wo": _init(ks[1], (f, d), 1.0 / np.sqrt(f), dtype)}
+    s = {"wi": ("embed", "mlp"), "wo": ("mlp", "embed")}
+    if gated:
+        p["wg"] = _init(ks[2], (d, f), scale, dtype)
+        s["wg"] = ("embed", "mlp")
+    return p, s
+
+
+def mlp_apply(p, x, gated):
+    h = x @ p["wi"]
+    if gated:
+        h = jax.nn.silu(x @ p["wg"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, ("batch", "seq", "mlp_act"))
+    return h @ p["wo"]
+
+
+def embed_init(key, vocab, d, dtype):
+    p = _init(key, (vocab, d), 1.0, dtype)
+    return p, ("vocab", "embed")
+
+
+def rope(x, positions, theta):
+    """x: (..., T, H, hd); positions: (..., T)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., T, half)
+    ang = ang[..., None, :]  # broadcast over heads
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy(logits, labels, vocab):
+    """Mean CE over valid labels; logits (..., Vp) may be vocab-padded."""
+    logits = logits.astype(jnp.float32)
+    mask = (labels >= 0) & (labels < vocab)
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - ll) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)

@@ -1,0 +1,113 @@
+"""Mixture-of-Experts FFN with capacity-based scatter dispatch.
+
+Routing: top-k softmax router → position-in-expert via cumsum → scatter
+tokens into an (E, C, D) buffer → batched per-expert FFN (einsum over the
+expert axis, sharded over "model"/EP) → weighted combine.  Tokens beyond
+expert capacity are dropped (standard TPU MoE; capacity_factor in config).
+Shared experts (DeepSeekMoE) run densely on every token.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import _init
+
+#: expert-buffer sharding: "expert" (capacity dim replicated across data —
+#: the scatter becomes replicate+all-reduce under SPMD) or "expert_data"
+#: (capacity dim sharded over "data" — reduce-scatter pattern; §Perf)
+BUF_SHARD = "expert"
+
+
+def set_buf_shard(mode: str):
+    global BUF_SHARD
+    assert mode in ("expert", "expert_data")
+    BUF_SHARD = mode
+
+
+def moe_init(key, cfg, dtype):
+    d = cfg.d_model
+    m = cfg.moe
+    fe = m.d_ff_expert
+    ks = jax.random.split(key, 5)
+    s = 1.0 / np.sqrt(d)
+    p = {
+        "router": _init(ks[0], (d, m.n_experts), s, jnp.float32),
+        "wi": _init(ks[1], (m.n_experts, d, fe), s, dtype),
+        "wg": _init(ks[2], (m.n_experts, d, fe), s, dtype),
+        "wo": _init(ks[3], (m.n_experts, fe, d), 1.0 / np.sqrt(fe), dtype),
+    }
+    specs = {
+        "router": ("embed", "expert"),
+        "wi": ("expert", "embed", "mlp"),
+        "wg": ("expert", "embed", "mlp"),
+        "wo": ("expert", "mlp", "embed"),
+    }
+    if m.n_shared:
+        p["shared_wi"] = _init(ks[4], (d, m.n_shared * fe), s, dtype)
+        p["shared_wg"] = _init(ks[4], (d, m.n_shared * fe), s, dtype)
+        p["shared_wo"] = _init(ks[4], (m.n_shared * fe, d),
+                               1.0 / np.sqrt(fe), dtype)
+        specs["shared_wi"] = ("embed", "mlp")
+        specs["shared_wg"] = ("embed", "mlp")
+        specs["shared_wo"] = ("mlp", "embed")
+    return p, specs
+
+
+def moe_apply(p, x, cfg):
+    """x: (B, S, D) -> (B, S, D)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = (xf @ p["router"].astype(xf.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)          # (T, E)
+    gate, idx = jax.lax.top_k(probs, m.top_k)        # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(np.ceil(t * m.top_k / m.n_experts * m.capacity_factor))
+    cap = max(cap, 4)
+
+    # position of each (token, k) routing choice within its expert
+    flat_idx = idx.reshape(-1)                       # (T*k,)
+    onehot = jax.nn.one_hot(flat_idx, m.n_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) * onehot        # running count
+    pos_in_e = (pos.sum(-1) - 1)                     # (T*k,)
+    keep = pos_in_e < cap
+
+    token_of = jnp.repeat(jnp.arange(t), m.top_k)
+    safe_pos = jnp.where(keep, pos_in_e, cap - 1)
+
+    buf = jnp.zeros((m.n_experts, cap, d), xf.dtype)
+    contrib = jnp.where(keep[:, None], xf[token_of], 0)
+    buf = buf.at[flat_idx, safe_pos].add(contrib)
+    cap_axis = "cache_batch" if BUF_SHARD == "expert_data" else None
+    buf = constrain(buf, ("expert", cap_axis, None))
+
+    # per-expert FFN, batched over the (sharded) expert axis
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+    h = jax.nn.silu(g) * h
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["wo"])   # (E, C, D)
+    out_e = constrain(out_e, ("expert", cap_axis, None))
+
+    # combine: gather each routing choice's expert output, weight, sum
+    picked = out_e[flat_idx, safe_pos]               # (T*k, D)
+    picked = jnp.where(keep[:, None], picked, 0)
+    weighted = picked * gate.reshape(-1)[:, None].astype(picked.dtype)
+    combined = jnp.zeros_like(xf).at[token_of].add(weighted)
+
+    if m.n_shared:
+        hs = jax.nn.silu(xf @ p["shared_wg"]) * (xf @ p["shared_wi"])
+        combined = combined + hs @ p["shared_wo"]
+
+    # auxiliary load-balance loss (Switch-style), returned via aux
+    me = probs.mean(0)
+    ce = (onehot.sum(0) / jnp.maximum(onehot.sum(), 1)).astype(jnp.float32)
+    aux = jnp.sum(me * ce) * m.n_experts
+
+    return combined.reshape(b, s, d), aux

@@ -1,0 +1,107 @@
+"""Recurrent blocks: xLSTM (mLSTM/sLSTM) and Mamba2-style SSD.
+
+All reduce to the diagonal linear recurrence ``h_t = a_t ⊙ h_{t-1} + b_t``
+executed by the FGH-rewritten associative scan (kernels/ssm_scan.py; see
+DESIGN.md §Arch-applicability — the sequential F-loop with readout G is
+rewritten to the blocked-scan GH-form).
+
+* mLSTM: q/k/v projections, exp/sigmoid input+forget gates, per-channel
+  decay a_t = σ(f_t), update b_t = i_t ⊙ (k ⊙ v); readout h ⊙ q.
+* sLSTM positions (xLSTM) switch the gate nonlinearity to exponential
+  gating via a per-layer flag — elementwise, so the stacked-parameter scan
+  stays homogeneous.
+* Mamba2/Zamba2: input proj → gated recurrence over d_inner channels with
+  per-channel learned decay (SSD's scalar-decay, diagonal-state special
+  case; ssm_state sets the head grouping of the decay parameters).
+Decode keeps O(1) state: one recurrence step per token.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.models.layers import _init
+
+
+def recurrent_init(key, cfg, dtype):
+    """Parameter budget follows the published families:
+
+    * Mamba2/Zamba2 (hybrid): in_proj (value+gate) + out_proj + per-HEAD
+      decay/input gates (SSD's scalar-per-head decay) ≈ 3·d·d_inner;
+    * mLSTM/xLSTM (ssm): adds q,k projections for the matrix-memory
+      readout ≈ 5·d·d_inner.
+    """
+    d = cfg.d_model
+    di = cfg.d_inner_mult * d
+    nh = max(cfg.n_heads, 1)
+    ks = jax.random.split(key, 6)
+    s = 1.0 / np.sqrt(d)
+    p = {
+        "w_in": _init(ks[0], (d, 2 * di), s, dtype),     # value + gate
+        "gate_proj": _init(ks[1], (d, 2 * nh), s, jnp.float32),
+        "w_out": _init(ks[3], (di, d), 1.0 / np.sqrt(di), dtype),
+        "decay_bias": jnp.ones((nh,), jnp.float32) * 2.0,
+    }
+    specs = {"w_in": ("embed", "mlp"), "gate_proj": ("embed", None),
+             "w_out": ("mlp", "embed"), "decay_bias": ("norm",)}
+    if cfg.family == "ssm":  # mLSTM q,k readout projections
+        p["w_qk"] = _init(ks[2], (d, 2 * di), s, dtype)
+        specs["w_qk"] = ("embed", "mlp")
+    return p, specs
+
+
+def recurrent_apply(p, x, cfg, *, slstm_flag=None, state=None):
+    """x: (B,T,D).  state: (B, d_inner) carried across decode steps.
+
+    Returns (y, new_state)."""
+    b, t, d = x.shape
+    di = cfg.d_inner_mult * d
+    nh = max(cfg.n_heads, 1)
+
+    vin = x @ p["w_in"]
+    v, og = jnp.split(vin, 2, axis=-1)                 # value, output gate
+    if "w_qk" in p:
+        qk = x @ p["w_qk"]
+        q, k = jnp.split(qk, 2, axis=-1)
+    else:  # Mamba2-style: no matrix-memory readout projections
+        q = k = jnp.ones_like(v)
+    gates = (x @ p["gate_proj"]).astype(jnp.float32)   # per-head (SSD)
+    ig, fg = jnp.split(gates, 2, axis=-1)              # (B,T,nh)
+    fg = fg + p["decay_bias"]
+    # broadcast per-head gates over each head's channels
+    rep = di // nh
+    ig = jnp.repeat(ig, rep, axis=-1)
+    fg = jnp.repeat(fg, rep, axis=-1)
+
+    # mLSTM: sigmoid forget; sLSTM flag switches to exponential gating
+    a_sig = jax.nn.sigmoid(fg)
+    i_sig = jax.nn.sigmoid(ig)
+    if slstm_flag is not None:
+        a_exp = jnp.exp(-jnp.exp(-fg))  # exp-gating, stabilized
+        i_exp = jnp.exp(jnp.minimum(ig, 0.0))
+        a = jnp.where(slstm_flag, a_exp, a_sig)
+        i = jnp.where(slstm_flag, i_exp, i_sig)
+    else:
+        a, i = a_sig, i_sig
+
+    bterm = (i * (k.astype(jnp.float32) * v.astype(jnp.float32)))
+    a = a.astype(jnp.float32)
+
+    if t == 1 and state is not None:
+        h = a[:, 0] * state + bterm[:, 0]
+        new_state = h
+        h = h[:, None]
+    else:
+        h = kops.ssm_scan(a, bterm)
+        new_state = h[:, -1]
+
+    y = (h * jax.nn.silu(og.astype(jnp.float32))
+         * q.astype(jnp.float32)).astype(x.dtype)
+    return y @ p["w_out"], new_state
+
+
+def init_recurrent_state(cfg, batch, dtype=jnp.float32):
+    return jnp.zeros((batch, cfg.d_inner_mult * cfg.d_model), dtype)

@@ -1,0 +1,513 @@
+"""Model assembly: init / forward / loss / cache / decode for all families.
+
+Layer stacks are *scanned* (parameters stacked on a leading L axis) so the
+HLO stays one-layer-sized regardless of depth — essential for 126-layer
+AOT dry-runs.  Heterogeneous patterns are handled without breaking scan
+homogeneity:
+
+* Llama-4: alternate dense/MoE layers → scan over (dense+MoE) pair-blocks;
+  chunked-vs-global attention per layer via a scanned boolean flag.
+* DeepSeekMoE: leading dense layer unstacked, MoE layers scanned.
+* xLSTM: sLSTM positions via a scanned gate-nonlinearity flag.
+* Zamba2: Mamba2 segments scanned; the *shared* attention+MLP block (one
+  parameter set) applied between segments.
+* Whisper: encoder scan (non-causal) + decoder scan with cross-attention.
+* LLaVA: vision-stub embeddings prepended to token embeddings.
+
+Caches: per-stack stacked KV tensors threaded through the scan as xs/ys;
+recurrent stacks carry O(1) state (long_500k works by construction).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+
+Params = dict
+PyTree = Any
+
+
+def _stack_init(key, n, init_fn):
+    """Stack n copies of init_fn's params along a leading axis."""
+    keys = jax.random.split(key, n)
+    ps, spec = init_fn(keys[0])
+    stacked = jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[init_fn(k)[0] for k in keys])
+    spec = jax.tree.map(lambda s: ("layers",) + tuple(s), spec,
+                        is_leaf=lambda s: isinstance(s, tuple))
+    return stacked, spec
+
+
+def _dense_layer_init(cfg, dtype, moe_layer=False):
+    def init(key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        ap, aspec = attn_mod.attn_init(k1, cfg, dtype)
+        if moe_layer:
+            fp, fspec = moe_mod.moe_init(k2, cfg, dtype)
+        else:
+            fp, fspec = L.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp_gated,
+                                   dtype)
+        n1, n1s = L.rmsnorm_init(cfg.d_model, dtype)
+        n2, n2s = L.rmsnorm_init(cfg.d_model, dtype)
+        return ({"attn": ap, "ffn": fp, "norm1": n1, "norm2": n2},
+                {"attn": aspec, "ffn": fspec, "norm1": n1s, "norm2": n2s})
+    return init
+
+
+def _cross_layer_init(cfg, dtype):
+    def init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        base, bspec = _dense_layer_init(cfg, dtype)(k1)
+        xp, xspec = attn_mod.attn_init(k2, cfg, dtype)
+        n3, n3s = L.rmsnorm_init(cfg.d_model, dtype)
+        base["cross"], bspec["cross"] = xp, xspec
+        base["norm3"], bspec["norm3"] = n3, n3s
+        return base, bspec
+    return init
+
+
+def _recurrent_layer_init(cfg, dtype):
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        rp, rspec = ssm_mod.recurrent_init(k1, cfg, dtype)
+        n1, n1s = L.rmsnorm_init(cfg.d_model, dtype)
+        return ({"rec": rp, "norm1": n1}, {"rec": rspec, "norm1": n1s})
+    return init
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.bfloat16):
+    keys = jax.random.split(key, 8)
+    params: Params = {}
+    specs: Params = {}
+
+    params["embed"], specs["embed"] = L.embed_init(
+        keys[0], cfg.padded_vocab, cfg.d_model, dtype)
+    params["out_norm"], specs["out_norm"] = L.rmsnorm_init(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"], specs["lm_head"] = L.embed_init(
+            keys[1], cfg.padded_vocab, cfg.d_model, dtype)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        params["stack"], specs["stack"] = _stack_init(
+            keys[2], cfg.n_layers, _dense_layer_init(cfg, dtype))
+    elif fam == "moe":
+        m = cfg.moe
+        nd = m.first_dense
+        if m.every == 2:
+            params["stack"], specs["stack"] = _stack_init(
+                keys[2], cfg.n_layers // 2, _pair_init(cfg, dtype))
+        else:
+            if nd:
+                params["head_dense"], specs["head_dense"] = _stack_init(
+                    keys[3], nd, _dense_layer_init(cfg, dtype))
+            params["stack"], specs["stack"] = _stack_init(
+                keys[2], cfg.n_layers - nd,
+                _dense_layer_init(cfg, dtype, moe_layer=True))
+    elif fam == "ssm":
+        params["stack"], specs["stack"] = _stack_init(
+            keys[2], cfg.n_layers, _recurrent_layer_init(cfg, dtype))
+    elif fam == "hybrid":
+        params["stack"], specs["stack"] = _stack_init(
+            keys[2], cfg.n_layers, _recurrent_layer_init(cfg, dtype))
+        params["shared_attn"], specs["shared_attn"] = \
+            _dense_layer_init(cfg, dtype)(keys[4])
+    elif fam == "encdec":
+        params["encoder"], specs["encoder"] = _stack_init(
+            keys[5], cfg.encoder_layers, _dense_layer_init(cfg, dtype))
+        params["enc_norm"], specs["enc_norm"] = L.rmsnorm_init(
+            cfg.d_model, dtype)
+        params["stack"], specs["stack"] = _stack_init(
+            keys[2], cfg.n_layers, _cross_layer_init(cfg, dtype))
+    else:  # pragma: no cover
+        raise ValueError(fam)
+    return params, specs
+
+
+def _pair_init(cfg, dtype):
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        a, aspec = _dense_layer_init(cfg, dtype)(k1)
+        b, bspec = _dense_layer_init(cfg, dtype, moe_layer=True)(k2)
+        return {"a": a, "b": b}, {"a": aspec, "b": bspec}
+    return init
+
+
+def param_specs(cfg: ModelConfig, dtype=jnp.bfloat16):
+    _, specs = jax.eval_shape(
+        lambda k: init_params(cfg, k, dtype), jax.random.PRNGKey(0))
+    # specs contain no tracers (pure python), but eval_shape wraps the fn;
+    # rebuild directly instead:
+    return init_specs_only(cfg, dtype)
+
+
+def init_specs_only(cfg: ModelConfig, dtype=jnp.bfloat16):
+    shapes, specs = shape_init(cfg, dtype)
+    return specs
+
+
+@functools.lru_cache(maxsize=32)
+def _shape_init_cached(cfg: ModelConfig, dtype_str: str):
+    dtype = jnp.dtype(dtype_str)
+    box = {}
+
+    def build(k):
+        params, specs = init_params(cfg, k, dtype)
+        box["specs"] = specs  # pure-python tree; stash during tracing
+        return params
+
+    shapes = jax.eval_shape(build, jax.random.PRNGKey(0))
+    return shapes, box["specs"]
+
+
+def shape_init(cfg: ModelConfig, dtype=jnp.bfloat16):
+    """(ShapeDtypeStruct params, logical specs) without any allocation."""
+    return _shape_init_cached(cfg, jnp.dtype(dtype).name)
+
+
+# --------------------------------------------------------------------------
+# Stack runners
+# --------------------------------------------------------------------------
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "full":
+        return jax.checkpoint(fn)
+    if remat == "selective":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def _dense_block(p, x, cfg, positions, *, cache=None, is_global=False,
+                 moe_layer=False, causal=True, enc_out=None):
+    h, new_cache = attn_mod.attn_apply(
+        p["attn"], L.rmsnorm(x, p["norm1"], cfg.norm_eps), cfg,
+        positions=positions, cache=cache, layer_global=is_global,
+        causal=causal)
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if enc_out is not None:
+        ck, cv, kpos = enc_out
+        h, _ = attn_mod.attn_apply(
+            p["cross"], L.rmsnorm(x, p["norm3"], cfg.norm_eps), cfg,
+            positions=positions, kv_override=(ck, cv, kpos), causal=False)
+        x = x + h
+    z = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+    if moe_layer:
+        f, aux = moe_mod.moe_apply(p["ffn"], z, cfg)
+    else:
+        f = L.mlp_apply(p["ffn"], z, cfg.mlp_gated)
+    return x + f, aux, new_cache
+
+
+def _run_attn_stack(stack, x, cfg, positions, *, cache=None, flags=None,
+                    pair=False, moe_layer=False, causal=True, remat="none",
+                    enc_out_proj=None):
+    """Scan a stacked attention stack; cache (L, ...) threaded as xs/ys."""
+    n_layers = jax.tree.leaves(stack)[0].shape[0]
+    if flags is None:
+        flags = jnp.zeros((n_layers,), bool)
+
+    def block(carry, xs):
+        x, aux = carry
+        p_l, flag, cache_l, enc_l = xs
+
+        if pair:
+            x, a1, ca = _dense_block(p_l["a"], x, cfg, positions,
+                                     cache=None if cache_l is None else cache_l["a"],
+                                     is_global=flag, causal=causal)
+            x, a2, cb = _dense_block(p_l["b"], x, cfg, positions,
+                                     cache=None if cache_l is None else cache_l["b"],
+                                     is_global=flag, moe_layer=True,
+                                     causal=causal)
+            new_c = None if cache_l is None else {"a": ca, "b": cb}
+            aux = aux + a1 + a2
+        else:
+            enc_kv = None
+            if enc_l is not None:
+                enc_kv = enc_l
+            x, a1, new_c = _dense_block(p_l, x, cfg, positions,
+                                        cache=cache_l, is_global=flag,
+                                        moe_layer=moe_layer, causal=causal,
+                                        enc_out=enc_kv)
+            aux = aux + a1
+        return (x, aux), new_c
+
+    block = _maybe_remat(block, remat)
+    xs = (stack, flags, cache, enc_out_proj)
+    (x, aux), new_cache = jax.lax.scan(block, (x, jnp.zeros((), jnp.float32)),
+                                       xs)
+    return x, aux, new_cache
+
+
+def _run_recurrent_stack(stack, x, cfg, *, state=None, slstm_flags=None,
+                         remat="none"):
+    n_layers = jax.tree.leaves(stack)[0].shape[0]
+    if slstm_flags is None:
+        slstm_flags = jnp.zeros((n_layers,), bool)
+
+    def block(carry, xs):
+        x = carry
+        p_l, flag, st = xs
+        y, new_st = ssm_mod.recurrent_apply(
+            p_l["rec"], L.rmsnorm(x, p_l["norm1"], cfg.norm_eps), cfg,
+            slstm_flag=flag, state=st)
+        return x + y, new_st
+
+    block = _maybe_remat(block, remat)
+    x, new_state = jax.lax.scan(block, x, (stack, slstm_flags, state))
+    return x, new_state
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+
+def _global_flags(cfg, n, pair=False):
+    if not cfg.global_every:
+        return jnp.zeros((n,), bool)
+    import numpy as np
+    if pair:
+        # flag applies to both layers of the pair-block; global layers are
+        # every cfg.global_every-th absolute layer
+        f = [(2 * i + 1) % cfg.global_every == cfg.global_every - 1
+             for i in range(n)]
+    else:
+        f = [i % cfg.global_every == cfg.global_every - 1 for i in range(n)]
+    return jnp.asarray(np.array(f))
+
+
+def _slstm_flags(cfg, n):
+    import numpy as np
+    return jnp.asarray(np.array([i in cfg.slstm_layers for i in range(n)]))
+
+
+def forward(params, cfg: ModelConfig, tokens=None, *, embeds=None,
+            enc_embeds=None, cache=None, remat: str = "none"):
+    """Returns (logits, aux, new_cache).
+
+    tokens: (B, T) int32; embeds: (B, Tp, D) frontend-stub embeddings
+    prepended to token embeddings (VLM); enc_embeds: (B, Te, D) encoder
+    input (audio stub).  cache=None → full-sequence (train/prefill).
+    """
+    emb = params["embed"]
+    x_parts = []
+    if embeds is not None:
+        x_parts.append(embeds.astype(emb.dtype))
+    if tokens is not None:
+        x_parts.append(emb[tokens])
+    x = x_parts[0] if len(x_parts) == 1 else jnp.concatenate(x_parts, 1)
+    x = constrain(x, ("batch", "seq", "embed_act"))
+    b, t, _ = x.shape
+
+    pos0 = cache["pos"] if cache is not None else 0
+    positions = pos0 + jnp.arange(t)
+
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = dict(cache) if cache is not None else None
+    fam = cfg.family
+
+    if fam in ("dense", "vlm"):
+        flags = _global_flags(cfg, cfg.n_layers)
+        x, aux, nc = _run_attn_stack(
+            params["stack"], x, cfg, positions,
+            cache=None if cache is None else cache["layers"],
+            flags=flags, remat=remat)
+        if cache is not None:
+            new_cache["layers"] = nc
+    elif fam == "moe":
+        m = cfg.moe
+        if m.every == 2:
+            flags = _global_flags(cfg, cfg.n_layers // 2, pair=True)
+            x, aux, nc = _run_attn_stack(
+                params["stack"], x, cfg, positions,
+                cache=None if cache is None else cache["layers"],
+                flags=flags, pair=True, remat=remat)
+        else:
+            if m.first_dense:
+                x, _, nch = _run_attn_stack(
+                    params["head_dense"], x, cfg, positions,
+                    cache=None if cache is None else cache["head"],
+                    remat=remat)
+                if cache is not None:
+                    new_cache["head"] = nch
+            x, aux, nc = _run_attn_stack(
+                params["stack"], x, cfg, positions,
+                cache=None if cache is None else cache["layers"],
+                moe_layer=True, remat=remat)
+        if cache is not None:
+            new_cache["layers"] = nc
+    elif fam == "ssm":
+        flags = _slstm_flags(cfg, cfg.n_layers)
+        x, st = _run_recurrent_stack(
+            params["stack"], x, cfg,
+            state=None if cache is None else cache["state"],
+            slstm_flags=flags, remat=remat)
+        if cache is not None:
+            new_cache["state"] = st
+    elif fam == "hybrid":
+        k = cfg.hybrid_attn_every
+        n_seg = cfg.n_layers // k
+        seg_stacks = jax.tree.map(
+            lambda a: a.reshape((n_seg, k) + a.shape[1:]), params["stack"])
+        for s in range(n_seg):
+            seg = jax.tree.map(lambda a: a[s], seg_stacks)
+            st = None if cache is None else \
+                jax.lax.dynamic_slice_in_dim(cache["state"], s * k, k, 0)
+            x, new_st = _run_recurrent_stack(seg, x, cfg, state=st,
+                                             remat=remat)
+            if cache is not None:
+                new_cache["state"] = jax.lax.dynamic_update_slice_in_dim(
+                    new_cache["state"], new_st, s * k, 0)
+            sc = None if cache is None else \
+                jax.tree.map(lambda a: a[s], cache["shared"])
+            x, _, nsc = _dense_block(params["shared_attn"], x, cfg,
+                                     positions, cache=sc)
+            if cache is not None:
+                new_cache["shared"] = jax.tree.map(
+                    lambda full, upd, s=s: full.at[s].set(upd),
+                    new_cache["shared"], nsc)
+    elif fam == "encdec":
+        if cache is None or cache.get("cross") is None:
+            assert enc_embeds is not None
+            e = enc_embeds.astype(emb.dtype)
+            epos = jnp.arange(e.shape[1])
+            e, _, _ = _run_attn_stack(params["encoder"], e, cfg, epos,
+                                      causal=False, remat=remat)
+            e = L.rmsnorm(e, params["enc_norm"], cfg.norm_eps)
+            # per-decoder-layer cross K/V projected from encoder output
+            def proj(p_l):
+                te = e.shape[1]
+                ck = (e @ p_l["cross"]["wk"]).reshape(
+                    b, te, cfg.n_kv_heads, cfg.hd)
+                cv = (e @ p_l["cross"]["wv"]).reshape(
+                    b, te, cfg.n_kv_heads, cfg.hd)
+                return ck, cv
+            ck, cv = jax.vmap(proj)(params["stack"])
+            cross = (ck, cv, jnp.arange(e.shape[1]))
+            if cache is not None:
+                new_cache["cross"] = cross
+        else:
+            cross = cache["cross"]
+            new_cache["cross"] = cross
+        ck, cv, kpos = cross
+        x, aux, nc = _run_attn_stack(
+            params["stack"], x, cfg, positions,
+            cache=None if cache is None else cache["layers"],
+            enc_out_proj=(ck, cv,
+                          jnp.broadcast_to(kpos, (ck.shape[0],) + kpos.shape)),
+            remat=remat)
+        if cache is not None:
+            new_cache["layers"] = nc
+    else:  # pragma: no cover
+        raise ValueError(fam)
+
+    x = L.rmsnorm(x, params["out_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.T
+    logits = constrain(logits, ("batch", "seq", "vocab_act"))
+    if cache is not None:
+        new_cache["pos"] = cache["pos"] + t
+    return logits, aux, new_cache
+
+
+def loss_fn(params, cfg, batch, *, remat="none"):
+    logits, aux, _ = forward(
+        params, cfg, batch.get("tokens"), embeds=batch.get("embeds"),
+        enc_embeds=batch.get("enc_embeds"), remat=remat)
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:  # VLM: patch positions unlabeled
+        pad = logits.shape[1] - labels.shape[1]
+        labels = jnp.concatenate(
+            [jnp.full((labels.shape[0], pad), -1, labels.dtype), labels], 1)
+    ce = L.cross_entropy(logits, labels, cfg.vocab)
+    return ce + 0.01 * aux, (ce, aux)
+
+
+# --------------------------------------------------------------------------
+# Caches / decode
+# --------------------------------------------------------------------------
+
+
+def _kv_cache(cfg, n, batch, t_max, dtype):
+    shape = (n, batch, t_max, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, t_max: int, dtype=jnp.bfloat16,
+               enc_len: int | None = None):
+    fam = cfg.family
+    cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+    if fam in ("dense", "vlm"):
+        cache["layers"] = _kv_cache(cfg, cfg.n_layers, batch, t_max, dtype)
+    elif fam == "moe":
+        m = cfg.moe
+        if m.every == 2:
+            half = _kv_cache(cfg, cfg.n_layers // 2, batch, t_max, dtype)
+            cache["layers"] = {"a": half,
+                               "b": _kv_cache(cfg, cfg.n_layers // 2, batch,
+                                              t_max, dtype)}
+        else:
+            if m.first_dense:
+                cache["head"] = _kv_cache(cfg, m.first_dense, batch, t_max,
+                                          dtype)
+            cache["layers"] = _kv_cache(cfg, cfg.n_layers - m.first_dense,
+                                        batch, t_max, dtype)
+    elif fam == "ssm":
+        cache["state"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.d_inner_mult * cfg.d_model),
+            jnp.float32)
+    elif fam == "hybrid":
+        cache["state"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.d_inner_mult * cfg.d_model),
+            jnp.float32)
+        n_seg = cfg.n_layers // cfg.hybrid_attn_every
+        cache["shared"] = _kv_cache(cfg, n_seg, batch, t_max, dtype)
+    elif fam == "encdec":
+        cache["layers"] = _kv_cache(cfg, cfg.n_layers, batch, t_max, dtype)
+        cache["cross"] = None
+    # per-layer caches get a scalar pos each when threaded through scans;
+    # we keep one global pos and slice-update at it.
+    return _distribute_pos(cache)
+
+
+def _distribute_pos(cache):
+    """KV stacks need a per-layer 'pos' for the scan body; share one."""
+    def add_pos(kv):
+        n = kv["k"].shape[0]
+        kv = dict(kv)
+        kv["pos"] = jnp.zeros((n,), jnp.int32)
+        return kv
+    for key in ("layers", "head", "shared"):
+        if key in cache and cache[key] is not None:
+            if key == "layers" and "a" in cache[key]:
+                cache[key] = {"a": add_pos(cache[key]["a"]),
+                              "b": add_pos(cache[key]["b"])}
+            else:
+                cache[key] = add_pos(cache[key])
+    return cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, *, remat="none"):
+    """One-token decode: tokens (B, 1) → (logits, new_cache)."""
+    logits, _, new_cache = forward(params, cfg, tokens, cache=cache,
+                                   remat=remat)
+    return logits, new_cache

@@ -1,0 +1,10 @@
+"""Optimizers + schedules (pure JAX, no optax)."""
+
+from repro.optimizer.optimizers import (adamw_init, adamw_update,
+                                        adafactor_init, adafactor_update,
+                                        OptConfig, make_optimizer)
+from repro.optimizer.schedules import cosine_schedule, wsd_schedule
+
+__all__ = ["adamw_init", "adamw_update", "adafactor_init",
+           "adafactor_update", "OptConfig", "make_optimizer",
+           "cosine_schedule", "wsd_schedule"]

@@ -1,0 +1,134 @@
+"""AdamW and Adafactor with f32 state over (possibly bf16) params.
+
+* AdamW — f32 m/v moments; the production default.  Moments inherit the
+  parameter sharding (ZeRO-style: the 2-D weight sharding shards the
+  optimizer state with no extra machinery).
+* Adafactor — factored second moment (row/col statistics), no first
+  moment: O(n) → O(√n) state for the 100B+ dry-runs where 2×f32 moments
+  would not fit 16 GiB/chip (see EXPERIMENTS.md §Perf).
+* Gradient clipping by global norm; optional gradient compression hooks
+  live in repro/distributed/collectives.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"            # adamw | adafactor
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def _lr_at(cfg: OptConfig, step):
+    return cfg.lr(step) if callable(cfg.lr) else jnp.asarray(cfg.lr)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+# -- AdamW ------------------------------------------------------------------
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(cfg: OptConfig, params, grads, state):
+    step = state["step"] + 1
+    lr = _lr_at(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g32
+        v2 = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        mhat = m2 / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = v2 / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"m": new_m, "v": new_v, "step": step}, gnorm
+
+
+# -- Adafactor --------------------------------------------------------------
+
+
+def adafactor_init(params):
+    def one(p):
+        if p.ndim >= 2:
+            return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"f": jax.tree.map(one, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(cfg: OptConfig, params, grads, state):
+    step = state["step"] + 1
+    lr = _lr_at(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    decay = 1.0 - step.astype(jnp.float32) ** -0.8
+
+    def upd(p, g, f):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + 1e-30
+        if p.ndim >= 2:
+            r = decay * f["r"] + (1 - decay) * g2.mean(-1)
+            c = decay * f["c"] + (1 - decay) * g2.mean(-2)
+            denom = (r[..., None] * c[..., None, :]
+                     / jnp.maximum(r.mean(-1, keepdims=True)[..., None], 1e-30))
+            v = denom
+            nf = {"r": r, "c": c}
+        else:
+            v = decay * f["v"] + (1 - decay) * g2
+            nf = {"v": v}
+        delta = g32 / jnp.sqrt(v + 1e-30)
+        # relative update clipping (Adafactor's d=1)
+        rms = jnp.sqrt(jnp.mean(jnp.square(delta)))
+        delta = delta / jnp.maximum(1.0, rms)
+        delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), nf
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_f = treedef.flatten_up_to(state["f"])
+    outs = [upd(p, g, f) for p, g, f in zip(flat_p, flat_g, flat_f)]
+    new_p = treedef.unflatten([o[0] for o in outs])
+    new_f = treedef.unflatten([o[1] for o in outs])
+    return new_p, {"f": new_f, "step": step}, gnorm
+
+
+def make_optimizer(cfg: OptConfig):
+    if cfg.kind == "adamw":
+        return adamw_init, lambda p, g, s: adamw_update(cfg, p, g, s)
+    if cfg.kind == "adafactor":
+        return adafactor_init, lambda p, g, s: adafactor_update(cfg, p, g, s)
+    raise KeyError(cfg.kind)

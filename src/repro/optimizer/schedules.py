@@ -1,0 +1,33 @@
+"""LR schedules: cosine and MiniCPM's Warmup-Stable-Decay (WSD).
+
+WSD (arXiv:2404.06395): linear warmup → long stable plateau → short
+(~10%) exponential-ish decay; we use the linear-decay variant."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def wsd_schedule(base_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.1, floor: float = 0.1):
+    decay_start = int(total * (1 - decay_frac))
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - decay_start) / max(total - decay_start, 1),
+                        0.0, 1.0)
+        dec = base_lr * (1 - (1 - floor) * frac)
+        out = jnp.where(step < warmup, warm, base_lr)
+        return jnp.where(step >= decay_start, dec, out)
+    return lr

@@ -1,0 +1,73 @@
+"""Shared test utilities: brute-force SSP oracle + random query generators."""
+
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+from repro.core import engine, ir
+from repro.core import semiring as sr_mod
+
+
+def brute_force_eval(e: ir.SSP, db: engine.Database, hints=None) -> np.ndarray:
+    """Evaluate an SSP by enumerating every variable assignment.
+
+    The independent oracle for the contraction planner: O(n^vars), only for
+    tiny domains.
+    """
+    sr = sr_mod.get(e.semiring, lib="np")
+    sorts = engine.infer_var_sorts(e, db.schema, hints)
+    out_shape = tuple(db.domains[sorts[h]] for h in e.head)
+    acc = np.full(out_shape, sr.zero, sr.dtype)
+
+    for t in e.terms:
+        vars_ = sorted(t.vars() | set(e.head))
+        doms = [range(db.domains[sorts[v]]) for v in vars_]
+        for assign in itertools.product(*doms):
+            env = dict(zip(vars_, assign))
+            val = np.asarray(sr.one, sr.dtype)
+            for a in t.atoms:
+                val = sr.mul(val, _atom_value(a, env, db, sr))
+            idx = tuple(env[h] for h in e.head)
+            acc[idx] = sr.add(acc[idx], val)
+    return acc
+
+
+def _atom_value(a, env, db, sr):
+    def argv(x):
+        return x.value if isinstance(x, ir.C) else env[x]
+
+    if isinstance(a, ir.RelAtom):
+        v = np.asarray(db.relations[a.name])[tuple(argv(x) for x in a.args)]
+        src = sr_mod.get(db.schema[a.name].semiring, lib="np")
+        if a.neg:
+            v = not bool(v)
+        if src.name == "bool" and sr.name != "bool":
+            return sr.from_bool(np.asarray(v))
+        if src.name != sr.name and src.name != "bool":
+            return np.asarray(sr.zero if v == src.zero else v, sr.dtype)
+        return np.asarray(v)
+    if isinstance(a, ir.PredAtom):
+        vals = [argv(x) for x in a.args]
+        table = {"eq": lambda x, y: x == y, "neq": lambda x, y: x != y,
+                 "lt": lambda x, y: x < y, "le": lambda x, y: x <= y,
+                 "sum3": lambda x, y, z: x == y + z,
+                 "succ": lambda x, y: x == y + 1,
+                 "winlt": lambda x, y: 1 <= x < y}
+        return sr.from_bool(np.asarray(table[a.pred](*vals)))
+    if isinstance(a, ir.ValAtom):
+        return np.asarray(float(env[a.var]), sr.dtype)
+    if isinstance(a, ir.ValFnAtom):
+        vals = [float(argv(x)) for x in a.args]
+        if a.fn == "mulratio":
+            return np.asarray(vals[0] * vals[1] / max(vals[2], 1.0), sr.dtype)
+        return np.asarray(vals[0] + 1.0, sr.dtype)
+    return np.asarray(a.value, sr.dtype)
+
+
+def values_close(a, b, atol=1e-4):
+    a, b = np.asarray(a), np.asarray(b)
+    if a.dtype == bool:
+        return bool((a == b).all())
+    return bool(np.allclose(a, b, atol=atol, rtol=1e-4, equal_nan=True))

@@ -1,0 +1,56 @@
+"""Integration: one real AOT dry-run cell via subprocess (512 virtual
+devices live only in the child; this process keeps 1 device)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+def test_dryrun_cell_compiles(mesh):
+    env = {**os.environ, "PYTHONPATH": "src"}
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "whisper-base", "--shape", "decode_32k", "--mesh", mesh],
+        capture_output=True, text=True, timeout=600, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    rows = [json.loads(l) for l in proc.stdout.splitlines()
+            if l.startswith("{")]
+    assert rows, proc.stderr[-2000:]
+    row = rows[-1]
+    assert row["status"] == "ok", row.get("error")
+    assert row["flops"] > 0
+    assert row["collectives"]["total_bytes"] > 0  # model-sharded decode
+
+
+def test_hlo_walker_loop_multiplication():
+    import jax
+    import jax.numpy as jnp
+    from repro.launch import hlo_cost
+
+    def body(x, _):
+        return x @ x, None
+
+    def f(x):
+        return jax.lax.scan(body, x, None, length=7)[0]
+
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    c = jax.jit(f).lower(x).compile()
+    cost = hlo_cost.analyze(c.as_text())
+    assert cost.flops == pytest.approx(7 * 2 * 256 ** 3, rel=0.01)
+
+
+def test_skip_rules():
+    from repro import configs
+    from repro.launch import workloads as wl
+    skipped = [a for a in configs.list_archs()
+               if wl.skip_reason(configs.get(a), wl.WORKLOADS["long_500k"])]
+    assert set(skipped) == {"minicpm-2b", "llama3-405b",
+                            "mistral-large-123b", "deepseek-moe-16b",
+                            "whisper-base", "llava-next-mistral-7b"}
+    for a in configs.list_archs():
+        assert wl.skip_reason(configs.get(a),
+                              wl.WORKLOADS["train_4k"]) is None

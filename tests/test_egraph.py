@@ -1,0 +1,69 @@
+"""E-graph (EQSAT) tests: congruence, saturation, constrained equivalence,
+denormalization-style extraction (paper Sec. 7)."""
+
+from repro.core.egraph import (EGraph, ENode, SEMIRING_RULES,
+                               equivalent_under)
+
+
+def test_congruence_closure():
+    g = EGraph()
+    a = g.add_term("a")
+    b = g.add_term("b")
+    fa = g.add_term(("f", "a"))
+    fb = g.add_term(("f", "b"))
+    assert not g.eq(fa, fb)
+    g.merge(a, b)
+    g.rebuild()
+    assert g.eq(fa, fb)  # f(a) = f(b) once a = b
+
+
+def test_distributivity_saturation():
+    # a⊗(b⊕c) ≡ a⊗b ⊕ a⊗c
+    assert equivalent_under(
+        SEMIRING_RULES,
+        ("mul", "a", ("add", "b", "c")),
+        ("add", ("mul", "a", "b"), ("mul", "a", "c")))
+
+
+def test_commutativity_and_identity():
+    assert equivalent_under(SEMIRING_RULES, ("mul", "a", "one"), "a")
+    assert equivalent_under(SEMIRING_RULES, ("mul", "a", "b"),
+                            ("mul", "b", "a"))
+    assert not equivalent_under(SEMIRING_RULES, ("mul", "a", "b"),
+                                ("mul", "a", "c"))
+
+
+def test_equivalence_under_constraint():
+    """Sec. 7: a constraint Δ ⇒ Θ becomes Δ∧Θ = Δ; here E∧T = E (E ⊆ T)
+    makes (E∧T)∧x equivalent to E∧x."""
+    constraint = [(("mul", "E", "T"), "E")]
+    assert equivalent_under(SEMIRING_RULES,
+                            ("mul", ("mul", "E", "T"), "x"),
+                            ("mul", "E", "x"), constraints=constraint)
+    assert not equivalent_under(SEMIRING_RULES,
+                                ("mul", ("mul", "E", "T"), "x"),
+                                ("mul", "E", "x"))
+
+
+def test_denormalization_extraction():
+    """Rewriting using views: replace the view's e-class with symbol Y and
+    extract an X-free expression (paper Sec. 6.1 / Fig. 6 green box)."""
+    g = EGraph()
+    # normalized P1 = (X⊗E) ⊕ B ; view V = X⊗E
+    p1 = g.add_term(("add", ("mul", "X", "E"), "B"))
+    view = g.add_term(("mul", "X", "E"))
+    y = g.add_term("Y")
+    g.merge(view, y)
+    g.rebuild()
+    g.run_rules(SEMIRING_RULES, iters=4)
+    out = g.extract(p1, forbid_ops={"X"})
+    assert out is not None
+    flat = str(out)
+    assert "X" not in flat and "Y" in flat  # H = Y ⊕ B
+
+
+def test_extraction_respects_cost():
+    g = EGraph()
+    big = g.add_term(("mul", ("mul", "a", "one"), "one"))
+    g.run_rules(SEMIRING_RULES, iters=4)
+    assert g.extract(big) == "a"

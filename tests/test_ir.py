@@ -1,0 +1,111 @@
+"""IR-level properties: normalization, substitution, canonical forms."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine, ir
+from repro.core.ir import C, ConstAtom, PredAtom, RelAtom, Term, ValAtom
+from helpers import brute_force_eval, values_close
+
+
+def _schema():
+    s = ir.Schema()
+    s.declare("E", ("id", "id"), "bool")
+    s.declare("V", ("id",), "bool")
+    s.declare("X", ("id", "id"), "bool")
+    return s
+
+
+def test_substitution_equals_numeric_composition():
+    """substitute_defs(G, {X: F}) must evaluate like eval(G) ∘ eval(F)."""
+    rng = np.random.default_rng(0)
+    s = _schema()
+    db0 = engine.Database(s, {"id": 4}, {
+        "E": rng.random((4, 4)) < 0.5, "V": rng.random(4) < 0.8,
+        "X": rng.random((4, 4)) < 0.4})
+    f = ir.SSP(("x", "y"), (
+        Term((RelAtom("V", ("x",)), PredAtom("eq", ("x", "y"))), ()),
+        Term((RelAtom("E", ("x", "z")), RelAtom("X", ("z", "y"))), ("z",)),
+    ), "bool")
+    g = ir.SSP(("y",), (Term((RelAtom("X", (C(0), "y")),), ()),), "bool")
+    composed = ir.substitute_defs(g, {"X": f})
+    fx = engine.eval_ssp(f, db0, backend="np")
+    direct = engine.eval_ssp(g, db0.with_relations({"X": fx}), backend="np")
+    via_sub = engine.eval_ssp(composed, db0, backend="np")
+    assert values_close(direct, via_sub)
+
+
+def test_cast_substitution_idempotent_semiring():
+    rng = np.random.default_rng(1)
+    s = _schema()
+    db0 = engine.Database(s, {"id": 3}, {
+        "E": rng.random((3, 3)) < 0.5, "V": rng.random(3) < 0.8,
+        "X": rng.random((3, 3)) < 0.4})
+    f = ir.SSP(("x", "y"), (
+        Term((RelAtom("E", ("x", "z")), RelAtom("X", ("z", "y"))), ("z",)),
+    ), "bool")
+    g = ir.SSP(("x",), (
+        Term((ValAtom("v"), RelAtom("X", ("x", "v"), cast=True)), ("v",)),
+    ), "trop")
+    composed = ir.substitute_defs(g, {"X": f})
+    fx = engine.eval_ssp(f, db0, backend="np")
+    direct = engine.eval_ssp(g, db0.with_relations({"X": fx}), backend="np")
+    via_sub = engine.eval_ssp(composed, db0, backend="np")
+    assert values_close(direct, via_sub)
+
+
+def test_cast_substitution_refuses_nonidempotent():
+    f = ir.SSP(("x", "y"), (
+        Term((RelAtom("E", ("x", "z")), RelAtom("X", ("z", "y"))), ("z",)),
+    ), "bool")
+    g = ir.SSP(("x",), (
+        Term((ValAtom("v"), RelAtom("X", ("x", "v"), cast=True)), ("v",)),
+    ), "nat")
+    with pytest.raises(ir.NonIdempotentCast):
+        ir.substitute_defs(g, {"X": f})
+
+
+def test_isomorphism_bound_var_renaming():
+    t1 = ir.SSP(("x",), (Term((RelAtom("E", ("x", "a")),
+                               RelAtom("E", ("a", "b"))), ("a", "b")),),
+                "bool")
+    t2 = ir.SSP(("x",), (Term((RelAtom("E", ("p", "q")),
+                               RelAtom("E", ("x", "p"))), ("q", "p")),),
+                "bool")
+    assert ir.isomorphic(t1, t2)
+    t3 = ir.SSP(("x",), (Term((RelAtom("E", ("x", "a")),
+                               RelAtom("E", ("b", "a"))), ("a", "b")),),
+                "bool")
+    assert not ir.isomorphic(t1, t3)
+
+
+def test_eq_elimination_with_constant():
+    t = Term((RelAtom("E", ("x", "z")), PredAtom("eq", ("z", C(1)))), ("z",))
+    n = ir.normalize_term(t, "bool")
+    assert n is not None
+    assert n.atoms[0].args == ("x", C(1))
+    assert not n.bound
+
+
+def test_value_arithmetic_fold_trop():
+    """⊕_d val(d)⊗[d=d1+d2] = val(d1)⊗val(d2) in (min,+) (Sec. 5 axioms)."""
+    t = Term((ValAtom("d"), PredAtom("sum3", ("d", "d1", "d2"))), ("d",))
+    n = ir.normalize_term(t, "trop")
+    kinds = sorted(type(a).__name__ for a in n.atoms)
+    assert kinds == ["ValAtom", "ValAtom"]
+    # and NOT in ℕ (⊗ is ×, the fold would be unsound)
+    n2 = ir.normalize_term(t, "nat")
+    assert any(isinstance(a, PredAtom) for a in n2.atoms)
+
+
+def test_contradiction_kills_term():
+    t = Term((RelAtom("E", ("x", "y")), PredAtom("neq", ("x", "x"))), ())
+    assert ir.normalize_term(t, "bool") is None
+
+
+def test_canonical_ssp_dedups_idempotent_terms():
+    t1 = Term((RelAtom("E", ("x", "a")),), ("a",))
+    t2 = Term((RelAtom("E", ("x", "b")),), ("b",))
+    e = ir.SSP(("x",), (t1, t2), "bool")
+    assert len(ir.normalize(e).terms) == 1

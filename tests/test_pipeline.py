@@ -1,0 +1,47 @@
+"""Pipeline parallelism: pipelined execution ≡ sequential stage stack."""
+
+import os
+
+import pytest
+
+# a local 4-device CPU mesh for the pipeline test only (this module must
+# be imported before jax initializes — pytest imports it fresh per file,
+# but other test modules may have initialized jax already, so spawn a
+# subprocess to guarantee the device count)
+import subprocess
+import sys
+
+
+def test_pipeline_matches_sequential():
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from repro.distributed.pipeline import run_pipeline, bubble_fraction
+
+mesh = jax.make_mesh((4,), ("stage",))
+S, M, B, D = 4, 8, 2, 16
+rng = np.random.default_rng(0)
+w = jnp.asarray(rng.standard_normal((S, D, D)) * 0.3, jnp.float32)
+x = jnp.asarray(rng.standard_normal((M, B, D)), jnp.float32)
+
+def stage_fn(params, x):
+    return jnp.tanh(x @ params[0][0])  # [0]: this stage's (1,D,D) slice
+
+out = run_pipeline(mesh, stage_fn, (w,), x, n_stages=S, n_micro=M)
+
+# sequential reference
+ref = x
+for s in range(S):
+    ref = jnp.tanh(ref @ w[s])
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                           atol=2e-4)
+assert abs(bubble_fraction(4, 8) - 3/11) < 1e-9
+print("PIPELINE_OK")
+"""
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=300,
+        env={**os.environ, "PYTHONPATH": "src"},
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert "PIPELINE_OK" in proc.stdout, proc.stderr[-2000:]

@@ -1,0 +1,150 @@
+"""The 7 paper benchmarks: original ≡ published-optimized ≡ external oracle."""
+
+import numpy as np
+import networkx as nx
+import pytest
+
+from repro.core.program import run_program
+from repro.datalog import datasets, programs
+from helpers import values_close
+
+
+def _nx_digraph(g):
+    G = nx.DiGraph()
+    G.add_nodes_from(range(g.n))
+    G.add_edges_from(map(tuple, g.edges))
+    return G
+
+
+def test_cc_matches_union_find():
+    g = datasets.erdos_renyi(24, 2.0, seed=1)
+    b = programs.cc()
+    db = b.make_db(g)
+    o, _ = run_program(b.original, db)
+    p, _ = run_program(b.optimized, db)
+    G = nx.Graph()
+    G.add_nodes_from(range(g.n))
+    G.add_edges_from(map(tuple, g.edges))
+    want = np.zeros(g.n)
+    for comp in nx.connected_components(G):
+        m = min(comp)
+        for v in comp:
+            want[v] = m
+    assert values_close(o, p)
+    assert values_close(np.asarray(p), want)
+
+
+def test_bm_matches_reachability():
+    g = datasets.erdos_renyi(20, 1.5, seed=2)
+    b = programs.bm(a=0)
+    db = b.make_db(g)
+    o, _ = run_program(b.original, db)
+    p, _ = run_program(b.optimized, db)
+    want = np.zeros(g.n, bool)
+    reach = nx.descendants(_nx_digraph(g), 0) | {0}
+    want[list(reach)] = True
+    assert values_close(o, p)
+    assert (np.asarray(p) == want).all()
+
+
+def test_sssp_matches_dijkstra():
+    g = datasets.erdos_renyi(18, 2.5, seed=3, weighted=True, wmax=4)
+    b = programs.sssp(a=0, wmax=4, dmax=48)
+    db = b.make_db(g)
+    o, _ = run_program(b.original, db)
+    p, _ = run_program(b.optimized, db)
+    G = nx.DiGraph()
+    G.add_nodes_from(range(g.n))
+    for (u, v), w in zip(g.edges, g.weights):
+        if not G.has_edge(u, v) or G[u][v]["weight"] > w:
+            G.add_edge(u, v, weight=int(w))
+    want = np.full(g.n, np.inf)
+    for k, v in nx.single_source_dijkstra_path_length(G, 0).items():
+        want[k] = v
+    assert values_close(o, p)
+    assert values_close(np.asarray(p), want)
+
+
+def test_ws_matches_numpy():
+    vals = datasets.vector_data(30, seed=0, vmax=6)
+    b = programs.ws(window=5, vmax=6)
+    db = b.make_db(vals)
+    o, _ = run_program(b.original, db)
+    p, _ = run_program(b.optimized, db)
+    pref = np.cumsum(vals)
+    want = pref - np.concatenate([np.zeros(5), pref[:-5]])
+    assert values_close(o, p)
+    assert values_close(np.asarray(p), want)
+
+
+def test_bc_matches_networkx():
+    g = datasets.erdos_renyi(12, 2.0, seed=4)
+    b = programs.bc(dmax=14)
+    db = b.make_db(g)
+    o, _ = run_program(b.original, db)
+    p, _ = run_program(b.optimized, db)
+    ref = np.array([v for _, v in sorted(
+        nx.betweenness_centrality(_nx_digraph(g),
+                                  normalized=False).items())])
+    assert values_close(o, ref)
+    assert values_close(p, ref)
+
+
+@pytest.mark.parametrize("deep", [False, True])
+def test_mlm_matches_subtree_sums(deep):
+    g = (datasets.decay_tree if deep else datasets.random_recursive_tree)(
+        25, seed=5)
+    b = programs.mlm()
+    db = b.make_db(g)
+    o, _ = run_program(b.original, db)
+    p, _ = run_program(b.optimized, db)
+    # oracle: sum of ids in each subtree
+    children = {i: [] for i in range(g.n)}
+    for u, v in g.edges:
+        children[u].append(v)
+
+    def subtree(v):
+        return v + sum(subtree(c) for c in children[v])
+
+    want = np.array([subtree(v) for v in range(g.n)], np.float64)
+    assert values_close(o, p)
+    assert values_close(np.asarray(p, np.float64), want)
+
+
+def test_radius_matches_heights():
+    g = datasets.random_recursive_tree(20, seed=6)
+    b = programs.radius(dmax=24)
+    db = b.make_db(g)
+    o, _ = run_program(b.original, db)
+    p, _ = run_program(b.optimized, db)
+    children = {i: [] for i in range(g.n)}
+    for u, v in g.edges:
+        children[u].append(v)
+
+    def height(v):
+        return 0 if not children[v] else 1 + max(height(c)
+                                                 for c in children[v])
+
+    want = np.array([height(v) for v in range(g.n)], np.float32)
+    assert values_close(o, p)
+    assert values_close(np.asarray(p), want)
+
+
+def test_apsp100_cap():
+    g = datasets.erdos_renyi(14, 2.0, seed=7, weighted=True, wmax=4)
+    b = programs.apsp100(cap=6.0)
+    db = b.make_db(g)
+    o, _ = run_program(b.original, db)
+    p, _ = run_program(b.optimized, db)
+    assert values_close(o, p)
+    assert float(np.asarray(p)[np.isfinite(np.asarray(p))].max()) <= 6.0
+
+
+def test_gsn_mode_matches_naive():
+    g = datasets.erdos_renyi(16, 2.0, seed=8)
+    for mk in (programs.cc, programs.bm):
+        b = mk()
+        db = b.make_db(g)
+        nav, s1 = run_program(b.optimized, db, mode="naive")
+        gsn, s2 = run_program(b.optimized, db, mode="seminaive")
+        assert values_close(nav, gsn), b.name

@@ -1,0 +1,86 @@
+"""Property tests: semiring axioms (paper Sec. 2) on every value space."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import semiring as sr_mod
+
+SEMIRINGS = ["bool", "trop", "maxplus", "nat", "real"]
+
+
+def _values(sr_name):
+    pool = sr_mod.np_value_pool(sr_mod.get(sr_name, lib="np"))
+    return st.sampled_from(list(pool))
+
+
+@pytest.mark.parametrize("name", SEMIRINGS)
+@settings(max_examples=60, deadline=None)
+@given(data=st.data())
+def test_semiring_axioms(name, data):
+    sr = sr_mod.get(name, lib="np")
+    a = data.draw(_values(name))
+    b = data.draw(_values(name))
+    c = data.draw(_values(name))
+    # ⊕ commutative + associative, identity 0̄
+    assert _eq(sr.add(a, b), sr.add(b, a))
+    assert _eq(sr.add(sr.add(a, b), c), sr.add(a, sr.add(b, c)))
+    assert _eq(sr.add(a, np.asarray(sr.zero, sr.dtype)), a)
+    # ⊗ commutative + associative, identity 1̄
+    assert _eq(sr.mul(a, b), sr.mul(b, a))
+    assert _eq(sr.mul(sr.mul(a, b), c), sr.mul(a, sr.mul(b, c)))
+    assert _eq(sr.mul(a, np.asarray(sr.one, sr.dtype)), a)
+    # distributivity  a⊗(b⊕c) = a⊗b ⊕ a⊗c
+    assert _eq(sr.mul(a, sr.add(b, c)), sr.add(sr.mul(a, b), sr.mul(a, c)))
+    if name in ("bool", "trop", "nat"):  # true semirings annihilate
+        assert _eq(sr.mul(a, np.asarray(sr.zero, sr.dtype)),
+                   np.asarray(sr.zero, sr.dtype))
+    if sr.idempotent:
+        assert _eq(sr.add(a, a), a)
+
+
+@pytest.mark.parametrize("name", ["bool", "trop", "maxplus"])
+@settings(max_examples=60, deadline=None)
+@given(data=st.data())
+def test_minus_is_lattice_difference(name, data):
+    """b ⊖ a is the least c with b ≤ a ⊕ c  (Sec. 3.1 GSN)."""
+    sr = sr_mod.get(name, lib="np")
+    a = data.draw(_values(name))
+    b = data.draw(_values(name))
+    d = sr.minus(b, a)
+    # a ⊕ (b ⊖ a) = a ⊕ b   (recovers the join)
+    assert _eq(sr.add(a, d), sr.add(a, b))
+
+
+@pytest.mark.parametrize("name", SEMIRINGS)
+def test_cast_operator(name):
+    sr = sr_mod.get(name, lib="np")
+    if name == "bool":
+        return
+    out = sr.from_bool(np.array([True, False]))
+    assert out[0] == np.asarray(sr.one, sr.dtype)
+    assert _eq(out[1], np.asarray(sr.zero, sr.dtype))
+
+
+def test_jnp_and_np_twins_agree():
+    import jax.numpy as jnp
+    for name in SEMIRINGS:
+        j = sr_mod.get(name, lib="jnp")
+        n = sr_mod.get(name, lib="np")
+        pool = sr_mod.np_value_pool(n)
+        a, b = pool[:2], pool[1:3]
+        assert values_equalish(np.asarray(j.add(jnp.asarray(a), jnp.asarray(b))),
+                               n.add(a, b))
+        assert values_equalish(np.asarray(j.mul(jnp.asarray(a), jnp.asarray(b))),
+                               n.mul(a, b))
+
+
+def values_equalish(x, y):
+    x, y = np.asarray(x), np.asarray(y)
+    return bool(np.all((x == y) | (np.isnan(x.astype(float)) &
+                                   np.isnan(y.astype(float)))))
+
+
+def _eq(x, y):
+    x, y = np.asarray(x), np.asarray(y)
+    return bool(np.all((x == y)))

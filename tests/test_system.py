@@ -1,0 +1,83 @@
+"""End-to-end behaviour tests: optimize → execute → observe the speedup,
+GSN pipeline, and the full training loop with checkpoint-resume."""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import fgh, verify
+from repro.core.program import run_program
+from repro.datalog import datasets, programs
+from helpers import values_close
+
+
+def test_quickstart_cc_speedup():
+    """Fig. 1 end-to-end: synthesize H for CC, run both, same answer, and
+    the optimized program touches O(n) state instead of O(n²)."""
+    b = programs.cc()
+    task = verify.task_from_program(b.original, ["E", "V"])
+    rep = fgh.optimize(task, rng=np.random.default_rng(0))
+    assert rep.ok and rep.method == "rule"
+
+    g = datasets.powerlaw(400, m_attach=3, seed=0)
+    db = b.make_db(g)
+
+    t0 = time.perf_counter()
+    o, s_orig = run_program(b.original, db)
+    t_orig = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    p, s_opt = run_program(rep.program, db)
+    t_opt = time.perf_counter() - t0
+    assert values_close(np.asarray(o), np.asarray(p))
+    # O(n²) TC state vs O(n) label vector: the optimized form must win
+    # decisively on a 400-node graph (paper reports 1-4 orders)
+    assert t_opt < t_orig, (t_orig, t_opt)
+
+
+def test_invariant_report_matches_paper_fig10():
+    """Fig. 10: BM/R/MLM need invariants (R/MLM via Γ-constrained
+    verification in our system), CC/SSSP don't."""
+    from repro.core import invariants as inv_mod
+    b = programs.bm()
+    task = verify.task_from_program(b.original, ["E", "V"])
+    invs, stats = inv_mod.infer_invariants(task)
+    assert len(invs) >= 1
+    assert stats["time_s"] < 30
+
+
+def test_train_loop_learns_and_resumes(tmp_path):
+    from repro.launch.train import train
+    # phase 1: train 30 steps with checkpointing
+    _, losses1 = train("xlstm-125m", steps=30, batch=4, seq=64,
+                       ckpt_dir=str(tmp_path), log_every=100)
+    assert np.isfinite(losses1).all()
+    # loss must have moved down on the structured synthetic stream
+    assert min(losses1[-5:]) < losses1[0]
+    # phase 2: resume — continues from step >0 (fewer new steps run)
+    _, losses2 = train("xlstm-125m", steps=40, batch=4, seq=64,
+                       ckpt_dir=str(tmp_path), log_every=100)
+    assert len(losses2) <= 40 - 25  # resumed near step 30
+
+
+def test_serving_loop_emits_tokens():
+    from repro.launch.serve import Request, serve_batch
+    rng = np.random.default_rng(0)
+    reqs = [Request(rng.integers(0, 500, 16, dtype=np.int32), max_new=8)
+            for _ in range(3)]
+    stats = serve_batch("minicpm-2b", reqs, smoke=True, t_max=64)
+    assert all(len(r.out) == 8 for r in reqs)
+    assert stats["tok_per_s"] > 0
+
+
+def test_gsn_speedup_mechanics():
+    """GSN converges to the same fixpoint with a Δ-driven loop."""
+    b = programs.sssp(a=0, wmax=4, dmax=32)
+    g = datasets.erdos_renyi(24, 2.5, seed=1, weighted=True, wmax=4)
+    db = b.make_db(g)
+    task = verify.task_from_program(b.original, ["E3"])
+    rep = fgh.optimize(task, rng=np.random.default_rng(0))
+    assert rep.ok
+    nav, _ = run_program(rep.program, db, mode="naive")
+    gsn, _ = run_program(rep.program, db, mode="seminaive")
+    assert values_close(np.asarray(nav), np.asarray(gsn))
