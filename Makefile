@@ -1,0 +1,24 @@
+# Tier-1 verification and benchmark entry points.
+#
+#   make test        — fast tier-1 suite (slow-marked tests excluded)
+#   make test-all    — everything, including AOT dry-run compiles
+#   make bench-smoke — small-size pass over the benchmark drivers
+#   make bench-sparse— dense-vs-sparse scaling acceptance run
+
+PY      ?= python
+PYPATH  := src
+
+test:
+	PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q
+
+test-all:
+	PYTHONPATH=$(PYPATH) $(PY) -m pytest -q -m "slow or not slow"
+
+bench-smoke:
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.sparse_scaling --sizes 256,512 --big 2000
+	PYTHONPATH=$(PYPATH) $(PY) -c "from benchmarks import kernel_bench; kernel_bench.run(sizes=(128,), semirings=('bool', 'trop'))"
+
+bench-sparse:
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.sparse_scaling
+
+.PHONY: test test-all bench-smoke bench-sparse

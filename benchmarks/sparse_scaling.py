@@ -1,0 +1,104 @@
+"""Dense vs. sparse scaling over the BM/TC family (DESIGN.md §2).
+
+Single-source reachability (the FGH-optimized BM program) on power-law
+graphs, evaluated three ways:
+
+* ``dense``     — the dense engine (`run_program`, semi-naive): O(n)
+  state but O(n²) adjacency and per-iteration contraction;
+* ``sparse``    — same program with E stored as a COO SparseRelation:
+  the engine routes the join through SpMV (O(nnz) per iteration);
+* ``frontier``  — the sparse worklist runner
+  (`sparse_seminaive_fixpoint`, host mode): total work O(nnz · depth).
+
+At the small sizes all three must agree exactly; beyond
+``--dense-limit`` the n×n adjacency is unallocatable and only the sparse
+paths run — a 50k-vertex graph completes in seconds on CPU.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.sparse_scaling
+  PYTHONPATH=src python -m benchmarks.sparse_scaling --sizes 512,2048 --big 50000
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import engine
+from repro.core.program import run_program
+from repro.datalog import datasets, programs
+from repro.sparse.fixpoint import sparse_seminaive_fixpoint_stats
+
+
+def _db(bench, n, edges_rel, dense_e=None):
+    rels = {"E": dense_e if dense_e is not None else edges_rel,
+            "V": jnp.ones((n,), bool)}
+    return engine.Database(bench.original.schema, {"id": n}, rels)
+
+
+def run(sizes=(512, 2048), big=50_000, dense_limit=8192, seed=1,
+        iters=2):
+    b = programs.bm(a=0)
+    rows = []
+    for n in [*sizes, big]:
+        g = datasets.powerlaw(n, 4, seed=seed)
+        rel = g.sparse_adjacency()
+        init = np.zeros(n, bool)
+        init[0] = True
+
+        t_fr = timeit(lambda: sparse_seminaive_fixpoint_stats(
+            rel, init, mode="frontier")[0], iters=iters)
+        y_fr, it_fr, stats = sparse_seminaive_fixpoint_stats(
+            rel, init, mode="frontier")
+        emit(f"sparse_scaling/frontier/n{n}", t_fr,
+             f"iters={it_fr} nnz={int(np.asarray(rel.nnz))} "
+             f"edges_expanded={stats.total_edges}")
+
+        db_sp = _db(b, n, rel)
+        t_sp = timeit(lambda: run_program(b.optimized, db_sp,
+                                          mode="seminaive")[0],
+                      iters=iters)
+        y_sp, _ = run_program(b.optimized, db_sp, mode="seminaive")
+        emit(f"sparse_scaling/sparse/n{n}", t_sp, "")
+        assert np.array_equal(np.asarray(y_sp), np.asarray(y_fr)), \
+            f"sparse engine vs frontier mismatch at n={n}"
+
+        if n <= dense_limit:
+            db_d = _db(b, n, None, dense_e=g.adjacency())
+            t_d = timeit(lambda: run_program(b.optimized, db_d,
+                                             mode="seminaive")[0],
+                         iters=iters)
+            y_d, _ = run_program(b.optimized, db_d, mode="seminaive")
+            assert np.array_equal(np.asarray(y_d), np.asarray(y_sp)), \
+                f"dense vs sparse mismatch at n={n}"
+            emit(f"sparse_scaling/dense/n{n}", t_d,
+                 f"speedup_sparse={t_d / max(t_sp, 1e-9):.1f}x "
+                 f"speedup_frontier={t_d / max(t_fr, 1e-9):.1f}x")
+            rows.append((n, t_d, t_sp, t_fr))
+        else:
+            emit(f"sparse_scaling/dense/n{n}", float("nan"),
+                 "skipped: n^2 adjacency unallocatable")
+            rows.append((n, None, t_sp, t_fr))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="512,2048",
+                    help="comma-separated sizes for the dense-vs-sparse "
+                         "agreement points")
+    ap.add_argument("--big", type=int, default=50_000,
+                    help="sparse-only size (dense cannot allocate)")
+    ap.add_argument("--dense-limit", type=int, default=8192)
+    ap.add_argument("--seed", type=int, default=1)
+    args = ap.parse_args()
+    sizes = tuple(int(s) for s in args.sizes.split(",") if s)
+    run(sizes=sizes, big=args.big, dense_limit=args.dense_limit,
+        seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

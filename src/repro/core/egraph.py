@@ -91,6 +91,8 @@ class EGraph:
                 if cid not in self.classes:
                     continue
                 for node in list(self.classes[cid]):
+                    if cid not in self.classes:
+                        break  # a merge below absorbed cid into another class
                     canon = self.canonicalize(node)
                     self.classes[cid].discard(node)
                     self.classes[cid].add(canon)

@@ -40,7 +40,15 @@ def _xp(backend: str):
 
 @dataclasses.dataclass
 class Database:
-    """Dense EDB/IDB storage: name -> array, plus sort domain sizes."""
+    """EDB/IDB storage: name -> S-relation, plus sort domain sizes.
+
+    A relation is either a dense array or a
+    :class:`repro.sparse.coo.SparseRelation`; the per-relation storage
+    tag (``storage_of``, DESIGN.md §2) is derived from the stored value
+    so it can never go stale.  The evaluator routes sparse relations
+    through the SpMV/SpMM contraction paths and densifies only where a
+    plan step genuinely needs the dense form.
+    """
 
     schema: ir.Schema
     domains: dict[str, int]
@@ -53,6 +61,42 @@ class Database:
         rels = dict(self.relations)
         rels.update(extra)
         return Database(self.schema, self.domains, rels)
+
+    # -- storage backends ---------------------------------------------------
+    def storage_of(self, name: str) -> str:
+        from repro.sparse.coo import SparseRelation
+        if isinstance(self.relations.get(name), SparseRelation):
+            return "sparse"
+        return "dense"
+
+    def with_storage(self, name: str, backend: str, *,
+                     capacity: int | None = None) -> "Database":
+        """Convert one relation to the requested backend."""
+        from repro.sparse.coo import SparseRelation
+        arr = self.relations[name]
+        if backend == "sparse" and not isinstance(arr, SparseRelation):
+            arr = SparseRelation.from_dense(
+                arr, self.schema[name].semiring, capacity=capacity)
+        elif backend == "dense" and isinstance(arr, SparseRelation):
+            arr = arr.to_dense()
+        rels = dict(self.relations)
+        rels[name] = arr
+        return Database(self.schema, self.domains, rels)
+
+    def adapt(self, names=None) -> "Database":
+        """Adaptive density switch: re-home each relation per the
+        hysteresis thresholds in :mod:`repro.sparse.adaptive`."""
+        from repro.sparse import adaptive
+        rels = dict(self.relations)
+        for name in (names if names is not None else list(rels)):
+            rels[name] = adaptive.adapt_value(rels[name],
+                                              self.schema[name].semiring)
+        return Database(self.schema, self.domains, rels)
+
+    def density(self, name: str) -> float:
+        from repro.sparse import adaptive
+        return adaptive.density(self.relations[name],
+                                self.schema[name].semiring)
 
 
 # --------------------------------------------------------------------------
@@ -106,11 +150,30 @@ class _Factor:
     vars: tuple[str, ...]
     tensor: object
 
+    @property
+    def is_sparse(self) -> bool:
+        from repro.sparse.coo import SparseRelation
+        return isinstance(self.tensor, SparseRelation)
+
+
+def _densify(t):
+    from repro.sparse.coo import SparseRelation
+    return t.to_dense() if isinstance(t, SparseRelation) else t
+
 
 def _rel_factor(a: ir.RelAtom, db: Database, target: sr_mod.Semiring,
                 xp) -> _Factor:
     arr = db.relations[a.name]
     schema = db.schema[a.name]
+    from repro.sparse.coo import SparseRelation
+    if isinstance(arr, SparseRelation):
+        vars_only = [x for x in a.args if not isinstance(x, ir.C)]
+        plain = (len(set(vars_only)) == len(a.args) and not a.neg
+                 and arr.semiring == target.name and xp is not np)
+        if plain and arr.arity == 2:
+            # stays sparse: consumed by the SpMV/SpMM contraction paths
+            return _Factor(tuple(vars_only), arr)
+        arr = arr.to_dense()  # constants/diagonals/negation/casts: dense
     # index out constant arguments (each collapses one axis)
     vars_out: list[str] = []
     axis = 0
@@ -239,6 +302,26 @@ def _np_matmul(sr, a, b):
     return red(a[:, :, None] + b[None, :, :], axis=1)
 
 
+def _sparse_matmul_path(sr, f1: _Factor, f2: _Factor, k: str) -> _Factor:
+    """Sparse×dense (or dense×sparse) contraction over the single shared
+    variable ``k`` via SpMV/SpMM — O(nnz) instead of O(n²)."""
+    from repro.sparse import contract
+    sp, dn = (f1, f2) if f1.is_sparse else (f2, f1)
+    rel = sp.tensor
+    k_ax = sp.vars.index(k)
+    out_var = [v for v in sp.vars if v != k]
+    dn_vars = [v for v in dn.vars if v != k]
+    dense = dn.tensor
+    if dense.ndim == 1:
+        out = contract.spmv(rel, dense, transpose=(k_ax == 0))
+        return _Factor(tuple(out_var), out)
+    # dense matrix: contract k along its first axis
+    if dn.vars[0] != k:
+        dense = dense.T
+    out = contract.spmm(rel, dense, transpose=(k_ax == 0))
+    return _Factor(tuple(out_var + dn_vars), out)
+
+
 def _matmul_path(sr, f1: _Factor, f2: _Factor, elim: set[str],
                  xp) -> _Factor | None:
     """(i?,k) x (k,j?) -> (i?,j?) contraction via semiring matmul."""
@@ -254,6 +337,23 @@ def _matmul_path(sr, f1: _Factor, f2: _Factor, elim: set[str],
     bvars = [v for v in b.vars if v != k]
     if set(avars) & set(bvars):
         return None  # shared non-contracted var: not a plain matmul
+    if a.is_sparse or b.is_sparse:
+        if a.is_sparse and b.is_sparse:
+            if a.tensor.lib == "np" and b.tensor.lib == "np":
+                from repro.sparse import contract
+                # align as (i,k) x (k,j): sparse join on k (host path)
+                sa = a.tensor if a.vars[-1] == k else a.tensor.transpose()
+                sb = b.tensor if b.vars[0] == k else b.tensor.transpose()
+                merged = contract.spmspm(sa, sb)
+                return _Factor(tuple(avars + bvars), merged.to_dense())
+            # staged path: output nnz is data-dependent — densify the
+            # operand with fewer stored tuples and keep the other
+            # side's SpMM (capacity is the static nnz bound)
+            small, big = ((a, b) if a.tensor.capacity
+                          <= b.tensor.capacity else (b, a))
+            small = _Factor(small.vars, _densify(small.tensor))
+            return _sparse_matmul_path(sr, big, small, k)
+        return _sparse_matmul_path(sr, a, b, k)
     at = a.tensor if a.vars[-1] == k else a.tensor.T
     bt = b.tensor if b.vars[0] == k else b.tensor.T
     a2 = at.reshape(-1, at.shape[-1]) if at.ndim == 2 else at.reshape(1, -1)
@@ -274,6 +374,11 @@ def _contract_pair(sr, f1: _Factor, f2: _Factor, elim: set[str],
     mm = _matmul_path(sr, f1, f2, elim, xp)
     if mm is not None:
         return mm
+    # general broadcast path needs dense operands
+    if f1.is_sparse:
+        f1 = _Factor(f1.vars, _densify(f1.tensor))
+    if f2.is_sparse:
+        f2 = _Factor(f2.vars, _densify(f2.tensor))
     out_vars = tuple([v for v in f1.vars if v not in elim] +
                      [v for v in f2.vars if v not in elim and v not in f1.vars])
     order = out_vars + tuple(sorted(elim))
@@ -344,6 +449,15 @@ def eval_term(t: ir.Term, head: tuple[str, ...], db: Database,
         for i, f in enumerate(factors):
             local = [v for v in f.vars if v not in keep and occurrences(v) == 1]
             if local:
+                if f.is_sparse:
+                    # ⊕ over an axis = SpMV against the all-1̄ vector
+                    from repro.sparse import contract as sp_contract
+                    ax = f.vars.index(local[0])
+                    ones = sr.ones((f.tensor.shape[ax],))
+                    nv = tuple(v for v in f.vars if v != local[0])
+                    factors[i] = _Factor(nv, sp_contract.spmv(
+                        f.tensor, ones, transpose=(ax == 0)))
+                    return True
                 axes = tuple(f.vars.index(v) for v in local)
                 nv = tuple(v for v in f.vars if v not in local)
                 factors[i] = _Factor(nv, sr.add_reduce(f.tensor, axis=axes))
@@ -385,6 +499,8 @@ def eval_term(t: ir.Term, head: tuple[str, ...], db: Database,
     if not factors:
         return xp.broadcast_to(xp.asarray(scalar, sr.dtype), out_shape)
     f = factors[0]
+    if f.is_sparse:  # single uncontracted sparse atom: materialize
+        f = _Factor(f.vars, _densify(f.tensor))
     rem = tuple(v for v in f.vars if v not in keep)
     if rem:
         axes = tuple(f.vars.index(v) for v in rem)

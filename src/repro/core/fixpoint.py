@@ -96,6 +96,19 @@ def seminaive_fixpoint(ico: Callable[[State], State],
     return y, iters
 
 
+def sparse_seminaive_fixpoint(edges, init, *, max_iters: int = 10_000,
+                              mode: str = "auto"):
+    """Frontier-based GSN over a sparse edge relation (DESIGN.md §2).
+
+    Forwarded from :mod:`repro.sparse.fixpoint`: Δ is a sparse worklist
+    of changed tuples; per-iteration cost is O(nnz) (staged mode) or
+    O(Σ frontier degrees) (host worklist mode) instead of the dense
+    runners' O(n²).
+    """
+    from repro.sparse.fixpoint import sparse_seminaive_fixpoint as impl
+    return impl(edges, init, max_iters=max_iters, mode=mode)
+
+
 def host_fixpoint(ico: Callable[[State], State], x0: State, *,
                   max_iters: int = 10_000) -> tuple[State, int]:
     """Python-loop variant (per-iteration visibility; used by benchmarks)."""

@@ -236,6 +236,24 @@ def get(name: str | Semiring, lib: str = "jnp") -> Semiring:
         raise KeyError(f"unknown semiring {name!r}; have {sorted(SEMIRINGS)}")
 
 
+def scatter_op(sr_name: str, at):
+    """The ⊕-combining scatter for a jnp ``x.at[idx]`` handle — the one
+    table shared by sparse materialization, contraction, and the kernel
+    oracle (⊕ = max/min/add per semiring)."""
+    return {"bool": at.max, "trop": at.min, "maxplus": at.max,
+            "nat": at.add, "real": at.add}[sr_name]
+
+
+#: numpy ufuncs whose ``.at`` performs the same ⊕-combining scatter
+NP_COMBINE = {
+    "bool": np.logical_or,
+    "trop": np.minimum,
+    "maxplus": np.maximum,
+    "nat": np.add,
+    "real": np.add,
+}
+
+
 def np_value_pool(sr: Semiring, *, small: bool = True) -> np.ndarray:
     """A small pool of semiring values for bounded-model verification."""
     if sr.name == "bool":

@@ -32,6 +32,29 @@ class Graph:
             a |= a.T
         return jnp.asarray(a)
 
+    def sparse_adjacency(self, symmetric: bool = False, *,
+                         semiring: str = "bool",
+                         capacity: int | None = None):
+        """E as a COO SparseRelation — never materializes n × n, so
+        SNAP-scale graphs (50k–500k vertices) stay allocatable.
+
+        ``semiring="bool"`` stores 1̄ per edge; ``"trop"``/``"maxplus"``
+        store the edge weight (1 when unweighted) as the value.
+        """
+        from repro.sparse.coo import SparseRelation
+        edges = self.edges
+        if symmetric:
+            edges = np.concatenate([edges, edges[:, ::-1]])
+        if semiring == "bool":
+            vals = np.ones(len(edges), bool)
+        else:
+            w = (self.weights if self.weights is not None
+                 else np.ones(len(self.edges), np.int64))
+            vals = np.asarray(np.concatenate([w, w]) if symmetric else w,
+                              np.float32)
+        return SparseRelation.from_coo(edges, vals, (self.n, self.n),
+                                       semiring, capacity=capacity)
+
     def weighted_adjacency(self, wmax: int) -> jnp.ndarray:
         """E(x, y, w) as a dense boolean (n, n, wmax) tensor."""
         w = self.weights if self.weights is not None else \
@@ -56,12 +79,66 @@ def erdos_renyi(n: int, avg_deg: float, seed: int = 0,
 
 
 def powerlaw(n: int, m_attach: int = 4, seed: int = 0) -> Graph:
-    """Barabási–Albert stand-in for the SNAP social graphs."""
-    import networkx as nx
-    g = nx.barabasi_albert_graph(n, m_attach, seed=seed)
-    edges = np.array(g.edges(), np.int64)
+    """Barabási–Albert stand-in for the SNAP social graphs.
+
+    Uses networkx when available; otherwise a native preferential-
+    attachment generator (same repeated-nodes algorithm), so 50k–500k
+    vertex graphs are buildable in this container.
+    """
+    try:
+        import networkx as nx
+    except ImportError:
+        edges = _ba_edges(n, m_attach, np.random.default_rng(seed))
+    else:
+        g = nx.barabasi_albert_graph(n, m_attach, seed=seed)
+        edges = np.array(g.edges(), np.int64)
     edges = np.concatenate([edges, edges[:, ::-1]])  # directed both ways
     return Graph(n, edges)
+
+
+def _ba_edges(n: int, m: int, rng: np.random.Generator) -> np.ndarray:
+    """Preferential attachment via the repeated-nodes trick: each new
+    vertex draws ``m`` distinct targets ∝ degree from the flat endpoint
+    list.  O(n·m); no networkx dependency."""
+    assert 1 <= m < n, (n, m)
+    src, dst = [], []
+    repeated: list[int] = []
+    targets = list(range(m))
+    for v in range(m, n):
+        src.extend([v] * len(targets))
+        dst.extend(targets)
+        repeated.extend(targets)
+        repeated.extend([v] * m)
+        picks: set[int] = set()
+        while len(picks) < m:
+            take = rng.integers(0, len(repeated),
+                                size=2 * (m - len(picks)))
+            picks.update(repeated[t] for t in take)
+            while len(picks) > m:
+                picks.pop()
+        targets = list(picks)
+    return np.stack([np.asarray(src, np.int64),
+                     np.asarray(dst, np.int64)], axis=1)
+
+
+def erdos_renyi_sparse(n: int, avg_deg: float, seed: int = 0,
+                       weighted: bool = False, wmax: int = 8) -> Graph:
+    """G(n, p) by direct edge sampling — O(m) memory instead of the n×n
+    Bernoulli mask of :func:`erdos_renyi`, so 50k–500k vertices fit.
+
+    Draws ``M ~ Binomial(n(n−1), p)`` then samples M ordered pairs,
+    rejecting self-loops and duplicates (indistinguishable from G(n, p)
+    at the sparse densities this is meant for).
+    """
+    rng = np.random.default_rng(seed)
+    p = min(1.0, avg_deg / max(1, n - 1))
+    m = int(rng.binomial(n * (n - 1), p))
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    edges = np.unique(np.stack([src[keep], dst[keep]], axis=1), axis=0)
+    weights = rng.integers(1, wmax, len(edges)) if weighted else None
+    return Graph(n, edges, weights)
 
 
 def random_recursive_tree(n: int, seed: int = 0) -> Graph:

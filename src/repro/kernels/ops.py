@@ -36,6 +36,18 @@ def semiring_matmul(sr, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return ref.semiring_matmul_ref(sr, a, b)
 
 
+def semiring_segment_reduce(sr, vals: jnp.ndarray,
+                            segment_ids: jnp.ndarray,
+                            num_segments: int) -> jnp.ndarray:
+    """``out[s] = ⊕ vals[i]`` over ``segment_ids[i] = s`` (sparse scatter)."""
+    if _use_pallas():
+        from repro.kernels.coo_segment import segment_reduce_pallas
+        return segment_reduce_pallas(vals, segment_ids, num_segments,
+                                     sr_name=sr.name,
+                                     interpret=_FORCE_INTERPRET)
+    return ref.segment_reduce_ref(sr, vals, segment_ids, num_segments)
+
+
 def flash_attention(q, k, v, *, causal=True, window=None, chunk=None,
                     q_offset=0):
     """GQA flash attention (forward); see ref.attention_ref for semantics."""

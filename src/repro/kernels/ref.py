@@ -48,6 +48,19 @@ def semiring_matmul_ref(sr, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return out.reshape(-1, n)[:m]
 
 
+def segment_reduce_ref(sr, vals: jnp.ndarray, segment_ids: jnp.ndarray,
+                       num_segments: int) -> jnp.ndarray:
+    """``out[s] = ⊕_{i: ids[i]=s} vals[i]`` with ⊕ from semiring ``sr``.
+
+    The scatter-reduce behind sparse contraction (SpMV destinations).
+    Out-of-range ids (the COO padding sentinel) are dropped.
+    """
+    from repro.core import semiring as sr_mod
+    base = jnp.full((num_segments,), sr.zero, sr.dtype)
+    return sr_mod.scatter_op(sr.name, base.at[segment_ids])(
+        vals, mode="drop")
+
+
 # --------------------------------------------------------------------------
 # Flash attention
 # --------------------------------------------------------------------------

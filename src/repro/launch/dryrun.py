@@ -159,6 +159,9 @@ def run_cell(arch: str, shape: str, mesh_kind: str, **kw) -> dict:
             t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        # jax returns one properties dict, or (older) a per-program list
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
         hlo_text = compiled.as_text()
         walked = hlo_cost.analyze(hlo_text)
         row.update(

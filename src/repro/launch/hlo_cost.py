@@ -124,10 +124,12 @@ def _operand_names(args: str) -> list[str]:
     names = []
     depth = 0
     cur = ""
+    # shapes embed commas inside [...] and layouts inside {...}: only a
+    # comma at zero bracket depth separates operands
     for ch in args:
-        if ch == "(":
+        if ch in "([{":
             depth += 1
-        elif ch == ")":
+        elif ch in ")]}":
             depth -= 1
         if ch == "," and depth == 0:
             names.append(cur.strip())
@@ -215,8 +217,13 @@ def analyze(text: str) -> Cost:
             if oc == "while":
                 cond = _COND_RE.search(op.line)
                 body = _CALLS_RE.search(op.line)
-                trips = _trip_count(comps.get(cond.group(1), [])) if cond \
-                    else 1
+                known = re.search(
+                    r'known_trip_count[":{\s]+n[":\s]+"?(\d+)', op.line)
+                if known:
+                    trips = int(known.group(1))
+                else:
+                    trips = _trip_count(comps.get(cond.group(1), [])) \
+                        if cond else 1
                 if body:
                     total.add(comp_cost(body.group(1), top_level), trips)
                 continue

@@ -1,0 +1,20 @@
+"""Sparse S-relation subsystem (DESIGN.md §2).
+
+COO semiring tensors with fixed-capacity padded buffers (jit/pjit
+compatible), sparse semiring contraction (SpMV / SpMM / SpMSpM), an
+adaptive density-based densify/sparsify switch, and a frontier-based
+semi-naive fixpoint runner whose Δ is a sparse worklist of changed
+tuples rather than a dense masked tensor.
+"""
+
+from repro.sparse.adaptive import (DENSIFY_ABOVE, SPARSIFY_BELOW,
+                                   adapt_value, density)
+from repro.sparse.contract import spmm, spmspm, spmv, vspm
+from repro.sparse.coo import SparseRelation
+from repro.sparse.fixpoint import sparse_seminaive_fixpoint
+
+__all__ = [
+    "SparseRelation", "spmv", "vspm", "spmm", "spmspm",
+    "sparse_seminaive_fixpoint", "density", "adapt_value",
+    "SPARSIFY_BELOW", "DENSIFY_ABOVE",
+]

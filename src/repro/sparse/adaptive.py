@@ -1,0 +1,56 @@
+"""Adaptive density-based densify/sparsify switch (DESIGN.md §2).
+
+Real recursive workloads drift: an EDB adjacency is ~10⁻⁴ dense on a
+SNAP-scale graph, while a transitive closure on a small dense block
+saturates.  The engine therefore tags each relation's storage and flips
+representation at hysteresis thresholds:
+
+* below :data:`SPARSIFY_BELOW` live fraction → COO (``O(nnz)`` kernels);
+* above :data:`DENSIFY_ABOVE` → dense tensors (MXU-shaped contraction);
+* in between → keep the current representation (avoids thrashing when a
+  fixpoint frontier hovers around the boundary).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import semiring as sr_mod
+from repro.sparse.coo import SparseRelation
+
+SPARSIFY_BELOW = 0.05
+DENSIFY_ABOVE = 0.25
+
+#: spare capacity factor when sparsifying, so a growing relation does not
+#: immediately overflow its padded buffer
+CAPACITY_SLACK = 1.5
+
+
+def density(arr, semiring: str) -> float:
+    """Live (non-0̄) fraction of a dense array or SparseRelation (host)."""
+    if isinstance(arr, SparseRelation):
+        return arr.density()
+    sr = sr_mod.get(semiring, lib="np")
+    host = np.asarray(arr)
+    live = host.sum() if semiring == "bool" else (host != sr.zero).sum()
+    return float(live) / (host.size or 1)
+
+
+def adapt_value(arr, semiring: str, *,
+                sparsify_below: float = SPARSIFY_BELOW,
+                densify_above: float = DENSIFY_ABOVE):
+    """Return ``arr`` in the representation its density warrants.
+
+    Host-side (concrete arrays): used between fixpoint strata and by
+    ``Database.adapt``; inside jit the representation is fixed at trace
+    time, which is exactly what static shapes require.
+    """
+    d = density(arr, semiring)
+    if isinstance(arr, SparseRelation):
+        if d > densify_above:
+            return arr.to_dense()
+        return arr
+    if d < sparsify_below and np.asarray(arr).ndim >= 1:
+        cap = max(1, int(d * np.asarray(arr).size * CAPACITY_SLACK) + 1)
+        return SparseRelation.from_dense(arr, semiring, capacity=cap)
+    return arr

@@ -1,0 +1,186 @@
+"""COO semiring tensors with fixed-capacity padded buffers.
+
+A :class:`SparseRelation` stores an S-relation (paper Sec. 2) as a
+coordinate list instead of a dense array: ``coords[(cap, r)]`` holds the
+keys of the non-0̄ tuples, ``values[(cap,)]`` their semiring values.  The
+buffer capacity is **static** so the type is a jax pytree usable under
+``jit``/``pjit``/``lax.while_loop``; the live-tuple count ``nnz`` is a
+traced scalar.  Padding rows are self-neutralizing twice over:
+
+* padded coordinates hold the out-of-range sentinel ``shape[axis]``, so
+  every scatter with ``mode="drop"`` ignores them;
+* padded values hold 0̄, so even a clipped gather contributes the ⊕
+  identity.
+
+Host-side constructors (``from_dense`` / ``from_coo``) run in numpy and
+coalesce duplicate coordinates with ⊕; on-device consumers therefore never
+need data-dependent compaction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import semiring as sr_mod
+
+Array = jnp.ndarray
+
+#: per-semiring combining scatter for materialization (⊕ at duplicate keys)
+_NP_COMBINE = sr_mod.NP_COMBINE
+
+
+def _is_np(x) -> bool:
+    return isinstance(x, np.ndarray)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SparseRelation:
+    """A semiring S-relation in padded COO form.
+
+    ``coords``/``values``/``nnz`` are array leaves (np or jnp); ``shape``
+    and ``semiring`` are static aux data.
+    """
+
+    coords: Array  # (capacity, arity) int32
+    values: Array  # (capacity,) semiring dtype
+    nnz: Array     # () int32 — number of live (non-padding) rows
+    shape: tuple[int, ...]
+    semiring: str
+
+    # -- pytree ------------------------------------------------------------
+    def tree_flatten(self):
+        return (self.coords, self.values, self.nnz), (self.shape,
+                                                      self.semiring)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        coords, values, nnz = children
+        shape, semiring = aux
+        return cls(coords, values, nnz, shape, semiring)
+
+    # -- basics ------------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return int(self.coords.shape[0])
+
+    @property
+    def arity(self) -> int:
+        return int(self.coords.shape[1])
+
+    @property
+    def lib(self) -> str:
+        return "np" if _is_np(self.values) else "jnp"
+
+    def sr(self) -> sr_mod.Semiring:
+        return sr_mod.get(self.semiring, lib=self.lib)
+
+    def density(self) -> float:
+        """Live fraction of the dense key space (host-side)."""
+        total = float(np.prod(self.shape)) or 1.0
+        return float(np.asarray(self.nnz)) / total
+
+    def __repr__(self) -> str:
+        return (f"SparseRelation({self.semiring}{list(self.shape)}, "
+                f"nnz≤{self.capacity}, lib={self.lib})")
+
+    # -- conversions -------------------------------------------------------
+    def to_dense(self):
+        """Materialize as a dense S-relation (⊕-combining duplicates)."""
+        sr = self.sr()
+        if self.lib == "np":
+            out = np.full(self.shape, sr.zero, sr.dtype)
+            k = int(self.nnz)
+            idx = tuple(np.asarray(self.coords[:k]).T)
+            _NP_COMBINE[self.semiring].at(out, idx, np.asarray(
+                self.values[:k]))
+            return out
+        base = jnp.full(self.shape, sr.zero, sr.dtype)
+        idx = tuple(self.coords.T)
+        return sr_mod.scatter_op(self.semiring, base.at[idx])(
+            self.values, mode="drop")
+
+    def as_jnp(self) -> "SparseRelation":
+        return SparseRelation(jnp.asarray(self.coords),
+                              jnp.asarray(self.values),
+                              jnp.asarray(self.nnz, jnp.int32),
+                              self.shape, self.semiring)
+
+    def as_np(self) -> "SparseRelation":
+        return SparseRelation(np.asarray(self.coords),
+                              np.asarray(self.values),
+                              np.asarray(self.nnz, np.int32),
+                              self.shape, self.semiring)
+
+    def transpose(self, axes: tuple[int, ...] | None = None
+                  ) -> "SparseRelation":
+        axes = axes or tuple(reversed(range(self.arity)))
+        xp = np if self.lib == "np" else jnp
+        coords = xp.stack([self.coords[:, a] for a in axes], axis=1)
+        shape = tuple(self.shape[a] for a in axes)
+        return SparseRelation(coords, self.values, self.nnz, shape,
+                              self.semiring)
+
+    # -- constructors ------------------------------------------------------
+    @classmethod
+    def from_coo(cls, coords, values, shape, semiring: str, *,
+                 capacity: int | None = None,
+                 lib: str = "jnp") -> "SparseRelation":
+        """Build from host coordinate/value arrays (coalesces duplicates,
+        drops explicit 0̄ entries, pads to ``capacity``)."""
+        sr = sr_mod.get(semiring, lib="np")
+        coords = np.asarray(coords, np.int64).reshape(-1, len(shape))
+        values = np.asarray(values, sr.dtype).reshape(-1)
+        assert len(coords) == len(values), (coords.shape, values.shape)
+        # coalesce: ⊕-combine duplicate keys
+        if len(coords):
+            uniq, inv = np.unique(coords, axis=0, return_inverse=True)
+            if len(uniq) != len(coords):
+                merged = np.full(len(uniq), sr.zero, sr.dtype)
+                _NP_COMBINE[semiring].at(merged, inv.reshape(-1), values)
+                coords, values = uniq, merged
+        # drop explicit zeros (0̄ tuples are absent by definition)
+        if len(values):
+            live = values != sr.zero if semiring != "bool" else values
+            coords, values = coords[live], values[live]
+        nnz = len(values)
+        cap = capacity if capacity is not None else max(1, nnz)
+        if nnz > cap:
+            raise ValueError(f"nnz {nnz} exceeds capacity {cap}")
+        pad = cap - nnz
+        if pad:
+            sentinel = np.tile(np.asarray(shape, np.int64), (pad, 1))
+            coords = np.concatenate([coords, sentinel])
+            values = np.concatenate(
+                [values, np.full(pad, sr.zero, sr.dtype)])
+        out = cls(coords.astype(np.int32), values,
+                  np.asarray(nnz, np.int32), tuple(shape), semiring)
+        return out if lib == "np" else out.as_jnp()
+
+    @classmethod
+    def from_dense(cls, arr, semiring: str, *,
+                   capacity: int | None = None,
+                   lib: str | None = None) -> "SparseRelation":
+        lib = lib or ("np" if _is_np(arr) else "jnp")
+        sr = sr_mod.get(semiring, lib="np")
+        host = np.asarray(arr)
+        coords = np.argwhere(host if semiring == "bool"
+                             else host != sr.zero)
+        values = host[tuple(coords.T)]
+        return cls.from_coo(coords, values, host.shape, semiring,
+                            capacity=capacity, lib=lib)
+
+    def union(self, other: "SparseRelation", *,
+              capacity: int | None = None) -> "SparseRelation":
+        """⊕-merge two sparse relations (host-side, coalescing)."""
+        assert self.shape == other.shape and self.semiring == other.semiring
+        a, b = self.as_np(), other.as_np()
+        ka, kb = int(a.nnz), int(b.nnz)
+        return SparseRelation.from_coo(
+            np.concatenate([a.coords[:ka], b.coords[:kb]]),
+            np.concatenate([a.values[:ka], b.values[:kb]]),
+            self.shape, self.semiring, capacity=capacity, lib=self.lib)

@@ -1,8 +1,23 @@
-"""Shared test utilities: brute-force SSP oracle + random query generators."""
+"""Shared test utilities: brute-force SSP oracle, random query generators,
+and a minimal fallback for ``hypothesis`` (not installed everywhere).
+
+The shim implements just the strategy surface our property tests use
+(``sampled_from``/``integers``/``one_of``/``builds``/``lists``/``data``)
+with deterministic seeded draws, so the tier-1 suite collects and runs
+without the real library.  Test modules import it as::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from helpers import given, settings, strategies as st
+"""
 
 from __future__ import annotations
 
+import functools
+import inspect
 import itertools
+import zlib
 
 import numpy as np
 
@@ -71,3 +86,106 @@ def values_close(a, b, atol=1e-4):
     if a.dtype == bool:
         return bool((a == b).all())
     return bool(np.allclose(a, b, atol=atol, rtol=1e-4, equal_nan=True))
+
+
+# --------------------------------------------------------------------------
+# Minimal hypothesis fallback (see module docstring)
+# --------------------------------------------------------------------------
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class _DataObject:
+    """Stand-in for ``st.data()``'s draw handle."""
+
+    def __init__(self, rng: np.random.Generator):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy):
+        return strategy.draw(self._rng)
+
+
+class _DataStrategy(_Strategy):
+    def __init__(self):
+        super().__init__(lambda rng: _DataObject(rng))
+
+
+class _Strategies:
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def one_of(*strategies):
+        strategies = list(strategies)
+        return _Strategy(lambda rng: strategies[
+            int(rng.integers(0, len(strategies)))].draw(rng))
+
+    @staticmethod
+    def builds(fn, *strategies):
+        return _Strategy(lambda rng: fn(*(s.draw(rng) for s in strategies)))
+
+    @staticmethod
+    def lists(strategy, min_size=0, max_size=10):
+        def draw(rng):
+            k = int(rng.integers(min_size, max_size + 1))
+            return [strategy.draw(rng) for _ in range(k)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def data():
+        return _DataStrategy()
+
+
+strategies = _Strategies()
+
+
+def settings(max_examples: int = 20, **_ignored):
+    """Attach the example budget to the (already ``given``-wrapped) test."""
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategy_kwargs):
+    """Run the test over ``max_examples`` deterministic random draws."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples", 20)
+            base = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                rng = np.random.default_rng((base + i) % 2**31)
+                drawn = {k: s.draw(rng)
+                         for k, s in strategy_kwargs.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # hide strategy-bound params from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        params = [p for name, p in sig.parameters.items()
+                  if name not in strategy_kwargs]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        return wrapper
+    return deco

@@ -9,6 +9,7 @@ import sys
 import pytest
 
 
+@pytest.mark.slow  # full AOT lower+compile in a 512-device subprocess
 @pytest.mark.parametrize("mesh", ["single", "multi"])
 def test_dryrun_cell_compiles(mesh):
     env = {**os.environ, "PYTHONPATH": "src"}

@@ -1,0 +1,122 @@
+"""Fixpoint-runner agreement: naive, (dense) semi-naive, and the sparse
+frontier runner must compute identical least fixpoints — and identical
+truncated states under ``max_iters`` — on random BM/TC, CC, and SSSP
+instances over the 𝔹 and Trop semirings."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import fixpoint as fx
+from repro.core import semiring as sr_mod
+from repro.datalog import datasets
+from repro.sparse import SparseRelation
+from repro.sparse.fixpoint import sparse_seminaive_fixpoint_stats
+
+
+def _instance(kind: str, seed: int):
+    """Returns (edges: SparseRelation, adj dense, init, semiring name)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(12, 40))
+    g = datasets.erdos_renyi(n, float(rng.uniform(1.0, 3.5)), seed=seed,
+                             weighted=True)
+    if kind == "bm":      # single-source reachability (TC section)
+        adj = np.asarray(g.adjacency())
+        init = np.zeros(n, bool)
+        init[int(rng.integers(0, n))] = True
+        return g.sparse_adjacency(), adj, init, "bool"
+    if kind == "cc":      # connected components: min label propagation
+        adj = np.asarray(g.adjacency(symmetric=True))
+        w = np.where(adj, 0.0, np.inf).astype(np.float32)
+        init = np.arange(n, dtype=np.float32)
+        rel = g.sparse_adjacency(symmetric=True, semiring="trop")
+        rel = SparseRelation(rel.coords, jnp.zeros_like(rel.values),
+                             rel.nnz, rel.shape, rel.semiring)
+        return rel, w, init, "trop"
+    # sssp
+    adj = np.asarray(g.adjacency())
+    w = np.where(adj, 1.0, np.inf).astype(np.float32)
+    w[g.edges[:, 0], g.edges[:, 1]] = g.weights
+    init = np.full(n, np.inf, np.float32)
+    init[int(rng.integers(0, n))] = 0.0
+    return g.sparse_adjacency(semiring="trop"), w, init, "trop"
+
+
+def _dense_runners(w, init, sr_name):
+    sr = sr_mod.get(sr_name)
+    wj, ij = jnp.asarray(w), jnp.asarray(init)
+
+    def a_of(x):  # the linear part: ⊕_z x[z] ⊗ E[z, y]
+        if sr_name == "bool":
+            return jnp.any(x[:, None] & wj, axis=0)
+        return jnp.min(x[:, None] + wj, axis=0)
+
+    def ico(s):
+        return {"X": sr.add(ij, a_of(s["X"]))}
+
+    def dico(s):
+        return {"X": a_of(s["X"])}
+
+    x0 = {"X": jnp.full(init.shape, sr.zero, sr.dtype)}
+    return sr, ico, dico, x0
+
+
+KINDS = ["bm", "cc", "sssp"]
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_runners_agree_at_fixpoint(kind, seed):
+    rel, w, init, sr_name = _instance(kind, seed)
+    sr, ico, dico, x0 = _dense_runners(w, init, sr_name)
+    yn, itn = fx.naive_fixpoint(ico, x0)
+    ys, its = fx.seminaive_fixpoint(ico, dico, x0, {"X": sr})
+    yj, itj = fx.sparse_seminaive_fixpoint(rel, jnp.asarray(init),
+                                           mode="jit")
+    yf, itf, stats = sparse_seminaive_fixpoint_stats(rel, init,
+                                                     mode="frontier")
+    assert np.array_equal(np.asarray(yn["X"]), np.asarray(ys["X"]))
+    assert np.array_equal(np.asarray(ys["X"]), np.asarray(yj))
+    assert np.array_equal(np.asarray(ys["X"]), np.asarray(yf))
+    # GSN runners execute the same number of rounds
+    assert int(its) == int(itj) == itf
+    # the frontier is a worklist: it never expands more than nnz·rounds
+    k = int(np.asarray(rel.nnz))
+    assert stats.total_edges <= k * max(1, itf)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("max_iters", [1, 2, 4])
+def test_max_iters_truncation_parity(kind, max_iters):
+    """Early exit must leave every GSN runner in the same partial state."""
+    rel, w, init, sr_name = _instance(kind, seed=7)
+    sr, ico, dico, x0 = _dense_runners(w, init, sr_name)
+    ys, its = fx.seminaive_fixpoint(ico, dico, x0, {"X": sr},
+                                    max_iters=max_iters)
+    yj, itj = fx.sparse_seminaive_fixpoint(rel, jnp.asarray(init),
+                                           mode="jit",
+                                           max_iters=max_iters)
+    yf, itf, _ = sparse_seminaive_fixpoint_stats(rel, init,
+                                                 mode="frontier",
+                                                 max_iters=max_iters)
+    assert np.array_equal(np.asarray(ys["X"]), np.asarray(yj))
+    assert np.array_equal(np.asarray(ys["X"]), np.asarray(yf))
+    assert int(its) == int(itj) == itf <= max_iters
+
+
+def test_non_lattice_semiring_rejected():
+    rel = SparseRelation.from_coo([[0, 1]], [1.0], (2, 2), "nat")
+    with pytest.raises(ValueError, match="lacks"):
+        fx.sparse_seminaive_fixpoint(rel, jnp.zeros(2))
+
+
+def test_non_square_edges_rejected():
+    """x = init ⊕ x⊗E is only well-formed for square E; both modes must
+    reject rectangular relations identically instead of diverging."""
+    rel = SparseRelation.from_coo([[0, 2], [1, 3]], [True, True], (2, 4),
+                                  "bool")
+    for mode in ("jit", "frontier"):
+        with pytest.raises(ValueError, match="square"):
+            fx.sparse_seminaive_fixpoint(rel, jnp.zeros(4, bool),
+                                         mode=mode)

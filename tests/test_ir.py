@@ -2,7 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal deterministic shim (see helpers.py)
+    from helpers import given, settings, strategies as st
 
 from repro.core import engine, ir
 from repro.core.ir import C, ConstAtom, PredAtom, RelAtom, Term, ValAtom

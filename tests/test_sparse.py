@@ -1,0 +1,203 @@
+"""Sparse S-relation subsystem: COO round-trips, semiring contraction vs
+dense oracles, the Pallas segment-reduce kernel, the adaptive density
+switch, and engine routing of sparse relations."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import engine, semiring as sr_mod
+from repro.datalog import datasets, programs
+from repro.core.program import run_program
+from repro.kernels import ref
+from repro.kernels.coo_segment import segment_reduce_pallas
+from repro.sparse import (SparseRelation, adapt_value, density, spmm,
+                          spmspm, spmv, vspm)
+
+SEMIRINGS = ["bool", "trop", "maxplus", "nat", "real"]
+
+
+def _random_dense(rng, shape, sr_name):
+    sr = sr_mod.get(sr_name, lib="np")
+    if sr_name == "bool":
+        return rng.random(shape) < 0.35
+    a = rng.integers(0, 4, shape).astype(np.float32)
+    a[rng.random(shape) < 0.4] = sr.zero
+    return a
+
+
+@pytest.mark.parametrize("sr_name", SEMIRINGS)
+def test_dense_roundtrip_and_coalesce(sr_name):
+    rng = np.random.default_rng(0)
+    a = _random_dense(rng, (9, 6), sr_name)
+    rel = SparseRelation.from_dense(a, sr_name, capacity=9 * 6)
+    assert np.array_equal(np.asarray(rel.to_dense()), a)
+    assert rel.density() == pytest.approx(density(a, sr_name))
+    # duplicate coordinates must ⊕-coalesce
+    sr = sr_mod.get(sr_name, lib="np")
+    coords = [[1, 2], [1, 2], [0, 0]]
+    vals = np.asarray([sr.one, sr.one, sr.one], sr.dtype)
+    rel2 = SparseRelation.from_coo(coords, vals, (3, 3), sr_name)
+    dense = np.asarray(rel2.to_dense())
+    assert dense[1, 2] == sr.add(np.asarray(sr.one, sr.dtype),
+                                 np.asarray(sr.one, sr.dtype))
+    # overfull buffers are rejected, not silently truncated
+    with pytest.raises(ValueError, match="capacity"):
+        SparseRelation.from_coo([[0, 0], [1, 1]],
+                                np.asarray([sr.one, sr.one], sr.dtype),
+                                (3, 3), sr_name, capacity=1)
+
+
+@pytest.mark.parametrize("sr_name", SEMIRINGS)
+def test_union_matches_dense_add(sr_name):
+    rng = np.random.default_rng(9)
+    sr = sr_mod.get(sr_name, lib="np")
+    a = _random_dense(rng, (7, 7), sr_name)
+    b = _random_dense(rng, (7, 7), sr_name)
+    ra = SparseRelation.from_dense(a, sr_name)
+    rb = SparseRelation.from_dense(b, sr_name)
+    got = ra.union(rb, capacity=7 * 7)
+    assert got.capacity == 7 * 7  # requested headroom is honored
+    np.testing.assert_allclose(
+        np.asarray(got.to_dense()).astype(np.float32),
+        np.asarray(sr.add(a, b), np.float32))
+
+
+@pytest.mark.parametrize("sr_name", SEMIRINGS)
+def test_spmv_vspm_spmm_match_dense(sr_name):
+    rng = np.random.default_rng(1)
+    sr = sr_mod.get(sr_name, lib="np")
+    a = _random_dense(rng, (8, 5), sr_name)
+    rel = SparseRelation.from_dense(a, sr_name, capacity=8 * 5)
+    x = _random_dense(rng, (5,), sr_name)
+    y = _random_dense(rng, (8,), sr_name)
+    b = _random_dense(rng, (5, 3), sr_name)
+
+    want = sr.add_reduce(sr.mul(a, x[None, :]), axis=1)
+    got = np.asarray(spmv(rel, jnp.asarray(x)))
+    np.testing.assert_allclose(got.astype(np.float32),
+                               np.asarray(want, np.float32))
+
+    wantv = sr.add_reduce(sr.mul(a, y[:, None]), axis=0)
+    gotv = np.asarray(vspm(jnp.asarray(y), rel))
+    np.testing.assert_allclose(gotv.astype(np.float32),
+                               np.asarray(wantv, np.float32))
+
+    wantm = np.stack([sr.add_reduce(sr.mul(a, b[:, j][None, :]), axis=1)
+                      for j in range(3)], axis=1)
+    gotm = np.asarray(spmm(rel, jnp.asarray(b)))
+    np.testing.assert_allclose(gotm.astype(np.float32),
+                               wantm.astype(np.float32))
+
+
+@pytest.mark.parametrize("sr_name", SEMIRINGS)
+def test_spmspm_matches_dense_matmul(sr_name):
+    rng = np.random.default_rng(2)
+    sr = sr_mod.get(sr_name, lib="np")
+    a = _random_dense(rng, (6, 5), sr_name)
+    b = _random_dense(rng, (5, 7), sr_name)
+    ra = SparseRelation.from_dense(a, sr_name, lib="np")
+    rb = SparseRelation.from_dense(b, sr_name, lib="np")
+    c = spmspm(ra, rb)
+    want = np.stack([sr.add_reduce(sr.mul(a, b[:, j][None, :]), axis=1)
+                     for j in range(7)], axis=1)
+    np.testing.assert_allclose(
+        np.asarray(c.to_dense()).astype(np.float32),
+        want.astype(np.float32))
+
+
+@pytest.mark.parametrize("sr_name", SEMIRINGS)
+@pytest.mark.parametrize("m,n", [(0, 5), (37, 10), (64, 257)])
+def test_segment_reduce_kernel_vs_ref(sr_name, m, n):
+    """Pallas kernel (interpret mode) against the jnp scatter oracle,
+    including out-of-range padding sentinels."""
+    rng = np.random.default_rng(hash((sr_name, m, n)) % 2**31)
+    sr = sr_mod.get(sr_name)
+    ids = rng.integers(0, n + 3, m)  # n..n+2 emulate COO padding
+    if sr_name == "bool":
+        vals = rng.random(m) < 0.5
+    else:
+        vals = rng.integers(0, 5, m).astype(np.float32)
+        vals[rng.random(m) < 0.3] = sr.zero
+    want = ref.segment_reduce_ref(sr, jnp.asarray(vals),
+                                  jnp.asarray(ids), n)
+    got = segment_reduce_pallas(jnp.asarray(vals), jnp.asarray(ids), n,
+                                sr_name=sr_name, bk=16, bn=8,
+                                interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32))
+
+
+def test_adaptive_density_switch():
+    rng = np.random.default_rng(3)
+    sparse_arr = _random_dense(rng, (40, 40), "bool") & \
+        (rng.random((40, 40)) < 0.05)
+    out = adapt_value(sparse_arr, "bool")
+    assert isinstance(out, SparseRelation)
+    # densify when a sparse relation saturates
+    dense_arr = rng.random((20, 20)) < 0.9
+    rel = SparseRelation.from_dense(dense_arr, "bool")
+    back = adapt_value(rel, "bool")
+    assert isinstance(back, jnp.ndarray) or isinstance(back, np.ndarray)
+    assert np.array_equal(np.asarray(back), dense_arr)
+    # hysteresis: mid-density keeps current representation
+    mid = rng.random((20, 20)) < 0.15
+    assert isinstance(adapt_value(mid, "bool"), (jnp.ndarray, np.ndarray))
+    assert isinstance(
+        adapt_value(SparseRelation.from_dense(mid, "bool"), "bool"),
+        SparseRelation)
+
+
+def test_database_storage_routing():
+    """run_program must give identical answers with E stored sparse."""
+    g = datasets.erdos_renyi(120, 3.0, seed=4)
+    b = programs.bm(a=0)
+    db = b.make_db(g)
+    want, _ = run_program(b.optimized, db, mode="seminaive")
+    db_sp = db.with_storage("E", "sparse")
+    assert db_sp.storage_of("E") == "sparse"
+    got, _ = run_program(b.optimized, db_sp, mode="seminaive")
+    assert np.array_equal(np.asarray(want), np.asarray(got))
+    # adapt() sparsifies the low-density adjacency and stays correct
+    db_ad = db.adapt()
+    assert db_ad.storage_of("E") == "sparse"
+    got2, _ = run_program(b.optimized, db_ad, mode="naive")
+    assert np.array_equal(np.asarray(want), np.asarray(got2))
+    # and converting back is lossless
+    assert np.array_equal(
+        np.asarray(db_sp.with_storage("E", "dense").relations["E"]),
+        np.asarray(db.relations["E"]))
+
+
+def test_engine_eval_ssp_with_sparse_factor():
+    """eval_ssp on a term mixing a sparse E with dense factors."""
+    from repro.core import ir
+    from repro.core.ir import RelAtom, Term
+    g = datasets.erdos_renyi(60, 3.0, seed=5)
+    b = programs.bm(a=0)
+    db = b.make_db(g)
+    q = np.asarray(np.random.default_rng(6).random(60) < 0.3)
+    ssp = ir.normalize(ir.SSP(("y",), (
+        Term((RelAtom("Q", ("z",)), RelAtom("E", ("z", "y"))), ("z",)),
+    ), "bool"))
+    schema = db.schema
+    schema.declare("Q", ("id",), "bool")
+    db = db.with_relations({"Q": jnp.asarray(q)})
+    want = engine.eval_ssp(ssp, db)
+    db_sp = db.with_storage("E", "sparse")
+    got = engine.eval_ssp(ssp, db_sp)
+    assert np.array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_sparse_builders_scale_without_dense_alloc():
+    """50k-vertex graphs build as COO without touching n² memory."""
+    g = datasets.powerlaw(50_000, 4, seed=1)
+    rel = g.sparse_adjacency()
+    assert rel.shape == (50_000, 50_000)
+    assert rel.capacity == len(g.edges)
+    g2 = datasets.erdos_renyi_sparse(50_000, 4.0, seed=1)
+    assert abs(len(g2.edges) / 50_000 - 4.0) < 0.5
+    wrel = datasets.erdos_renyi_sparse(1000, 3.0, seed=2, weighted=True) \
+        .sparse_adjacency(semiring="trop")
+    assert wrel.semiring == "trop"

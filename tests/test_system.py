@@ -46,6 +46,7 @@ def test_invariant_report_matches_paper_fig10():
     assert stats["time_s"] < 30
 
 
+@pytest.mark.slow  # full training loop with checkpoint round-trip
 def test_train_loop_learns_and_resumes(tmp_path):
     from repro.launch.train import train
     # phase 1: train 30 steps with checkpointing
