@@ -4,6 +4,7 @@
 #   make test-all    — everything, including AOT dry-run compiles
 #   make bench-smoke — small-size pass over the benchmark drivers
 #   make bench-sparse— dense-vs-sparse scaling acceptance run
+#   make bench-serve — batched serving throughput (writes BENCH_serve.json)
 
 PY      ?= python
 PYPATH  := src
@@ -15,10 +16,12 @@ test-all:
 	PYTHONPATH=$(PYPATH) $(PY) -m pytest -q -m "slow or not slow"
 
 bench-smoke:
-	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.sparse_scaling --sizes 256,512 --big 2000
-	PYTHONPATH=$(PYPATH) $(PY) -c "from benchmarks import kernel_bench; kernel_bench.run(sizes=(128,), semirings=('bool', 'trop'))"
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --quick --only sparse,serve,kernel
 
 bench-sparse:
 	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.sparse_scaling
 
-.PHONY: test test-all bench-smoke bench-sparse
+bench-serve:
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.serve_batch
+
+.PHONY: test test-all bench-smoke bench-sparse bench-serve

@@ -1,46 +1,105 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark entry point:
 
+  fig13  — synthesis/invariant-inference time + search-space size
   fig11  — FGH speedups, rule-based group (BM/CC/SSSP + GSN)
   fig12  — FGH speedups, CEGIS group (WS/BC/R/MLM) vs data size
-  fig13  — synthesis/invariant-inference time + search-space size
   kernel — semiring matmul engine throughput
+  sparse — dense-vs-sparse scaling (BM/TC family)
+  serve  — batched multi-source serving throughput (BENCH_serve.json)
   (roofline runs separately on dry-run output: benchmarks/roofline.py)
 
-``python -m benchmarks.run [--quick] [--only fig11,...]``
+Suites are discovered lazily: one suite failing to import (a missing
+optional dependency, e.g. no networkx for the graph generators or a
+container without jax) is reported as skipped instead of killing the
+whole run.
+
+``python -m benchmarks.run [--only fig11,...] [--quick]``
 """
 
 from __future__ import annotations
 
 import argparse
+import importlib
+import traceback
+
+#: name -> (module, runner attr, default kwargs, quick kwargs)
+SUITES: dict[str, tuple[str, str, dict, dict]] = {
+    "fig13": ("benchmarks.synthesis_stats", "run", {}, {}),
+    "fig11": ("benchmarks.fgh_speedups", "run",
+              {"sizes": (256, 1024)}, {"sizes": (128,)}),
+    "fig12": ("benchmarks.fgh_scaling", "run",
+              {"sizes": (48, 96)}, {"sizes": (32,)}),
+    "kernel": ("benchmarks.kernel_bench", "run", {},
+               {"sizes": (128,), "semirings": ("bool", "trop")}),
+    "sparse": ("benchmarks.sparse_scaling", "run",
+               {}, {"sizes": (256,), "big": 2000}),
+    "serve": ("benchmarks.serve_batch", "run",
+              {}, {"n": 2000, "batch_sizes": (1, 8), "out": None}),
+}
+
+
+def run_suite(name: str, overrides: dict | None = None,
+              quick: bool = False) -> str:
+    """Run one suite; returns "ok", "skipped" (missing optional import —
+    tolerated), or "failed" (the runner raised — reported but the
+    remaining suites still run; main exits nonzero)."""
+    module, attr, kwargs, quick_kwargs = SUITES[name]
+    kwargs = dict(quick_kwargs if quick else kwargs)
+    kwargs.update(overrides or {})
+    try:
+        mod = importlib.import_module(module)
+    except ImportError as e:
+        # only a *third-party* module going missing is a tolerable skip;
+        # a repo-internal module failing to resolve is a broken import
+        missing = (getattr(e, "name", "") or "").split(".")[0]
+        if isinstance(e, ModuleNotFoundError) \
+                and missing not in ("repro", "benchmarks"):
+            print(f"{name},skipped,import failed: {e}", flush=True)
+            return "skipped"
+        traceback.print_exc()
+        print(f"{name},failed,broken import: {e}", flush=True)
+        return "failed"
+    try:
+        getattr(mod, attr)(**kwargs)
+        return "ok"
+    except Exception as e:  # keep the remaining suites running
+        traceback.print_exc()
+        print(f"{name},failed,{type(e).__name__}: {e}", flush=True)
+        return "failed"
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="fig13,fig11,fig12,kernel")
-    ap.add_argument("--sizes", default="256,1024",
+    ap.add_argument("--only", default=",".join(SUITES),
+                    help=f"comma-separated subset of {sorted(SUITES)}")
+    ap.add_argument("--quick", action="store_true",
+                    help="small sizes for a smoke pass")
+    ap.add_argument("--sizes", default=None,
                     help="fig11 graph sizes (rule-based group)")
-    ap.add_argument("--sizes12", default="48,96",
+    ap.add_argument("--sizes12", default=None,
                     help="fig12 sizes (CEGIS group; BC's original program "
                          "is O(n³·d²)-ish dense — keep modest on CPU)")
     args = ap.parse_args()
-    only = set(args.only.split(","))
-    sizes = tuple(int(s) for s in args.sizes.split(","))
-    sizes12 = tuple(int(s) for s in args.sizes12.split(","))
+    only = [s for s in args.only.split(",") if s]
+    unknown = set(only) - set(SUITES)
+    if unknown:
+        raise SystemExit(f"unknown suites {sorted(unknown)}; "
+                         f"have {sorted(SUITES)}")
+    overrides: dict[str, dict] = {}
+    if args.sizes:
+        overrides["fig11"] = {
+            "sizes": tuple(int(s) for s in args.sizes.split(","))}
+    if args.sizes12:
+        overrides["fig12"] = {
+            "sizes": tuple(int(s) for s in args.sizes12.split(","))}
 
     print("name,us_per_call,derived")
-    if "fig13" in only:
-        from benchmarks import synthesis_stats
-        synthesis_stats.run()
-    if "fig11" in only:
-        from benchmarks import fgh_speedups
-        fgh_speedups.run(sizes=sizes)
-    if "fig12" in only:
-        from benchmarks import fgh_scaling
-        fgh_scaling.run(sizes=sizes12)
-    if "kernel" in only:
-        from benchmarks import kernel_bench
-        kernel_bench.run()
+    failed = [name for name in only
+              if run_suite(name, overrides.get(name),
+                           quick=args.quick) == "failed"]
+    if failed:
+        raise SystemExit(f"suites failed: {','.join(failed)}")
 
 
 if __name__ == '__main__':

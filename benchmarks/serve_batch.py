@@ -1,0 +1,123 @@
+"""Batched multi-source serving throughput → ``BENCH_serve.json``.
+
+Single-source reachability (the FGH-optimized BM program) served from a
+power-law graph two ways, at increasing batch sizes B:
+
+* ``loop``    — the pre-PR-2 shape: a Python loop of B single-source
+  jitted GSN fixpoints (each O(nnz)/iteration SpMV);
+* ``batched`` — the serve loop (`launch.datalog_serve`): pack B sources
+  into one (B, n) frontier, advance them in a single ``lax.while_loop``
+  whose step is one SpMM, answer all B at once.
+
+Both paths are warmed (compile cache populated) before timing, and every
+batched answer is checked for exact agreement against its single-source
+run.  The acceptance line (ISSUE 2): at B=64 on a 50k-vertex power-law
+graph the batched path must reach ≥ 5× the loop's queries/sec.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.serve_batch
+  PYTHONPATH=src python -m benchmarks.serve_batch --n 2000 --batches 1,8
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import engine
+from repro.datalog import datasets, programs
+from repro.launch.datalog_serve import DatalogServer
+from repro.sparse import sparse_seminaive_fixpoint
+
+
+def _one_hot(n: int, s: int) -> np.ndarray:
+    v = np.zeros(n, bool)
+    v[s] = True
+    return v
+
+
+def run(n: int = 50_000, batch_sizes=(1, 8, 64), seed: int = 1,
+        out: str = "BENCH_serve.json", check: bool = True):
+    g = datasets.powerlaw(n, 4, seed=seed)
+    rel = g.sparse_adjacency().as_jnp()
+    b0 = programs.bm(a=0)
+    db = engine.Database(b0.original.schema, {"id": n},
+                         {"E": rel, "V": jnp.ones((n,), bool)})
+
+    server = DatalogServer(max_batch=max(batch_sizes))
+    server.register("reach", lambda a: programs.bm(a=a).optimized, db)
+
+    single = jax.jit(lambda e, i: sparse_seminaive_fixpoint(
+        e, i, mode="jit"))
+    jax.block_until_ready(single(rel, jnp.asarray(_one_hot(n, 0)))[0])
+
+    rng = np.random.default_rng(seed)
+    rows = []
+    agreement = True
+    for b in batch_sizes:
+        sources = [int(s) for s in rng.integers(0, n, b)]
+
+        # per-source loop (the jit is already warm: every call shares the
+        # single (n,) input shape)
+        t0 = time.perf_counter()
+        loop_out = []
+        for s in sources:
+            y, _ = single(rel, jnp.asarray(_one_hot(n, s)))
+            loop_out.append(np.asarray(y))
+        t_loop = time.perf_counter() - t0
+        qps_loop = b / t_loop
+
+        # serve loop (warm the compile cache, then timed)
+        for timed in (False, True):
+            reqs = [server.submit("reach", s) for s in sources]
+            t0 = time.perf_counter()
+            server.run_until_idle()
+            t_batch = time.perf_counter() - t0
+        qps_batch = b / t_batch
+
+        if check:
+            for req, y in zip(reqs, loop_out):
+                if not np.array_equal(req.result, y):
+                    agreement = False
+        speedup = qps_batch / qps_loop
+        rows.append({"B": b, "qps_batched": qps_batch,
+                     "qps_loop": qps_loop, "s_batched": t_batch,
+                     "s_loop": t_loop, "speedup": speedup})
+        emit(f"serve_batch/B{b}", t_batch,
+             f"qps_batched={qps_batch:.1f} qps_loop={qps_loop:.1f} "
+             f"speedup={speedup:.1f}x")
+
+    result = {"bench": "serve_batch", "family": "BM", "n": n,
+              "nnz": int(np.asarray(rel.nnz)), "seed": seed,
+              "max_batch": max(batch_sizes), "agreement": agreement,
+              "rows": rows, "server_stats": server.stats}
+    if out:
+        pathlib.Path(out).write_text(json.dumps(result, indent=2) + "\n")
+        print(f"wrote {out}")
+    assert agreement, "batched answers diverged from single-source runs"
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=50_000)
+    ap.add_argument("--batches", default="1,8,64",
+                    help="comma-separated batch sizes")
+    ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--no-check", action="store_true")
+    args = ap.parse_args()
+    sizes = tuple(int(s) for s in args.batches.split(",") if s)
+    run(n=args.n, batch_sizes=sizes, seed=args.seed, out=args.out,
+        check=not args.no_check)
+
+
+if __name__ == "__main__":
+    main()

@@ -116,9 +116,65 @@ def values_equal(a: np.ndarray, b: np.ndarray, atol: float = 1e-4) -> bool:
     return bool(np.allclose(a, b, atol=atol, rtol=1e-4, equal_nan=True))
 
 
+def constant_floors(task: FGHTask) -> dict[str, int]:
+    """Smallest domain size per sort that contains every constant the
+    program mentions — a query-source constant C(a) in an id position
+    forces id ≥ a + 1, or the probe databases cannot even index it (the
+    serve loop optimizes source-parameterized programs at arbitrary
+    vertices, not just 0)."""
+    floors: dict[str, int] = {}
+
+    def bump(sort: str, value: int) -> None:
+        floors[sort] = max(floors.get(sort, 0), int(value) + 1)
+
+    def visit(e: ir.SSP) -> None:
+        sorts = engine.infer_var_sorts(e, task.schema, task.sort_hints)
+        for t in e.terms:
+            for a in t.atoms:
+                if isinstance(a, ir.RelAtom):
+                    for arg, s in zip(a.args, task.schema[a.name].sorts):
+                        if isinstance(arg, ir.C):
+                            bump(s, arg.value)
+                elif isinstance(a, (ir.PredAtom, ir.ValFnAtom)):
+                    var_sorts = [sorts[x] for x in a.args
+                                 if not isinstance(x, ir.C) and x in sorts]
+                    for arg in a.args:
+                        if isinstance(arg, ir.C):
+                            for s in var_sorts:
+                                bump(s, arg.value)
+
+    for rule in list(task.stratum.rules.values()) + list(task.outputs):
+        visit(rule.body)
+    if task.stratum.init:
+        for e in task.stratum.init.values():
+            visit(e)
+    return floors
+
+
+#: largest probe-domain size the bounded-model check will materialize —
+#: dense probe relations are O(size²); beyond this a program constant
+#: (e.g. a 50k-vertex query source) must be substituted into an already
+#: verified template instead of re-verified from scratch
+_MAX_PROBE_DOMAIN = 512
+
+
 def sample_dbs(task: FGHTask, rng: np.random.Generator, count: int,
                ) -> list[engine.Database]:
-    doms = {"id": 3, **task.small_domains}
+    floors = constant_floors(task)
+    too_big = {s: v for s, v in floors.items() if v > _MAX_PROBE_DOMAIN}
+    if too_big:
+        raise ValueError(
+            f"{task.name}: constants force probe domains {too_big} past "
+            f"the bounded-model capacity ({_MAX_PROBE_DOMAIN}); verify a "
+            f"small-constant template and substitute instead")
+
+    def floored(d: dict) -> dict:
+        out = {s: max(v, floors.get(s, 0)) for s, v in d.items()}
+        for s, v in floors.items():
+            out.setdefault(s, v)
+        return out
+
+    doms = floored({"id": 3, **task.small_domains})
     dbs: list[engine.Database] = []
     if task.sampler is not None:
         for _ in range(count):
@@ -128,13 +184,13 @@ def sample_dbs(task: FGHTask, rng: np.random.Generator, count: int,
     # Γ-constrained tasks skip the exhaustive slice: its instances ignore
     # the V-covers-all-nodes aspect of the tree/dag constraints.
     if task.constraint is None:
-        doms2 = {**doms, "id": 2}
+        doms2 = floored({**doms, "id": 2})
         dbs.extend(gamma.exhaustive_databases(
             task.schema, task.edbs, doms2, constraint=task.constraint,
             limit=8))
     for i in range(count):
         d = dict(doms)
-        d["id"] = 3 + (i % 2)
+        d["id"] = max(3 + (i % 2), floors.get("id", 0))
         dbs.append(gamma.sample_database(task.schema, task.edbs, d, rng,
                                          constraint=task.constraint))
     return dbs

@@ -92,6 +92,18 @@ def constrain(x, logical: tuple):
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
 
+def put(x, logical: tuple):
+    """``device_put`` with the resolved NamedSharding when a mesh is
+    active; identity otherwise.  Host-side twin of :func:`constrain` —
+    the serve loop uses it to lay out a packed query batch across the
+    data axis before dispatching the compiled fixpoint."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = spec_for(logical, x.shape, mesh)
+    return jax.device_put(x, NamedSharding(mesh, spec))
+
+
 def tree_shardings(specs, shapes, mesh: Mesh, rules: dict):
     """NamedShardings for a whole param tree given logical-spec tree."""
     def one(spec, shape_struct):

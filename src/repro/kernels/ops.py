@@ -39,8 +39,13 @@ def semiring_matmul(sr, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
 def semiring_segment_reduce(sr, vals: jnp.ndarray,
                             segment_ids: jnp.ndarray,
                             num_segments: int) -> jnp.ndarray:
-    """``out[s] = ⊕ vals[i]`` over ``segment_ids[i] = s`` (sparse scatter)."""
-    if _use_pallas():
+    """``out[s] = ⊕ vals[i]`` over ``segment_ids[i] = s`` (sparse scatter).
+
+    ``vals`` may carry trailing payload axes (batched SpMM rows); the
+    Pallas kernel currently handles scalar payloads only, so payload
+    shapes route through the jnp reference on every platform.
+    """
+    if _use_pallas() and vals.ndim == 1:
         from repro.kernels.coo_segment import segment_reduce_pallas
         return segment_reduce_pallas(vals, segment_ids, num_segments,
                                      sr_name=sr.name,

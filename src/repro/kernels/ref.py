@@ -53,10 +53,14 @@ def segment_reduce_ref(sr, vals: jnp.ndarray, segment_ids: jnp.ndarray,
     """``out[s] = ⊕_{i: ids[i]=s} vals[i]`` with ⊕ from semiring ``sr``.
 
     The scatter-reduce behind sparse contraction (SpMV destinations).
-    Out-of-range ids (the COO padding sentinel) are dropped.
+    Out-of-range ids (the COO padding sentinel) are dropped.  ``vals`` may
+    carry trailing payload axes — ``(cap, B)`` rows for batched SpMM — in
+    which case each segment row ⊕-combines whole payload slices (the
+    scatter window is then a contiguous row, which is what makes the
+    batched serving path memory-efficient on every backend).
     """
     from repro.core import semiring as sr_mod
-    base = jnp.full((num_segments,), sr.zero, sr.dtype)
+    base = jnp.full((num_segments,) + vals.shape[1:], sr.zero, sr.dtype)
     return sr_mod.scatter_op(sr.name, base.at[segment_ids])(
         vals, mode="drop")
 

@@ -1,0 +1,487 @@
+"""Batched multi-source Datalog° query serving (DESIGN.md §3).
+
+The production shape mirrors `launch/serve.py`'s LM batcher: a request
+queue, a packer that groups up to ``max_batch`` pending (family, source)
+queries of the same program family, and a compiled batched GSN fixpoint
+that answers the whole pack in one device program.  The pieces:
+
+* **Vector-form routing** — registered Π₂ programs (published rewrites or
+  ones freshly synthesized by :mod:`repro.core.fgh`) are split by
+  :mod:`repro.core.vectorize` into ``x = init ⊕ x ⊗ E``; only the O(n)
+  ``init`` is evaluated per request, while the linear operator E and the
+  compiled fixpoint are shared by every source.
+* **Compile cache** — jitted batched runners are keyed on
+  ``(linear signature, n, semiring, B-bucket, backend)``.  Batch sizes
+  are bucketed to powers of two (padded with inert all-0̄ init rows), so
+  a steady-state server compiles each family a handful of times total.
+* **Batched runners** — sparse families go through the SpMM
+  ``sparse_seminaive_fixpoint`` (one ``lax.while_loop`` for all B
+  sources, per-row convergence); dense families through
+  ``fixpoint.batched_seminaive_fixpoint`` with a semiring-matmul step.
+* **Sharding** — with a mesh attached, the query-batch axis is laid out
+  across the "data" axis (``launch.rules`` kind "datalog") and the
+  fixpoint's internal constraints keep it there.
+
+FGH families: :func:`fgh_make_program` derives Π₂ from a Π₁ benchmark
+*twice* at distinct placeholder sources and diffs the results to locate
+the source-constant sites, so one synthesis run serves every source; if
+the diff is ambiguous it falls back to re-optimizing per source (cached).
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine, fixpoint, ir, vectorize, verify
+from repro.core import semiring as sr_mod
+from repro.core.program import Program
+from repro.distributed import sharding as sh
+from repro.launch import rules as rules_mod
+from repro.sparse.coo import SparseRelation
+from repro.sparse.fixpoint import sparse_seminaive_fixpoint
+
+
+@dataclasses.dataclass
+class QueryRequest:
+    """One (program family, source vertex) query; filled in by the server.
+
+    A request that cannot be served (e.g. its source changed the
+    family's linear operator) comes back with ``result=None`` and the
+    failure message in ``error`` — it never takes its batch down.
+    """
+
+    family: str
+    source: int
+    result: np.ndarray | None = None
+    iters: int | None = None
+    error: str | None = None
+    submitted_s: float = 0.0
+    done_s: float = 0.0
+
+    @property
+    def latency_s(self) -> float:
+        return self.done_s - self.submitted_s
+
+
+#: per-family cap on memoized init vectors (n floats each)
+_INIT_CACHE_MAX = 4096
+
+
+@dataclasses.dataclass
+class _Family:
+    name: str
+    make_program: Callable[[int], Program]
+    db: engine.Database
+    host_db: engine.Database    # numpy twin for eager per-request init eval
+    vf: vectorize.VectorForm
+    edges: object               # SparseRelation (jnp) or dense (n, n) array
+    hints: dict
+    n: int
+    max_iters: int
+    init_cache: dict[int, np.ndarray] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def backend(self) -> str:
+        return "sparse" if isinstance(self.edges, SparseRelation) else "dense"
+
+
+def _bucket(b: int, max_batch: int) -> int:
+    """Smallest power of two ≥ b, capped at max_batch."""
+    out = 1
+    while out < b:
+        out <<= 1
+    return min(out, max_batch)
+
+
+class DatalogServer:
+    """Request-queue serve loop over batched GSN fixpoints."""
+
+    def __init__(self, *, max_batch: int = 64, mesh=None,
+                 max_iters: int = 10_000):
+        self.max_batch = max_batch
+        self.max_iters = max_iters
+        self.mesh = mesh
+        self.rules = (rules_mod.make_rules(mesh, "datalog")
+                      if mesh is not None else None)
+        self._families: dict[str, _Family] = {}
+        self._queue: collections.deque[QueryRequest] = collections.deque()
+        self._compiled: dict[tuple, Callable] = {}
+        self.stats = {"served": 0, "failed": 0, "batches": 0,
+                      "padded_rows": 0, "cache_hits": 0,
+                      "cache_misses": 0}
+
+    # -- registration -------------------------------------------------------
+
+    def register(self, name: str, make_program: Callable[[int], Program],
+                 db: engine.Database, *, edges=None,
+                 template_source: int = 0) -> _Family:
+        """Register a family of source-parameterized Π₂ programs.
+
+        ``make_program(source)`` must return the optimized program for
+        that source; all sources must share the linear operator (checked
+        per request via the vector-form signature).  ``edges`` overrides
+        the extracted E — e.g. a weighted COO adjacency for SSSP-style
+        families whose schema-level edge relation is a dense 3-ary
+        tensor that would not scale.
+        """
+        template = make_program(template_source)
+        vf = vectorize.vector_form(template)
+        sr = sr_mod.get(vf.semiring)
+        if sr.minus is None:
+            raise ValueError(
+                f"{name}: semiring {vf.semiring} lacks ⊖ — the batched "
+                f"GSN runner needs an idempotent lattice")
+        hints = dict(template.sort_hints)
+        if edges is None:
+            edges = vectorize.edge_operator(vf, db, hints)
+        if isinstance(edges, SparseRelation):
+            edges = vectorize._sparse_into_semiring(edges, vf.semiring)
+            edges = edges.as_jnp()
+        n = db.dom(vf.out_sort)
+        # numpy twin of the dense relations: per-request init evaluation
+        # runs eagerly on the host (the jnp dispatch overhead of an O(n)
+        # eval would dominate a packed batch otherwise).  Sparse
+        # relations stay as-is; init terms never touch them for
+        # vector-shaped families.
+        host_rels = {k: (v if isinstance(v, SparseRelation)
+                         else np.asarray(v))
+                     for k, v in db.relations.items()}
+        host_db = engine.Database(db.schema, db.domains, host_rels)
+        fam = _Family(name, make_program, db, host_db, vf, edges, hints,
+                      n, self.max_iters)
+        self._families[name] = fam
+        return fam
+
+    # -- request queue ------------------------------------------------------
+
+    def submit(self, family: str, source: int) -> QueryRequest:
+        if family not in self._families:
+            raise KeyError(f"unknown family {family!r}; "
+                           f"registered: {sorted(self._families)}")
+        req = QueryRequest(family, int(source),
+                           submitted_s=time.perf_counter())
+        self._queue.append(req)
+        return req
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def step(self) -> list[QueryRequest]:
+        """Serve one packed batch: pop the oldest request plus up to
+        ``max_batch - 1`` more of the same family (others keep their
+        queue order), run the compiled batched fixpoint, unpack."""
+        if not self._queue:
+            return []
+        lead = self._queue.popleft()
+        batch = [lead]
+        rest: collections.deque[QueryRequest] = collections.deque()
+        while self._queue and len(batch) < self.max_batch:
+            req = self._queue.popleft()
+            (batch if req.family == lead.family else rest).append(req)
+        self._queue = rest + self._queue
+
+        fam = self._families[lead.family]
+        live, inits = [], []
+        for r in batch:
+            try:
+                inits.append(self._init_for(fam, r.source))
+                live.append(r)
+            except Exception as e:  # bad source must not strand the batch
+                r.error = f"{type(e).__name__}: {e}"
+                r.done_s = time.perf_counter()
+                self.stats["failed"] += 1
+        if not live:
+            self.stats["batches"] += 1
+            return batch
+        bb = _bucket(len(live), self.max_batch)
+        sr = sr_mod.get(fam.vf.semiring, lib="np")
+        packed = np.full((bb, fam.n), sr.zero, sr.dtype)
+        for i, v in enumerate(inits):
+            packed[i] = np.asarray(v)
+        self.stats["padded_rows"] += bb - len(live)
+
+        run = self._compiled_fixpoint(fam, bb)
+        if self.mesh is not None:
+            with sh.use_rules(self.mesh, self.rules):
+                init_dev = sh.put(jnp.asarray(packed),
+                                  ("query_batch", "vertex"))
+                y, iters = run(fam.edges, init_dev)
+                y = np.asarray(jax.device_get(y))
+        else:
+            y, iters = run(fam.edges, jnp.asarray(packed))
+            y = np.asarray(y)
+        iters = np.asarray(iters)
+        now = time.perf_counter()
+        for i, req in enumerate(live):
+            req.result = y[i]
+            req.iters = int(iters[i])
+            req.done_s = now
+        self.stats["served"] += len(live)
+        self.stats["batches"] += 1
+        return batch
+
+    def run_until_idle(self) -> int:
+        served = 0
+        while self._queue:
+            served += len(self.step())
+        return served
+
+    # -- internals ----------------------------------------------------------
+
+    def _init_for(self, fam: _Family, source: int):
+        """The per-request O(n) host work, memoized per source: rebuild
+        the source's program, check it kept the family's linear operator,
+        evaluate its init terms."""
+        if source in fam.init_cache:
+            return fam.init_cache[source]
+        prog = fam.make_program(source)
+        vf = vectorize.vector_form(prog)
+        if vf.signature != fam.vf.signature:
+            raise ValueError(
+                f"{fam.name}: source {source} changed the linear operator "
+                f"({vf.signature} != {fam.vf.signature}) — sources must "
+                f"only move the init term")
+        init = vectorize.init_vector(vf, fam.host_db,
+                                     dict(prog.sort_hints), backend="np")
+        if len(fam.init_cache) >= _INIT_CACHE_MAX:
+            fam.init_cache.pop(next(iter(fam.init_cache)))  # FIFO evict
+        fam.init_cache[source] = init
+        return init
+
+    def _compiled_fixpoint(self, fam: _Family, bb: int) -> Callable:
+        key = (fam.vf.signature, fam.n, fam.vf.semiring, bb, fam.backend)
+        if key in self._compiled:
+            self.stats["cache_hits"] += 1
+            return self._compiled[key]
+        self.stats["cache_misses"] += 1
+        max_iters = fam.max_iters
+        if fam.backend == "sparse":
+            def run(edges, init):
+                return sparse_seminaive_fixpoint(edges, init, mode="jit",
+                                                 max_iters=max_iters)
+        else:
+            sr = sr_mod.get(fam.vf.semiring)
+
+            def run(edges, init):
+                from repro.kernels import ops as kops
+
+                def ico(s):
+                    return {"x": sr.add(init, kops.semiring_matmul(
+                        sr, s["x"], edges))}
+
+                def dico(s):
+                    return {"x": kops.semiring_matmul(sr, s["x"], edges)}
+
+                x0 = {"x": sr.zeros(init.shape)}
+                y, iters = fixpoint.batched_seminaive_fixpoint(
+                    ico, dico, x0, {"x": sr}, max_iters=max_iters)
+                return y["x"], iters
+
+        self._compiled[key] = jax.jit(run)
+        return self._compiled[key]
+
+
+# --------------------------------------------------------------------------
+# FGH routing: synthesize Π₂ once, serve every source
+# --------------------------------------------------------------------------
+
+
+def fgh_make_program(make_bench, edbs: list[str], *,
+                     placeholders: tuple[int, int] = (0, 1),
+                     rng=None) -> Callable[[int], Program]:
+    """Derive Π₂ from a Π₁ benchmark family with the FGH optimizer and
+    return a ``make_program(source)`` suitable for
+    :meth:`DatalogServer.register`.
+
+    ``make_bench(source)`` builds the :class:`~repro.datalog.programs.Bench`
+    for a source vertex.  The optimizer runs (and fully verifies) at the
+    two placeholder sources; diffing the two derived programs pinpoints
+    exactly which constants are the query source, so serving source ``s``
+    is a constant substitution, not a re-synthesis.  When the diff is
+    structurally ambiguous (normalization reordered terms between the
+    runs) the returned function falls back to re-optimizing per source,
+    memoized.
+    """
+    from repro.core import fgh
+
+    derived = {}
+    for p in placeholders:
+        b = make_bench(p)
+        task = verify.task_from_program(b.original, edbs,
+                                        constraint=b.constraint)
+        rep = fgh.optimize(task, rng=rng or np.random.default_rng(0))
+        if not rep.ok:
+            raise RuntimeError(f"FGH synthesis failed for source {p}: "
+                               f"{rep.stats}")
+        if b.original.post is not None:
+            rep.program.post = b.original.post
+        derived[p] = rep.program
+    p0, p1 = placeholders
+    # serve only p0's derivation directly; p1 (like every other source)
+    # goes through substitution so served programs share p0's variable
+    # names — derived[p1] exists purely to locate the source constants
+    cache: dict[int, Program] = {p0: derived[p0]}
+
+    def make_program(source: int) -> Program:
+        if source in cache:
+            return cache[source]
+        try:
+            prog = _subst_sources(derived[p0], derived[p1],
+                                  placeholders, source)
+        except ValueError:
+            b = make_bench(source)
+            task = verify.task_from_program(b.original, edbs,
+                                            constraint=b.constraint)
+            rep = fgh.optimize(task, rng=np.random.default_rng(0))
+            if not rep.ok:
+                raise RuntimeError(
+                    f"FGH synthesis failed for source {source}")
+            if b.original.post is not None:
+                rep.program.post = b.original.post
+            prog = rep.program
+        cache[source] = prog
+        return prog
+
+    return make_program
+
+
+def _subst_sources(prog0: Program, prog1: Program,
+                   placeholders: tuple[int, int], source: int) -> Program:
+    """Rebuild ``prog0`` with every constant site where ``prog0`` and
+    ``prog1`` disagree (and agree with the respective placeholders)
+    replaced by ``source``.  Variable-name differences (fresh-counter
+    drift between the two synthesis runs) are ignored; any structural
+    mismatch raises ``ValueError``."""
+    from repro.core.program import Rule, Stratum
+
+    def walk_args(a0, a1):
+        out = []
+        for x0, x1 in zip(a0.args, a1.args):
+            c0, c1 = isinstance(x0, ir.C), isinstance(x1, ir.C)
+            if c0 != c1:
+                raise ValueError("const/var mismatch")
+            if c0 and x0.value != x1.value:
+                if (x0.value, x1.value) != placeholders:
+                    raise ValueError(
+                        f"differing constants {x0}/{x1} are not the "
+                        f"placeholder pair {placeholders}")
+                out.append(ir.C(source))
+            else:
+                out.append(x0)
+        return tuple(out)
+
+    def walk_atom(a0, a1):
+        if type(a0) is not type(a1):
+            raise ValueError("atom type mismatch")
+        if isinstance(a0, ir.RelAtom):
+            if (a0.name, a0.cast, a0.neg) != (a1.name, a1.cast, a1.neg):
+                raise ValueError("rel atom mismatch")
+            return ir.RelAtom(a0.name, walk_args(a0, a1), a0.cast, a0.neg)
+        if isinstance(a0, ir.PredAtom):
+            if a0.pred != a1.pred:
+                raise ValueError("pred mismatch")
+            return ir.PredAtom(a0.pred, walk_args(a0, a1))
+        if isinstance(a0, ir.ValFnAtom):
+            if a0.fn != a1.fn:
+                raise ValueError("valfn mismatch")
+            return ir.ValFnAtom(a0.fn, walk_args(a0, a1))
+        if isinstance(a0, ir.ConstAtom):
+            if a0.value != a1.value:
+                raise ValueError("semiring constants differ between "
+                                 "placeholder derivations")
+            return a0
+        return a0  # ValAtom: var names may drift, keep prog0's
+
+    def walk_ssp(e0, e1):
+        if (len(e0.terms) != len(e1.terms)
+                or len(e0.head) != len(e1.head)
+                or e0.semiring != e1.semiring):
+            raise ValueError("SSP shape mismatch")
+        terms = []
+        for t0, t1 in zip(e0.terms, e1.terms):
+            if len(t0.atoms) != len(t1.atoms) \
+                    or len(t0.bound) != len(t1.bound):
+                raise ValueError("term shape mismatch")
+            terms.append(ir.Term(
+                tuple(walk_atom(a0, a1)
+                      for a0, a1 in zip(t0.atoms, t1.atoms)), t0.bound))
+        return ir.SSP(e0.head, tuple(terms), e0.semiring)
+
+    strata = []
+    for s0, s1 in zip(prog0.strata, prog1.strata):
+        if tuple(s0.rules) != tuple(s1.rules):
+            raise ValueError("stratum IDB mismatch")
+        rules = {n: Rule(n, walk_ssp(s0.rules[n].body, s1.rules[n].body))
+                 for n in s0.rules}
+        init = None
+        if s0.init is not None:
+            if s1.init is None or set(s0.init) != set(s1.init):
+                raise ValueError("stratum init mismatch")
+            init = {n: walk_ssp(s0.init[n], s1.init[n]) for n in s0.init}
+        strata.append(Stratum(rules, init=init))
+    if len(prog0.strata) != len(prog1.strata) \
+            or len(prog0.outputs) != len(prog1.outputs):
+        raise ValueError("program shape mismatch")
+    outputs = [Rule(r0.head, walk_ssp(r0.body, r1.body))
+               for r0, r1 in zip(prog0.outputs, prog1.outputs)]
+    return Program(prog0.name, prog0.schema, strata, outputs,
+                   post=prog0.post, sort_hints=dict(prog0.sort_hints))
+
+
+# --------------------------------------------------------------------------
+# CLI demo
+# --------------------------------------------------------------------------
+
+
+def main():
+    from repro.datalog import datasets, programs
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=5000)
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--fgh", action="store_true",
+                    help="derive Π₂ with the FGH optimizer instead of "
+                         "using the published rewrite")
+    args = ap.parse_args()
+
+    g = datasets.powerlaw(args.n, 4, seed=0)
+    b0 = programs.bm(a=0)
+    db = engine.Database(b0.original.schema, {"id": g.n},
+                         {"E": g.sparse_adjacency(),
+                          "V": jnp.ones((g.n,), bool)})
+    server = DatalogServer(max_batch=args.max_batch)
+    if args.fgh:
+        make_program = fgh_make_program(
+            lambda a: programs.bm(a=a), ["E", "V"])
+    else:
+        make_program = lambda a: programs.bm(a=a).optimized
+    server.register("reach", make_program, db)
+
+    rng = np.random.default_rng(0)
+    reqs = [server.submit("reach", int(s))
+            for s in rng.integers(0, g.n, args.requests)]
+    t0 = time.perf_counter()
+    server.run_until_idle()
+    dt = time.perf_counter() - t0
+    lat = sorted(r.latency_s for r in reqs)
+    print(f"served {server.stats['served']} queries in {dt:.3f}s "
+          f"({server.stats['served'] / dt:.1f} qps, "
+          f"{server.stats['batches']} batches, "
+          f"compile cache {server.stats['cache_hits']} hits / "
+          f"{server.stats['cache_misses']} misses)")
+    print(f"latency p50 {lat[len(lat) // 2] * 1e3:.1f} ms  "
+          f"p99 {lat[int(len(lat) * 0.99)] * 1e3:.1f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,3 +19,14 @@ def make_host_mesh(model: int = 1):
     """Small mesh over the real local devices (tests / examples)."""
     n = len(jax.devices())
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_datalog_mesh(data: int | None = None):
+    """1-D data mesh for batched query serving (DESIGN.md §3).
+
+    The serve loop shards only the query-batch axis, so the mesh is a
+    flat "data" axis over the local devices (or the first ``data`` of
+    them); the graph stays replicated.
+    """
+    n = data if data is not None else len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

@@ -15,6 +15,17 @@ def make_rules(mesh: Mesh, kind: str) -> dict:
     multi = "pod" in mesh.axis_names
     data = ("pod", "data") if multi else "data"
 
+    if kind == "datalog":
+        # Batched multi-source query serving (DESIGN.md §3): the query
+        # batch is embarrassingly parallel — shard it across the data
+        # axis; the vertex axis stays replicated (each device advances
+        # its slice of sources over the whole graph).  A future
+        # vertex-sharded SpMM would map "vertex" to "model".
+        return {
+            "query_batch": [data, "data"],
+            "vertex": [None],
+        }
+
     rules = {
         # --- parameters ---------------------------------------------------
         "vocab": ["model"],

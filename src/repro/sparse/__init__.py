@@ -9,12 +9,12 @@ tuples rather than a dense masked tensor.
 
 from repro.sparse.adaptive import (DENSIFY_ABOVE, SPARSIFY_BELOW,
                                    adapt_value, density)
-from repro.sparse.contract import spmm, spmspm, spmv, vspm
+from repro.sparse.contract import mspm, spmm, spmspm, spmv, vspm
 from repro.sparse.coo import SparseRelation
 from repro.sparse.fixpoint import sparse_seminaive_fixpoint
 
 __all__ = [
-    "SparseRelation", "spmv", "vspm", "spmm", "spmspm",
+    "SparseRelation", "spmv", "vspm", "spmm", "mspm", "spmspm",
     "sparse_seminaive_fixpoint", "density", "adapt_value",
     "SPARSIFY_BELOW", "DENSIFY_ABOVE",
 ]

@@ -53,16 +53,36 @@ def vspm(x, rel: SparseRelation):
 
 
 def spmm(rel: SparseRelation, b, *, transpose: bool = False):
-    """Sparse (n, k) × dense (k, d) → dense (n, d) over the semiring."""
+    """Sparse (n, k) × dense (k, d) → dense (n, d) over the semiring.
+
+    Per edge the gathered payload is a whole row of ``b`` and the
+    ⊕-reduction scatters contiguous rows — so with d = B query lanes the
+    per-edge index overhead of SpMV is amortized across the batch (the
+    mechanism behind the batched multi-source fixpoint, DESIGN.md §3).
+    """
     assert rel.arity == 2 and b.ndim == 2, (rel, b.shape)
     sr = sr_mod.get(rel.semiring)
+    from repro.kernels import ops as kops
     contract_ax, out_ax = (0, 1) if transpose else (1, 0)
     rows = _gather(jnp.asarray(b), rel.coords[:, contract_ax],
                    sr.one)                                 # (cap, d)
     prod = sr.mul(rel.values[:, None], rows)
-    base = jnp.full((rel.shape[out_ax], b.shape[1]), sr.zero, sr.dtype)
-    return sr_mod.scatter_op(rel.semiring, base.at[rel.coords[:, out_ax]])(
-        prod, mode="drop")
+    return kops.semiring_segment_reduce(
+        sr, prod, rel.coords[:, out_ax], rel.shape[out_ax])
+
+
+def mspm(x, rel: SparseRelation):
+    """Dense (B, n) × sparse (n, m) → dense (B, m): batched vspm.
+
+    ``out[b, j] = ⊕_i x[b, i] ⊗ rel[i, j]`` — the multi-source frontier
+    advance.  Internally runs in the (n, B) layout (`spmm` on the
+    transposed orientation) so gathers and scatters move contiguous
+    B-wide rows; the transposes at the boundary are free under jit when
+    the caller keeps the (n, B) layout (as the batched fixpoint does).
+    """
+    x = jnp.asarray(x)
+    assert x.ndim == 2, x.shape
+    return spmm(rel, x.T, transpose=True).T
 
 
 def spmspm(a: SparseRelation, b: SparseRelation, *,

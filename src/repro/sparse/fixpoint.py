@@ -21,6 +21,17 @@ states, so the runners are interchangeable mid-stream):
   and per-round work is proportional to the frontier, not the graph.
 
 ``mode="auto"`` picks "frontier" on CPU hosts and "jit" on accelerators.
+
+**Batched multi-source serving (DESIGN.md §3):** ``init`` may be a
+``(B, n)`` frontier matrix — one row per source.  ``mode="jit"`` then
+advances all B sources in a single ``lax.while_loop`` whose per-iteration
+step is one SpMM (`repro.sparse.contract.spmm`) instead of B SpMVs, with
+a per-row convergence mask so each source's iteration count matches its
+single-source run exactly; the carry is kept in the (n, B) layout so
+gathers/scatters move contiguous B-wide rows and the batch axis can be
+sharded across devices (``query_batch`` logical axis).  ``iters`` comes
+back as a ``(B,)`` per-source vector.  Rows whose init is all-0̄ are
+inert — the serve loop uses them as batch padding.
 """
 
 from __future__ import annotations
@@ -57,6 +68,10 @@ def sparse_seminaive_fixpoint(edges: SparseRelation, init, *,
     additionally attaches a :class:`FrontierStats` as ``iters_stats`` on
     the returned stats tuple — use :func:`sparse_seminaive_fixpoint_stats`
     for the instrumented variant.
+
+    A 2-D ``(B, n)`` init runs the batched multi-source path (module
+    docstring): the result is ``(B, n)`` and ``iters`` is a ``(B,)``
+    per-source iteration-count vector.
     """
     y, iters, _ = _dispatch(edges, init, max_iters=max_iters, mode=mode)
     return y, iters
@@ -65,7 +80,10 @@ def sparse_seminaive_fixpoint(edges: SparseRelation, init, *,
 def sparse_seminaive_fixpoint_stats(edges: SparseRelation, init, *,
                                     max_iters: int = 10_000,
                                     mode: str = "frontier"):
-    """Instrumented variant: returns ``(x*, iters, FrontierStats|None)``."""
+    """Instrumented variant: returns ``(x*, iters, FrontierStats|None)``.
+
+    Batched frontier runs return a list of per-source FrontierStats.
+    """
     return _dispatch(edges, init, max_iters=max_iters, mode=mode)
 
 
@@ -79,11 +97,19 @@ def _dispatch(edges, init, *, max_iters, mode):
                          "GSN needs an idempotent complete lattice")
     if mode == "auto":
         mode = "frontier" if jax.default_backend() == "cpu" else "jit"
+    batched = np.ndim(init) == 2
     if mode == "jit":
-        y, iters = _jit_fixpoint(edges.as_jnp(), jnp.asarray(init),
-                                 sr, max_iters)
+        if batched:
+            y, iters = _batched_jit_fixpoint(edges.as_jnp(),
+                                             jnp.asarray(init), sr,
+                                             max_iters)
+        else:
+            y, iters = _jit_fixpoint(edges.as_jnp(), jnp.asarray(init),
+                                     sr, max_iters)
         return y, iters, None
     if mode == "frontier":
+        if batched:
+            return _batched_frontier_fixpoint(edges, init, max_iters)
         return _frontier_fixpoint(edges, init, max_iters)
     raise ValueError(f"unknown mode {mode!r}")
 
@@ -112,9 +138,65 @@ def _jit_fixpoint(edges: SparseRelation, init, sr, max_iters: int):
     return y, iters
 
 
+def _batched_jit_fixpoint(edges: SparseRelation, init, sr, max_iters: int):
+    """All B sources in one ``lax.while_loop``: SpMM frontier advance,
+    per-row convergence masks, per-row iteration counts.
+
+    The carry lives in the (n, B) layout so every gather/scatter moves a
+    contiguous B-wide row per edge (contract.spmm); the batch axis is
+    annotated with the ``query_batch`` logical axis so an active mesh
+    shards it across devices (no-op otherwise).
+    """
+    from repro.distributed import sharding as sh
+
+    b = init.shape[0]
+    x0 = jnp.full(init.shape[::-1], sr.zero, sr.dtype)        # (n, B)
+    i_nb = sh.constrain(jnp.asarray(init).T, ("vertex", "query_batch"))
+    d0 = sr.minus(sr.add(i_nb, contract.spmm(edges, x0, transpose=True)),
+                  x0)
+    live0 = jnp.ones((b,), bool)
+
+    def cond(carry):
+        y, d, live, it_rows, it = carry
+        return jnp.logical_and(jnp.any(live), it < max_iters)
+
+    def body(carry):
+        y, d, live, it_rows, it = carry
+        y_new = sh.constrain(sr.add(y, d), ("vertex", "query_batch"))
+        d_new = sr.minus(contract.spmm(edges, d, transpose=True), y_new)
+        d_new = sh.constrain(d_new, ("vertex", "query_batch"))
+        # a source's row of Δ going all-0̄ is its convergence: from then on
+        # the row re-derives 0̄ forever (δF(0̄) ⊖ Y = 0̄), so masking is
+        # only needed for the per-row iteration counts, not the values.
+        live_new = jnp.any(d_new != sr.zero, axis=0)
+        return y_new, d_new, live_new, it_rows + live, it + 1
+
+    y, _, _, it_rows, _ = jax.lax.while_loop(
+        cond, body, (x0, d0, live0, jnp.zeros((b,), jnp.int32),
+                     jnp.asarray(0)))
+    return y.T, it_rows
+
+
 # --------------------------------------------------------------------------
 # Host path: true sparse worklist over a CSR view of the edges
 # --------------------------------------------------------------------------
+
+
+def _batched_frontier_fixpoint(edges, init, max_iters):
+    """Host worklist mode for a (B, n) init: one worklist per source.
+
+    The frontier representation is inherently per-source (each row has
+    its own changed-tuple set), so batching is a host loop; the batched
+    hot path is ``mode="jit"``.  Returns stacked results, a (B,) iters
+    vector, and the per-source FrontierStats list.
+    """
+    ys, iters, stats = [], [], []
+    for row in np.asarray(init):
+        y, it, st = _frontier_fixpoint(edges, row, max_iters)
+        ys.append(y)
+        iters.append(it)
+        stats.append(st)
+    return jnp.stack(ys), np.asarray(iters, np.int32), stats
 
 
 def _frontier_fixpoint(edges: SparseRelation, init, max_iters: int):

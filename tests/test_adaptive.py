@@ -1,0 +1,110 @@
+"""Regression tests for the adaptive density switch
+(`repro.sparse.adaptive`): densify→sparsify round-trips under the
+hysteresis thresholds preserve exact relation contents, and a density
+sequence straddling the switch point never makes the representation
+oscillate."""
+
+import numpy as np
+import pytest
+
+from repro.core import ir, engine
+from repro.core import semiring as sr_mod
+from repro.sparse import (DENSIFY_ABOVE, SPARSIFY_BELOW, SparseRelation,
+                          adapt_value, density)
+
+SEMIRINGS = ["bool", "trop", "maxplus", "nat", "real"]
+
+
+def _dense_at_density(sr_name: str, d: float, shape=(24, 24), seed=0):
+    """A host array with an exact live fraction of ``d``."""
+    sr = sr_mod.get(sr_name, lib="np")
+    rng = np.random.default_rng(seed)
+    n = int(np.prod(shape))
+    k = int(round(d * n))
+    arr = np.full(n, sr.zero, sr.dtype)
+    idx = rng.choice(n, size=k, replace=False)
+    if sr_name == "bool":
+        arr[idx] = True
+    else:
+        arr[idx] = rng.integers(1, 5, k).astype(sr.dtype)
+    return arr.reshape(shape)
+
+
+def _contents(arr, sr_name: str) -> np.ndarray:
+    return np.asarray(arr.to_dense() if isinstance(arr, SparseRelation)
+                      else arr)
+
+
+@pytest.mark.parametrize("sr_name", SEMIRINGS)
+@pytest.mark.parametrize("d", [0.0, 0.01, 0.04, 0.10, 0.30])
+def test_round_trip_preserves_contents(sr_name, d):
+    """dense → adapt → (maybe sparse) → adapt → … keeps the exact
+    relation contents at every step, at densities below, inside, and
+    above the hysteresis band."""
+    base = _dense_at_density(sr_name, d)
+    cur = base
+    for _ in range(4):
+        cur = adapt_value(cur, sr_name)
+        assert np.array_equal(_contents(cur, sr_name), base)
+
+
+@pytest.mark.parametrize("sr_name", ["bool", "trop", "nat"])
+def test_explicit_round_trip_exact(sr_name):
+    """from_dense → to_dense is exact (coalescing, zero-dropping and the
+    padding sentinel never alter live tuples)."""
+    base = _dense_at_density(sr_name, 0.07, seed=3)
+    rel = SparseRelation.from_dense(base, sr_name)
+    assert np.array_equal(np.asarray(rel.to_dense()), base)
+    # and density agrees between representations
+    assert density(rel, sr_name) == pytest.approx(
+        density(base, sr_name), abs=1e-9)
+
+
+@pytest.mark.parametrize("sr_name", ["bool", "trop"])
+def test_hysteresis_band_keeps_representation(sr_name):
+    """Inside the (SPARSIFY_BELOW, DENSIFY_ABOVE) band the current
+    representation always wins — from either side."""
+    mid = (SPARSIFY_BELOW + DENSIFY_ABOVE) / 2
+    dense_mid = _dense_at_density(sr_name, mid)
+    assert not isinstance(adapt_value(dense_mid, sr_name), SparseRelation)
+    sparse_mid = SparseRelation.from_dense(dense_mid, sr_name)
+    assert isinstance(adapt_value(sparse_mid, sr_name), SparseRelation)
+
+
+@pytest.mark.parametrize("sr_name", ["bool", "trop"])
+def test_no_oscillation_straddling_the_switch_point(sr_name):
+    """Walk a density sequence that repeatedly straddles the sparsify
+    threshold *inside the band*: representation must flip only when an
+    outer threshold is actually crossed — 3 flips for the full sweep,
+    none during the straddles."""
+    seq = [0.04, 0.10, 0.20, 0.10, 0.20, 0.10,      # straddle mid-band
+           0.26,                                     # -> dense
+           0.20, 0.10, 0.20, 0.10,                   # straddle again
+           0.04]                                     # -> sparse
+    cur = _dense_at_density(sr_name, seq[0])
+    flips = []
+    for i, d in enumerate(seq):
+        was_sparse = isinstance(cur, SparseRelation)
+        fresh = _dense_at_density(sr_name, d, seed=i)
+        cur = (SparseRelation.from_dense(fresh, sr_name)
+               if was_sparse else fresh)
+        cur = adapt_value(cur, sr_name)
+        if isinstance(cur, SparseRelation) != was_sparse:
+            flips.append((i, d))
+    assert flips == [(0, 0.04), (6, 0.26), (11, 0.04)], flips
+
+
+def test_database_adapt_round_trip():
+    """Database.adapt under drifting density keeps relation contents and
+    respects the hysteresis (engine-level wiring of adapt_value)."""
+    schema = ir.Schema()
+    schema.declare("E", ("id", "id"), "bool")
+    base = _dense_at_density("bool", 0.02, shape=(16, 16))
+    db = engine.Database(schema, {"id": 16}, {"E": base})
+    db1 = db.adapt()
+    assert db1.storage_of("E") == "sparse"
+    assert np.array_equal(_contents(db1.relations["E"], "bool"), base)
+    db2 = db1.adapt()
+    assert db2.storage_of("E") == "sparse"  # stable under re-adaptation
+    dense_again = db2.with_storage("E", "dense")
+    assert np.array_equal(np.asarray(dense_again.relations["E"]), base)

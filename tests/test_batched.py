@@ -1,0 +1,175 @@
+"""Batch-parity: the (B, n) multi-source fixpoints must equal a Python
+loop of B single-source runs — iteration-for-iteration on a fixed seed —
+for dense vs sparse backends and jit vs frontier modes (DESIGN.md §3)."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import fixpoint as fx
+from repro.core import semiring as sr_mod
+from repro.datalog import datasets
+from repro.sparse import SparseRelation, mspm, vspm
+from repro.sparse.fixpoint import (sparse_seminaive_fixpoint,
+                                   sparse_seminaive_fixpoint_stats)
+
+
+def _instance(kind: str, seed: int, b: int = 5):
+    """(edges SparseRelation, dense weights, (B, n) init, semiring)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(15, 40))
+    g = datasets.erdos_renyi(n, float(rng.uniform(1.5, 3.5)), seed=seed,
+                             weighted=True)
+    sources = rng.integers(0, n, b)
+    if kind == "bm":
+        adj = np.asarray(g.adjacency())
+        init = np.zeros((b, n), bool)
+        init[np.arange(b), sources] = True
+        return g.sparse_adjacency(), adj, init, "bool"
+    # sssp
+    adj = np.asarray(g.adjacency())
+    w = np.where(adj, 1.0, np.inf).astype(np.float32)
+    w[g.edges[:, 0], g.edges[:, 1]] = g.weights
+    init = np.full((b, n), np.inf, np.float32)
+    init[np.arange(b), sources] = 0.0
+    return g.sparse_adjacency(semiring="trop"), w, init, "trop"
+
+
+KINDS = ["bm", "sssp"]
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_sparse_jit_batched_equals_loop(kind, seed):
+    rel, _, init, _ = _instance(kind, seed)
+    yb, itb = sparse_seminaive_fixpoint(rel, jnp.asarray(init), mode="jit")
+    assert yb.shape == init.shape and itb.shape == (init.shape[0],)
+    for i, row in enumerate(init):
+        ys, its = sparse_seminaive_fixpoint(rel, jnp.asarray(row),
+                                            mode="jit")
+        assert np.array_equal(np.asarray(yb[i]), np.asarray(ys))
+        assert int(itb[i]) == int(its)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_sparse_frontier_batched_equals_loop(kind):
+    rel, _, init, _ = _instance(kind, seed=3)
+    yb, itb, stats = sparse_seminaive_fixpoint_stats(rel, init,
+                                                     mode="frontier")
+    assert len(stats) == init.shape[0]
+    for i, row in enumerate(init):
+        ys, its, _ = sparse_seminaive_fixpoint_stats(rel, row,
+                                                     mode="frontier")
+        assert np.array_equal(np.asarray(yb[i]), np.asarray(ys))
+        assert int(itb[i]) == int(its)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_jit_and_frontier_batched_agree(kind):
+    rel, _, init, _ = _instance(kind, seed=4)
+    yj, itj = sparse_seminaive_fixpoint(rel, jnp.asarray(init), mode="jit")
+    yf, itf, _ = sparse_seminaive_fixpoint_stats(rel, init,
+                                                 mode="frontier")
+    assert np.array_equal(np.asarray(yj), np.asarray(yf))
+    assert np.array_equal(np.asarray(itj), np.asarray(itf))
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("max_iters", [1, 2, 4])
+def test_batched_truncation_parity(kind, max_iters):
+    """max_iters truncation must leave each batched row in exactly the
+    state its single-source run reaches at the same cutoff."""
+    rel, _, init, _ = _instance(kind, seed=5)
+    yb, itb = sparse_seminaive_fixpoint(rel, jnp.asarray(init),
+                                        mode="jit", max_iters=max_iters)
+    for i, row in enumerate(init):
+        ys, its = sparse_seminaive_fixpoint(rel, jnp.asarray(row),
+                                            mode="jit",
+                                            max_iters=max_iters)
+        assert np.array_equal(np.asarray(yb[i]), np.asarray(ys))
+        assert int(itb[i]) == int(its) <= max_iters
+
+
+def _dense_batched_runners(w, init, sr_name):
+    sr = sr_mod.get(sr_name)
+    wj, ij = jnp.asarray(w), jnp.asarray(init)
+
+    def a_of(x):  # batched linear part: x (B, n) → (B, n)
+        if sr_name == "bool":
+            return jnp.any(x[:, :, None] & wj[None], axis=1)
+        return jnp.min(x[:, :, None] + wj[None], axis=1)
+
+    ico = lambda s: {"X": sr.add(ij, a_of(s["X"]))}
+    dico = lambda s: {"X": a_of(s["X"])}
+    x0 = {"X": jnp.full(init.shape, sr.zero, sr.dtype)}
+    return sr, ico, dico, x0
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("seed", [0, 6])
+def test_dense_batched_gsn_equals_loop_and_sparse(kind, seed):
+    """The dense mirror (core.fixpoint.batched_seminaive_fixpoint) must
+    match both a loop of dense single GSN runs and the sparse batched
+    runner, with identical per-row iteration counts."""
+    rel, w, init, sr_name = _instance(kind, seed)
+    sr, ico, dico, x0 = _dense_batched_runners(w, init, sr_name)
+    yd, itd = fx.batched_seminaive_fixpoint(ico, dico, x0, {"X": sr})
+    ys, its = sparse_seminaive_fixpoint(rel, jnp.asarray(init),
+                                        mode="jit")
+    assert np.array_equal(np.asarray(yd["X"]), np.asarray(ys))
+    assert np.array_equal(np.asarray(itd), np.asarray(its))
+    for i, row in enumerate(init):
+        w1 = jnp.asarray(w)
+
+        def a1(x):
+            if sr_name == "bool":
+                return jnp.any(x[:, None] & w1, axis=0)
+            return jnp.min(x[:, None] + w1, axis=0)
+
+        r = jnp.asarray(row)
+        y1, it1 = fx.seminaive_fixpoint(
+            lambda s: {"X": sr.add(r, a1(s["X"]))},
+            lambda s: {"X": a1(s["X"])},
+            {"X": jnp.full(row.shape, sr.zero, sr.dtype)}, {"X": sr})
+        assert np.array_equal(np.asarray(yd["X"][i]), np.asarray(y1["X"]))
+        assert int(itd[i]) == int(it1)
+
+
+def test_batched_gsn_rejects_non_lattice():
+    sr = sr_mod.get("nat")
+    x0 = {"X": jnp.zeros((2, 3), jnp.float32)}
+    with pytest.raises(ValueError, match="lacks"):
+        fx.batched_seminaive_fixpoint(lambda s: s, lambda s: s, x0,
+                                      {"X": sr})
+
+
+def test_zero_init_rows_are_inert_padding():
+    """All-0̄ init rows (the serve loop's batch padding) converge in one
+    round and never disturb live rows."""
+    rel, _, init, _ = _instance("bm", seed=7, b=3)
+    padded = np.zeros((5, init.shape[1]), init.dtype)
+    padded[:3] = init
+    yp, itp = sparse_seminaive_fixpoint(rel, jnp.asarray(padded),
+                                        mode="jit")
+    yb, itb = sparse_seminaive_fixpoint(rel, jnp.asarray(init),
+                                        mode="jit")
+    assert np.array_equal(np.asarray(yp[:3]), np.asarray(yb))
+    assert not np.asarray(yp[3:]).any()
+    assert np.asarray(itp[3:]).max() <= 1
+
+
+def test_mspm_equals_vspm_loop():
+    rel, _, _, _ = _instance("sssp", seed=8)
+    rng = np.random.default_rng(0)
+    x = rng.uniform(0.0, 4.0, (6, rel.shape[0])).astype(np.float32)
+    out = mspm(jnp.asarray(x), rel.as_jnp())
+    for i in range(x.shape[0]):
+        row = vspm(jnp.asarray(x[i]), rel.as_jnp())
+        assert np.allclose(np.asarray(out[i]), np.asarray(row))
+
+
+def test_non_square_batched_rejected():
+    rel = SparseRelation.from_coo([[0, 2]], [True], (2, 4), "bool")
+    with pytest.raises(ValueError, match="square"):
+        sparse_seminaive_fixpoint(rel, jnp.zeros((3, 4), bool), mode="jit")

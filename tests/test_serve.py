@@ -1,0 +1,275 @@
+"""The batched Datalog serve loop: vector-form routing, request packing,
+compile-cache reuse, inert padding, FGH Π₂ routing, and the sharded
+(mesh-attached) path must all return exactly the single-source engine
+answers."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import engine, vectorize
+from repro.core.program import run_program
+from repro.datalog import datasets, programs
+from repro.launch.datalog_serve import (DatalogServer, fgh_make_program,
+                                        _bucket)
+from repro.launch.mesh import make_datalog_mesh
+from repro.sparse import SparseRelation
+
+
+def _bm_db(n=120, seed=2, sparse=True):
+    g = datasets.erdos_renyi(n, 3.0, seed=seed)
+    schema = programs.bm(a=0).original.schema
+    e = g.sparse_adjacency() if sparse else g.adjacency()
+    return g, engine.Database(schema, {"id": n},
+                              {"E": e, "V": jnp.ones((n,), bool)})
+
+
+def _expected_bm(db, source):
+    dense_db = db.with_storage("E", "dense")
+    ans, _ = run_program(programs.bm(a=source).optimized, dense_db,
+                         mode="seminaive")
+    return np.asarray(ans)
+
+
+def test_bucket():
+    assert [_bucket(b, 64) for b in (1, 2, 3, 5, 8, 33, 64, 200)] == \
+        [1, 2, 4, 8, 8, 64, 64, 64]
+
+
+@pytest.mark.parametrize("sparse", [True, False])
+def test_served_answers_match_engine(sparse):
+    """Published Π₂, sparse and dense backends: every served answer is
+    the single-source engine answer."""
+    _, db = _bm_db(sparse=sparse)
+    server = DatalogServer(max_batch=8)
+    fam = server.register("reach", lambda a: programs.bm(a=a).optimized,
+                          db)
+    assert fam.backend == ("sparse" if sparse else "dense")
+    sources = [0, 7, 31, 99, 5, 5]
+    reqs = [server.submit("reach", s) for s in sources]
+    served = server.run_until_idle()
+    assert served == len(sources)
+    for req in reqs:
+        assert req.iters >= 1
+        assert np.array_equal(req.result, _expected_bm(db, req.source)), \
+            req.source
+
+
+def test_compile_cache_reuse_and_buckets():
+    """Same B-bucket → cache hit; new bucket → exactly one new entry."""
+    _, db = _bm_db()
+    server = DatalogServer(max_batch=8)
+    server.register("reach", lambda a: programs.bm(a=a).optimized, db)
+    for s in range(8):
+        server.submit("reach", s)
+    server.run_until_idle()          # one batch of 8 → bucket 8
+    assert server.stats == {**server.stats, "cache_misses": 1,
+                            "cache_hits": 0}
+    for s in range(16):
+        server.submit("reach", s)
+    server.run_until_idle()          # two more bucket-8 batches
+    assert server.stats["cache_misses"] == 1
+    assert server.stats["cache_hits"] == 2
+    server.submit("reach", 3)
+    server.run_until_idle()          # bucket 1 → second compile
+    assert server.stats["cache_misses"] == 2
+
+
+def test_padding_rows_do_not_leak():
+    """A short batch is padded to its power-of-two bucket with inert 0̄
+    rows; answers must be identical to unpadded serving."""
+    _, db = _bm_db()
+    server = DatalogServer(max_batch=8)
+    server.register("reach", lambda a: programs.bm(a=a).optimized, db)
+    reqs = [server.submit("reach", s) for s in (11, 22, 33)]
+    server.run_until_idle()
+    assert server.stats["padded_rows"] == 1  # bucket 4, three live rows
+    for req in reqs:
+        assert np.array_equal(req.result, _expected_bm(db, req.source))
+
+
+def test_mixed_families_interleaved():
+    """Two families interleaved in the queue: the packer groups per
+    family while preserving arrival order of the rest."""
+    g, db = _bm_db()
+    b = programs.sssp(a=0, wmax=4, dmax=40)
+    g2 = datasets.erdos_renyi(60, 2.5, seed=4, weighted=True, wmax=4)
+    db2 = b.make_db(g2)
+    server = DatalogServer(max_batch=4)
+    server.register("reach", lambda a: programs.bm(a=a).optimized, db)
+    server.register("sssp",
+                    lambda a: programs.sssp(a=a, wmax=4, dmax=40).optimized,
+                    db2)
+    reqs = []
+    for i in range(6):
+        reqs.append(server.submit("reach", 2 * i))
+        reqs.append(server.submit("sssp", 3 * i))
+    server.run_until_idle()
+    for req in reqs:
+        if req.family == "reach":
+            assert np.array_equal(req.result, _expected_bm(db, req.source))
+        else:
+            ans, _ = run_program(
+                programs.sssp(a=req.source, wmax=4, dmax=40).optimized,
+                db2, mode="seminaive")
+            assert np.array_equal(req.result, np.asarray(ans)), req.source
+
+
+def test_sparse_edges_override():
+    """SSSP at scale: the schema-level E3 is a dense (n, n, w) tensor,
+    but serving can route a weighted COO adjacency straight into the
+    batched runner via the ``edges=`` override."""
+    b = programs.sssp(a=0, wmax=6, dmax=48)
+    g = datasets.erdos_renyi(80, 2.5, seed=5, weighted=True, wmax=6)
+    db = b.make_db(g)
+    rel = g.sparse_adjacency(semiring="trop")
+    server = DatalogServer(max_batch=4)
+    fam = server.register(
+        "sssp", lambda a: programs.sssp(a=a, wmax=6, dmax=48).optimized,
+        db, edges=rel)
+    assert fam.backend == "sparse"
+    reqs = [server.submit("sssp", s) for s in (0, 13, 42)]
+    server.run_until_idle()
+    for req in reqs:
+        ans, _ = run_program(
+            programs.sssp(a=req.source, wmax=6, dmax=48).optimized, db,
+            mode="seminaive")
+        assert np.array_equal(req.result, np.asarray(ans)), req.source
+
+
+def test_fgh_route_serves_every_source():
+    """Π₂ synthesized by core.fgh at two placeholder sources serves
+    arbitrary sources through constant substitution."""
+    _, db = _bm_db(n=60)
+    make_program = fgh_make_program(lambda a: programs.bm(a=a),
+                                    ["E", "V"])
+    # the substituted program is a faithful Π₂ for an unseen source
+    p7 = make_program(7)
+    dense_db = db.with_storage("E", "dense")
+    a_pub, _ = run_program(programs.bm(a=7).optimized, dense_db,
+                           mode="seminaive")
+    a_fgh, _ = run_program(p7, dense_db)
+    assert np.array_equal(np.asarray(a_pub), np.asarray(a_fgh))
+
+    # the second placeholder (1) must serve through substitution too —
+    # its own derivation run has drifted fresh-variable names
+    server = DatalogServer(max_batch=4)
+    server.register("reach", make_program, db)
+    reqs = [server.submit("reach", s) for s in (0, 1, 7, 29, 53)]
+    server.run_until_idle()
+    for req in reqs:
+        assert np.array_equal(req.result, _expected_bm(db, req.source)), \
+            req.source
+
+
+def test_linear_signature_is_name_drift_invariant():
+    """Two independent fgh derivations (fresh-counter variable names
+    drift between runs) and the published rewrite must all hash to the
+    same linear signature — the compile-cache / init-routing key."""
+    from repro.core import fgh, verify
+
+    sigs = []
+    for p in (0, 1):
+        b = programs.bm(a=p)
+        task = verify.task_from_program(b.original, ["E", "V"],
+                                        constraint=b.constraint)
+        rep = fgh.optimize(task, rng=np.random.default_rng(0))
+        assert rep.ok
+        sigs.append(vectorize.vector_form(rep.program).signature)
+    published = vectorize.vector_form(programs.bm(a=9).optimized).signature
+    assert sigs[0] == sigs[1] == published
+
+
+def test_mesh_attached_serving():
+    """With a (single-device here) datalog mesh attached, the sharded
+    path — device_put of the packed batch + in-loop constraints — still
+    returns exact answers."""
+    _, db = _bm_db(n=64)
+    server = DatalogServer(max_batch=4, mesh=make_datalog_mesh(1))
+    server.register("reach", lambda a: programs.bm(a=a).optimized, db)
+    reqs = [server.submit("reach", s) for s in (1, 2, 3, 4, 5)]
+    server.run_until_idle()
+    for req in reqs:
+        assert np.array_equal(req.result, _expected_bm(db, req.source))
+
+
+def test_bad_source_fails_alone():
+    """A request whose program changed the family's linear operator is
+    marked failed; the rest of its batch is still served."""
+    _, db = _bm_db(n=60)
+    g2 = datasets.erdos_renyi(60, 2.0, seed=9)
+    db2 = engine.Database(programs.cc().original.schema, {"id": 60},
+                          {"E": g2.sparse_adjacency(symmetric=True),
+                           "V": jnp.ones((60,), bool)})
+
+    def make_program(a):
+        if a == 13:  # different linear operator → signature mismatch
+            return programs.cc().optimized
+        return programs.bm(a=a).optimized
+
+    server = DatalogServer(max_batch=8)
+    server.register("reach", make_program, db)
+    reqs = [server.submit("reach", s) for s in (2, 13, 41)]
+    server.run_until_idle()
+    bad = reqs[1]
+    assert bad.result is None and "linear operator" in bad.error
+    assert server.stats["failed"] == 1 and server.stats["served"] == 2
+    for req in (reqs[0], reqs[2]):
+        assert req.error is None
+        assert np.array_equal(req.result, _expected_bm(db, req.source))
+
+
+def test_vector_form_rejects_post_and_non_identity_outputs():
+    """Programs whose answer is not the raw fixpoint x* must be refused:
+    a host post-epilogue or a non-identity output chain."""
+    ws = programs.ws()
+    with pytest.raises(ValueError, match="post-epilogue"):
+        vectorize.vector_form(ws.optimized)
+    b = programs.bm(a=0).optimized
+    from repro.core import ir
+    from repro.core.program import Program, Rule
+    twisted = Program(
+        b.name, b.schema, b.strata,
+        [Rule("Qans", ir.SSP(("y",), (ir.Term(
+            (ir.RelAtom("Q", ("y",)), ir.RelAtom("V", ("y",))), ()),),
+            "bool"))],
+        sort_hints=dict(b.sort_hints))
+    with pytest.raises(ValueError, match="not the identity"):
+        vectorize.vector_form(twisted)
+
+
+def test_non_lattice_family_rejected():
+    """MLM's counting semiring has no ⊖ — registration must refuse."""
+    b = programs.mlm()
+    g = datasets.random_recursive_tree(20, seed=1)
+    db = b.make_db(g)
+    server = DatalogServer()
+    with pytest.raises(ValueError, match="lacks"):
+        server.register("mlm", lambda a: b.optimized, db)
+
+
+def test_unknown_family_rejected():
+    server = DatalogServer()
+    with pytest.raises(KeyError, match="unknown family"):
+        server.submit("nope", 0)
+
+
+def test_vector_form_rejects_non_vector_programs():
+    b = programs.bm(a=0)
+    # binary TC IDB behind a real (non-identity) G-map: refused
+    with pytest.raises(ValueError, match="not the identity|unary IDB"):
+        vectorize.vector_form(b.original)
+    ws = programs.ws()
+    with pytest.raises(ValueError):
+        vectorize.vector_form(ws.original)
+
+
+def test_edge_operator_sparse_fast_path_matches_dense():
+    g, db = _bm_db(n=50, seed=7)
+    vf = vectorize.vector_form(programs.bm(a=0).optimized)
+    e_sparse = vectorize.edge_operator(vf, db)
+    assert isinstance(e_sparse, SparseRelation)
+    e_dense = vectorize.edge_operator(vf, db.with_storage("E", "dense"))
+    assert np.array_equal(np.asarray(e_sparse.to_dense()),
+                          np.asarray(e_dense))
