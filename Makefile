@@ -5,6 +5,8 @@
 #   make bench-smoke — small-size pass over the benchmark drivers
 #   make bench-sparse— dense-vs-sparse scaling acceptance run
 #   make bench-serve — batched serving throughput (writes BENCH_serve.json)
+#   make bench-plan  — planner-vs-empirical crossover smoke (CI gate;
+#                      exits 1 on disagreement at the extremes)
 
 PY      ?= python
 PYPATH  := src
@@ -24,4 +26,7 @@ bench-sparse:
 bench-serve:
 	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.serve_batch
 
-.PHONY: test test-all bench-smoke bench-sparse bench-serve
+bench-plan:
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.plan_crossover --quick
+
+.PHONY: test test-all bench-smoke bench-sparse bench-serve bench-plan

@@ -1,0 +1,201 @@
+"""Planner crossover acceptance: sweep density × n and check that the
+cost-based planner (DESIGN.md §4) picks the empirically fastest runner at
+the extremes.
+
+Each cell builds a benchmark family (BM reachability / CC labels / SSSP
+distances), plans it with ``mode="auto"``, then times the forced
+alternatives with ``run_program``'s forced-plan modes:
+
+* **sparse extreme** (large n, constant average degree): the plan must
+  route to a sparse vector runner (``sparse_frontier``/``sparse_jit``);
+  empirically the sparse pick must not lose to the dense GSN engine.
+* **dense extreme** (small n, high density): the plan must stay on a
+  dense runner (``vector_dense``/``dense_gsn``/``dense_naive``); the
+  dense pick must not lose to the forced sparse runner.
+
+Exactness is asserted at every overlap cell: the chosen runner's answer
+must equal the dense engine's bit-for-bit.  Exit code 1 on any
+planner/empirical disagreement — this is the `make bench-plan` CI gate.
+
+Full (non ``--quick``) runs add the 50k-vertex acceptance cells: BM and
+SSSP on sparse 50k-vertex graphs must plan onto the sparse path and
+answer in sub-second time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.core import engine, planner
+from repro.core.program import run_program
+from repro.datalog import datasets, programs
+
+DENSE_RUNNERS = ("vector_dense", "dense_gsn", "dense_naive")
+SPARSE_RUNNERS = ("sparse_frontier", "sparse_jit")
+
+#: empirical slack — "did not lose" means within this factor of the rival
+SLACK = 2.0
+
+
+def _bm_db(n: int, avg_deg: float, *, sparse: bool, seed: int = 0):
+    g = (datasets.erdos_renyi_sparse(n, avg_deg, seed=seed) if sparse
+         else datasets.erdos_renyi(n, avg_deg, seed=seed))
+    schema = programs.bm(a=0).original.schema
+    e = g.sparse_adjacency() if sparse else g.adjacency()
+    return engine.Database(schema, {"id": n},
+                           {"E": e, "V": jnp.ones((n,), bool)})
+
+
+def _cell(name: str, prog, db, *, expect: tuple[str, ...],
+          rival_mode: str, iters: int = 2, time_gate: bool = True) -> dict:
+    """Plan one cell, time plan-choice vs the forced rival, check
+    exactness against the dense naive engine.
+
+    ``time_gate=False`` (quick/CI mode) keeps the wall-clock comparison
+    advisory: at toy sizes the cells run in ~1 ms, where shared-runner
+    noise would make a hard 2× gate flaky — the deterministic runner-pick
+    and exactness assertions do the gating there.
+    """
+    plan = planner.plan_program(prog, db, mode="auto")
+    runner = plan.strata[0].runner
+    ok_pick = runner in expect
+    t_pick = timeit(lambda: run_program(prog, db, plan=plan)[0],
+                    iters=iters)
+    t_rival = timeit(lambda: run_program(prog, db, mode=rival_mode)[0],
+                     iters=iters)
+    ok_time = (t_pick <= SLACK * t_rival) or not time_gate
+    a_pick, _ = run_program(prog, db, plan=plan)
+    a_ref, _ = run_program(prog, db, mode="naive")
+    ok_exact = np.array_equal(np.asarray(a_pick), np.asarray(a_ref))
+    row = dict(cell=name, runner=runner, expect=expect,
+               t_pick_ms=round(t_pick * 1e3, 2),
+               t_rival_ms=round(t_rival * 1e3, 2),
+               pick_ok=ok_pick, time_ok=ok_time, exact=ok_exact)
+    print(f"{name:24s} runner={runner:15s} pick={'OK' if ok_pick else 'X'} "
+          f"t={t_pick * 1e3:8.2f}ms rival({rival_mode})="
+          f"{t_rival * 1e3:8.2f}ms time={'OK' if ok_time else 'X'} "
+          f"exact={'OK' if ok_exact else 'X'}", flush=True)
+    return row
+
+
+def run(sizes=(400, 1500), dense_n: int = 160, big: int = 50_000,
+        quick: bool = False) -> bool:
+    """Raises ``RuntimeError`` on any planner/empirical disagreement so
+    the aggregate ``benchmarks.run`` driver reports the failure too."""
+    if quick:
+        sizes, dense_n, big = (200, 600), 120, 0
+    time_gate = not quick
+    rows = []
+
+    # -- sparse extreme: BM at growing n, constant degree ------------------
+    for n in sizes:
+        db = _bm_db(n, 3.0, sparse=True)
+        rows.append(_cell(f"bm/sparse/n={n}", programs.bm(a=0).optimized,
+                          db, expect=SPARSE_RUNNERS,
+                          rival_mode="seminaive", time_gate=time_gate))
+
+    # -- dense extreme: BM + CC on a high-density block --------------------
+    db_d = _bm_db(dense_n, 0.4 * dense_n, sparse=False)
+    rows.append(_cell(f"bm/dense/n={dense_n}", programs.bm(a=0).optimized,
+                      db_d, expect=DENSE_RUNNERS,
+                      rival_mode="sparse_jit", time_gate=time_gate))
+    bcc = programs.cc()
+    g_cc = datasets.erdos_renyi(dense_n, 0.4 * dense_n, seed=1)
+    rows.append(_cell(f"cc/dense/n={dense_n}", bcc.optimized,
+                      bcc.make_db(g_cc), expect=DENSE_RUNNERS,
+                      rival_mode="sparse_jit", time_gate=time_gate))
+
+    # -- 50k acceptance cells (full runs only) -----------------------------
+    if big:
+        ok_big = _acceptance_50k(big, rows)
+    else:
+        ok_big = True
+
+    ok = ok_big and all(r["pick_ok"] and r["time_ok"] and r["exact"]
+                        for r in rows)
+    print(f"plan_crossover: {'PASS' if ok else 'FAIL'} "
+          f"({len(rows)} cells)", flush=True)
+    if not ok:
+        bad = [r["cell"] for r in rows
+               if not (r["pick_ok"] and r["time_ok"] and r["exact"])]
+        raise RuntimeError(
+            f"planner/empirical disagreement at the extremes: {bad}")
+    return ok
+
+
+def _acceptance_50k(n: int, rows: list) -> bool:
+    """BM and SSSP at 50k vertices must plan onto the sparse path, and
+    match the dense engine exactly at an overlap size."""
+    ok = True
+    # BM: run_program(mode="auto") end-to-end on the 50k sparse db
+    db = _bm_db(n, 8.0, sparse=True)
+    prog = programs.bm(a=0).optimized
+    plan = planner.plan_program(prog, db, mode="auto")
+    runner = plan.strata[0].runner
+    t = timeit(lambda: run_program(prog, db, plan=plan)[0], iters=1)
+    print(f"bm/sparse/n={n}        runner={runner:15s} "
+          f"t={t * 1e3:8.1f}ms", flush=True)
+    ok &= runner in SPARSE_RUNNERS
+
+    # SSSP: the schema-level E3 would be a dense (n, n, w) tensor; the
+    # plan-level edges override routes a weighted COO adjacency instead
+    g = datasets.erdos_renyi_sparse(n, 6.0, seed=3, weighted=True, wmax=6)
+    b = programs.sssp(a=0, wmax=6, dmax=48)
+    db_s = engine.Database(b.original.schema, {"id": n, "w": 6, "d": 48}, {})
+    plan_s = planner.plan_program(b.optimized, db_s, mode="auto",
+                                  edges=g.sparse_adjacency(semiring="trop"))
+    runner_s = plan_s.strata[0].runner
+    t_s = timeit(lambda: run_program(b.optimized, db_s, plan=plan_s)[0],
+                 iters=1)
+    print(f"sssp/sparse/n={n}      runner={runner_s:15s} "
+          f"t={t_s * 1e3:8.1f}ms", flush=True)
+    ok &= runner_s in SPARSE_RUNNERS
+
+    # overlap exactness: same programs at a size the dense engine allows
+    n_small = 800
+    db_small = _bm_db(n_small, 8.0, sparse=True, seed=5)
+    a_sp, s_sp = run_program(prog, db_small)
+    a_d, _ = run_program(prog, db_small.with_storage("E", "dense"),
+                         mode="seminaive")
+    exact = np.array_equal(np.asarray(a_sp), np.asarray(a_d))
+    print(f"bm/overlap/n={n_small}     runner="
+          f"{s_sp.plan.strata[0].runner:15s} exact="
+          f"{'OK' if exact else 'X'}", flush=True)
+    ok &= exact
+
+    g2 = datasets.erdos_renyi_sparse(n_small, 4.0, seed=6, weighted=True,
+                                     wmax=6)
+    db2 = b.make_db(g2)
+    plan2 = planner.plan_program(b.optimized, db2, mode="auto",
+                                 edges=g2.sparse_adjacency(semiring="trop"))
+    a_sp2, _ = run_program(b.optimized, db2, plan=plan2)
+    a_d2, _ = run_program(b.optimized, db2, mode="seminaive")
+    exact2 = np.array_equal(np.asarray(a_sp2), np.asarray(a_d2))
+    print(f"sssp/overlap/n={n_small}   runner="
+          f"{plan2.strata[0].runner:15s} exact="
+          f"{'OK' if exact2 else 'X'}", flush=True)
+    ok &= exact2
+    rows.append(dict(cell="acceptance50k", pick_ok=ok, time_ok=True,
+                     exact=exact and exact2))
+    return ok
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="toy sizes, no 50k acceptance cells (CI smoke)")
+    args = ap.parse_args()
+    try:
+        run(quick=args.quick)
+    except RuntimeError as e:
+        print(e, file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -36,6 +36,7 @@ SUITES: dict[str, tuple[str, str, dict, dict]] = {
                {}, {"sizes": (256,), "big": 2000}),
     "serve": ("benchmarks.serve_batch", "run",
               {}, {"n": 2000, "batch_sizes": (1, 8), "out": None}),
+    "plan": ("benchmarks.plan_crossover", "run", {}, {"quick": True}),
 }
 
 

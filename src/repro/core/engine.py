@@ -15,8 +15,10 @@ planner (an "einsum" over arbitrary semirings) with:
 Two backends share the code path: ``backend="jnp"`` for staged/distributed
 execution and ``backend="np"`` for the synthesizer/verifier's eager
 micro-evaluations (numpy sidesteps per-op dispatch overhead; the CEGIS
-loop runs thousands of tiny expressions).  The planner is the TPU-native
-analogue of a Datalog engine's join pipeline (DESIGN.md §2).
+loop runs thousands of tiny expressions).  The contraction planner is
+the TPU-native analogue of a Datalog engine's join pipeline (DESIGN.md
+§2); *which* relations arrive sparse vs dense is decided above it by the
+cost-based execution planner (:mod:`repro.core.planner`, DESIGN.md §4).
 """
 
 from __future__ import annotations

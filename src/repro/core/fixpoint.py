@@ -18,6 +18,9 @@ variant that reports per-iteration statistics for benchmarks.
 :func:`batched_seminaive_fixpoint` is the multi-source mirror (DESIGN.md
 §3): every state leaf carries a leading query-batch axis, all instances
 advance in one while_loop, and convergence is tracked per row.
+
+Which of these runners executes a given stratum is decided by the
+cost-based planner (:mod:`repro.core.planner`, DESIGN.md §4).
 """
 
 from __future__ import annotations

@@ -1,0 +1,868 @@
+"""Cost-based execution planning: one ``plan → explain → execute`` pipeline.
+
+DESIGN.md §4.  The FGH rewrite produces a *program*; which physical
+runner executes each stratum — dense naive, dense GSN
+(:func:`repro.core.fixpoint.seminaive_fixpoint`), the sparse jit/frontier
+vector runners (:mod:`repro.sparse.fixpoint`), or the vectorized
+``x = init ⊕ x ⊗ E`` SpMV/SpMM step (split by :mod:`repro.core.vectorize`)
+— and which storage each relation should use, is a classic physical-plan
+decision.  It used to be made ad hoc at three sites: ``run_program``'s
+mode strings, the serve loop's bespoke vector-form routing, and host-side
+``Database.adapt`` calls.  Now :func:`plan_program` makes it once,
+:func:`explain` renders it, and :func:`execute_plan` /
+:func:`compile_batched` execute it.
+
+Cost model: an analytic O(n²)-vs-O(nnz(E)) × trip-count estimate by
+default, or ``cost_model="hlo"`` which stages each candidate's
+per-iteration step function and walks its optimized HLO with
+:func:`repro.launch.hlo_cost.staged_cost` — the same trip-count-aware
+walker the AOT dry-runs (:mod:`repro.launch.dryrun`,
+:mod:`repro.launch.datalog_dryrun`) report from.
+
+Storage is folded into planning: the hysteresis thresholds of
+:mod:`repro.sparse.adaptive` (via :func:`repro.sparse.adaptive.decide`)
+pick a per-relation representation for every binary relation a stratum
+reads, replacing host-side ``Database.adapt`` calls between strata.
+
+Plan identity: ``ExecutionPlan.signature`` is a stable hash of the
+per-stratum (runner, IDB shapes/semirings, linear-operator signature or
+stratum structure, storage decisions) — the serve loop keys its compile
+cache on ``(plan.signature, batch_bucket)``.  Staged-executable caching
+inside :func:`execute_plan` keys on :func:`db_fingerprint`, a
+weakref-token fingerprint of the relation arrays (never raw ``id()``,
+which can be recycled after GC and silently serve a stale staged
+fixpoint).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+import math
+import weakref
+from typing import Callable, Mapping
+
+import jax
+import numpy as np
+
+from repro.core import engine, ir, vectorize
+from repro.core import semiring as sr_mod
+from repro.sparse import adaptive
+from repro.sparse.coo import SparseRelation
+
+#: physical runners, in tie-break preference order (earlier wins ties)
+RUNNERS = ("sparse_jit", "sparse_frontier", "vector_dense", "dense_gsn",
+           "dense_naive", "dense_host")
+
+#: runners that execute the vector equation ``x = init ⊕ x ⊗ E``
+VECTOR_RUNNERS = ("sparse_jit", "sparse_frontier", "vector_dense")
+
+#: legacy ``run_program`` mode strings → forced runners; any *other*
+#: unknown string keeps the historical "host loop with stats" behaviour
+LEGACY_MODES = {"naive": "dense_naive", "seminaive": "dense_gsn",
+                "host": "dense_host"}
+
+#: max trip-count the analytic model will predict (deep chains saturate)
+_TRIP_CAP = 64
+
+#: staged-executable cache entries kept per Program object
+_CACHE_MAX = 512
+
+
+# --------------------------------------------------------------------------
+# Stable relation fingerprints (the plan-cache key fix)
+# --------------------------------------------------------------------------
+
+_fp_tokens: dict[int, tuple[int, object]] = {}
+_fp_counter = itertools.count()
+
+
+def _token(obj) -> int:
+    """A process-unique token for ``obj`` that is *never* recycled.
+
+    ``id(obj)`` alone is unsafe as a cache key: CPython reuses addresses
+    after GC, so a fresh relation array can silently alias a dead one's
+    cache entry.  Here the id is only a lookup hint — a weakref callback
+    evicts the entry the moment the referent dies, so a recycled id is
+    issued a fresh token.  (All our leaf types — numpy arrays, jax
+    arrays, :class:`SparseRelation` — support weakrefs; a non-weakrefable
+    object gets a fresh token on every call, trading cache hits for
+    guaranteed staleness-freedom.)
+    """
+    key = id(obj)
+    ent = _fp_tokens.get(key)
+    if ent is not None and ent[1]() is not obj:
+        ent = None  # id recycled before the callback ran
+    if ent is None:
+        tok = next(_fp_counter)
+
+        def _evict(ref, k=key):
+            # only evict our own entry — a late callback from the dead
+            # object must not pop a fresh entry at the recycled id
+            cur = _fp_tokens.get(k)
+            if cur is not None and cur[1] is ref:
+                _fp_tokens.pop(k, None)
+
+        try:
+            ref = weakref.ref(obj, _evict)
+        except TypeError:
+            # non-weakrefable leaf: no death notification is possible, so
+            # never memoize — a fresh token per call can only cause cache
+            # misses, never a stale hit on a recycled id
+            return tok
+        _fp_tokens[key] = (tok, ref)
+        return tok
+    return ent[0]
+
+
+def value_fingerprint(v) -> tuple:
+    """Stable fingerprint of one stored relation: shape/dtype/semiring
+    plus the weakref token of the backing buffer(s)."""
+    if isinstance(v, SparseRelation):
+        return ("coo", v.shape, v.semiring, _token(v.coords),
+                _token(v.values))
+    return (_token(v), tuple(getattr(v, "shape", ())),
+            str(getattr(v, "dtype", type(v).__name__)))
+
+
+def db_fingerprint(db: engine.Database, names=None) -> tuple:
+    """Fingerprint of (a subset of) a database's relations, plus its sort
+    domains — staged fixpoints bake domain sizes into output shapes even
+    when no relation array reflects them."""
+    if names is None:
+        names = db.relations
+    return (tuple(sorted(db.domains.items())),
+            tuple((n, value_fingerprint(db.relations[n]))
+                  for n in sorted(names) if n in db.relations))
+
+
+# --------------------------------------------------------------------------
+# Plan data model
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CostEstimate:
+    """Per-iteration work × predicted trip count for one candidate."""
+
+    flops_per_iter: float
+    bytes_per_iter: float
+    trips: int
+    source: str = "analytic"  # "analytic" | "hlo"
+
+    @property
+    def total(self) -> float:
+        return self.flops_per_iter * self.trips
+
+
+@dataclasses.dataclass
+class StratumPlan:
+    """The physical choice for one fixpoint stratum."""
+
+    index: int
+    idbs: tuple[str, ...]
+    runner: str
+    reason: str
+    storage: dict[str, str]        # relation → target repr (changes only)
+    storage_notes: dict[str, str]  # relation → human-readable decision
+    reads: tuple[str, ...]         # relation names this stratum consumes
+    cost: CostEstimate | None
+    considered: dict[str, CostEstimate]
+    rejected: dict[str, str]
+    vf: vectorize.VectorForm | None = None
+    edges_override: object | None = None
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    """A fully-decided physical plan for a :class:`~repro.core.program.
+    Program` against one database shape."""
+
+    program: str
+    objective: str
+    mode: str                 # "auto" or the forcing mode string
+    strata: list[StratumPlan]
+    outputs: tuple[str, ...]
+    has_post: bool
+    signature: str
+
+
+# --------------------------------------------------------------------------
+# Planning
+# --------------------------------------------------------------------------
+
+
+def plan_program(prog, db: engine.Database, hints=None, *,
+                 objective: str = "latency", mode: str = "auto",
+                 max_iters: int = 10_000, cost_model: str = "analytic",
+                 edges=None, adapt_storage: bool = True,
+                 require_vector: bool = False) -> ExecutionPlan:
+    """Choose a physical runner + storage for every stratum of ``prog``.
+
+    ``objective`` is "latency" (one query; host frontier worklists are in
+    play on CPU) or "throughput" (batched serving; only staged runners).
+    ``mode`` other than "auto" forces a runner on every stratum (legacy
+    ``run_program`` strings compile to forced plans).  ``edges`` overrides
+    the extracted linear operator of a single-stratum vector program
+    (the serve loop's weighted-COO escape hatch).  ``adapt_storage=False``
+    pins every relation to its caller-chosen representation.
+    ``require_vector=True`` raises ``ValueError`` with the recorded
+    rejection reason when stratum 0 cannot take a vector runner (the
+    serve loop can only batch the vector equation).
+    """
+    if objective not in ("latency", "throughput"):
+        raise ValueError(f"unknown objective {objective!r}")
+    hints = dict(prog.sort_hints) if hints is None else dict(hints)
+    forced = None
+    if mode != "auto":
+        forced = mode if mode in RUNNERS else \
+            LEGACY_MODES.get(mode, "dense_host")
+    plans = []
+    for si, stratum in enumerate(prog.strata):
+        plans.append(_plan_stratum(
+            prog, stratum, si, db, hints, objective=objective,
+            forced=forced, cost_model=cost_model,
+            edges=edges if si == 0 else None,
+            adapt_storage=adapt_storage and forced is None,
+            max_iters=max_iters))
+    plan = ExecutionPlan(
+        prog.name, objective, mode, plans,
+        tuple(r.head for r in prog.outputs), prog.post is not None,
+        _plan_signature(prog, db, plans))
+    if require_vector:
+        sp = plan.strata[0] if plan.strata else None
+        if sp is None or sp.runner not in VECTOR_RUNNERS:
+            why = "program has no fixpoint stratum" if sp is None \
+                else _vector_rejection(sp.rejected)
+            raise ValueError(f"{prog.name}: {why}")
+    return plan
+
+
+def _vector_rejection(rejected: Mapping[str, str]) -> str:
+    """The most informative recorded reason why no vector runner was
+    feasible — one helper so require_vector and the edges-override guard
+    report the same infeasibility identically."""
+    return (rejected.get("sparse_jit") or rejected.get("vector_dense")
+            or "no vector-form runner is feasible")
+
+
+def plan_for(prog, db: engine.Database, *, mode: str = "auto",
+             max_iters: int = 10_000,
+             objective: str = "latency") -> ExecutionPlan:
+    """Memoized :func:`plan_program` for repeated ``run_program`` calls:
+    plans are cached on the Program object, keyed by the database
+    fingerprint (stable across GC — see :func:`db_fingerprint`)."""
+    cache = prog.__dict__.setdefault("_plan_cache", {})
+    reads: set[str] = set()
+    for stratum in prog.strata:
+        reads |= _referenced(stratum)
+    key = ("plan", mode, objective, max_iters, jax.default_backend(),
+           db_fingerprint(db, reads & set(db.relations)))
+    plan = _cache_get(cache, key)
+    if plan is None:
+        plan = cache[key] = plan_program(prog, db, mode=mode,
+                                         objective=objective,
+                                         max_iters=max_iters)
+    return plan
+
+
+def _cache_get(cache: dict, key):
+    """Cache lookup that refreshes recency: the eviction loop in
+    :func:`execute_plan` pops insertion-order-oldest entries, so a hit
+    must move its entry to the end or steady-state reuse would evict
+    exactly the entries being reused."""
+    if key in cache:
+        cache[key] = cache.pop(key)
+        return cache[key]
+    return None
+
+
+def _referenced(stratum) -> set[str]:
+    names: set[str] = set()
+    exprs = [r.body for r in stratum.rules.values()]
+    if stratum.init:
+        exprs.extend(stratum.init.values())
+    for e in exprs:
+        for t in e.terms:
+            for a in t.atoms:
+                if isinstance(a, ir.RelAtom):
+                    names.add(a.name)
+    return names
+
+
+def _edge_rel_name(vf: vectorize.VectorForm) -> str | None:
+    """Relation name behind the sparse-preserving fast path of
+    :func:`repro.core.vectorize.edge_operator` (the shared
+    :func:`repro.core.vectorize.edge_atom` predicate)."""
+    a = vectorize.edge_atom(vf)
+    return a.name if a is not None else None
+
+
+def _trip_estimate(n: int, nnz: float, cap: int = _TRIP_CAP) -> int:
+    """Heuristic fixpoint depth: ≈ diameter of a random graph with the
+    observed average degree, clipped to [3, ``cap``]."""
+    deg = nnz / max(n, 1)
+    if deg <= 1.0:
+        return cap
+    return int(min(cap, max(
+        3, math.ceil(math.log(max(n, 2)) / math.log(deg)))))
+
+
+def _term_flops(term: ir.Term, sorts: Mapping[str, str],
+                db: engine.Database, planned: Mapping[str, str],
+                densities: Mapping[str, float]) -> float:
+    """Work of one sum-product term ≈ the broadcast join size, scaled by
+    the density of any sparse-stored binary relation in it (the engine's
+    SpMV/SpMM path does O(nnz) work instead of O(n²))."""
+    vs = sorted(term.vars())
+    size = 1.0
+    for v in vs:
+        size *= float(db.dom(sorts.get(v, "id")))
+    scale = 1.0
+    for a in term.atoms:
+        if (isinstance(a, ir.RelAtom) and planned.get(a.name) == "sparse"
+                and a.name in densities):
+            scale = min(scale, max(densities[a.name], 1e-12))
+    return max(size * scale, 1.0)
+
+
+def _plan_stratum(prog, stratum, si, db, hints, *, objective, forced,
+                  cost_model, edges, adapt_storage,
+                  max_iters) -> StratumPlan:
+    # ``reads`` keeps every referenced relation name — including IDBs of
+    # *earlier strata*, which exist only at execution time; the executor
+    # fingerprints the input database over the union of all strata's
+    # reads, so a later stratum's cache key still varies with the EDBs
+    # that feed it.
+    reads = tuple(sorted(_referenced(stratum)))
+    if forced is not None:
+        # a forced runner needs no candidate enumeration — skip density
+        # transfers, sort inference, and vector-form splitting (the CEGIS
+        # verifier forces "naive" on every candidate × sample db)
+        return _forced_stratum_plan(prog, stratum, si, forced, reads, edges)
+
+    # -- storage folding (adaptive density thresholds, DESIGN.md §2/§4) ----
+    storage: dict[str, str] = {}
+    notes: dict[str, str] = {}
+    densities: dict[str, float] = {}
+    for name in (n for n in reads if n in db.relations):
+        arr = db.relations[name]
+        arity = arr.arity if isinstance(arr, SparseRelation) else np.ndim(arr)
+        if arity != 2:
+            continue  # only binary relations have sparse contraction paths
+        d = adaptive.density(arr, db.schema[name].semiring)
+        densities[name] = d
+        cur = db.storage_of(name)
+        target = adaptive.decide(d, cur) if adapt_storage else cur
+        if target != cur:
+            storage[name] = target
+            bound = (f"< {adaptive.SPARSIFY_BELOW:g}" if target == "sparse"
+                     else f"> {adaptive.DENSIFY_ABOVE:g}")
+            notes[name] = f"{cur}→{target} (density {d:.3g} {bound})"
+    planned = {name: storage.get(name, db.storage_of(name))
+               for name in reads}
+
+    shapes = {n: tuple(db.dom(s) for s in prog.schema[n].sorts)
+              for n in stratum.idbs}
+    state = float(sum(float(np.prod(s)) for s in shapes.values()))
+    nnz_total = sum(densities[n] *
+                    float(np.prod(_rel_shape(db.relations[n])))
+                    for n in densities)
+    n_dom = int(max((d for s in shapes.values() for d in s), default=1))
+
+    considered: dict[str, CostEstimate] = {}
+    rejected: dict[str, str] = {}
+
+    # -- vector-equation feasibility (also pins the trip estimate) ---------
+    vf = None
+    if len(prog.strata) != 1:
+        why = "multi-stratum program (the vector equation covers exactly " \
+              "one stratum)"
+        for r in VECTOR_RUNNERS:
+            rejected[r] = why
+    else:
+        try:
+            vf = vectorize.vector_form(prog)
+        except ValueError as e:
+            for r in VECTOR_RUNNERS:
+                rejected[r] = str(e)
+    if vf is not None:
+        sr = sr_mod.get(vf.semiring)
+        if sr.minus is None:
+            why = (f"semiring {vf.semiring} lacks ⊖ — the vector GSN "
+                   f"runners need an idempotent lattice")
+            for r in VECTOR_RUNNERS:
+                rejected[r] = why
+            vf = None
+    e_nnz = None
+    n_vec = n_dom
+    if vf is not None:
+        n_vec = db.dom(vf.out_sort)
+        if edges is not None:
+            if isinstance(edges, SparseRelation):
+                e_nnz = float(np.asarray(edges.as_np().nnz))
+            # a dense override keeps the vector_dense candidate below
+        else:
+            ename = _edge_rel_name(vf)
+            if (ename is not None and ename in db.relations
+                    and planned.get(ename) == "sparse"):
+                arr = db.relations[ename]
+                if isinstance(arr, SparseRelation):
+                    e_nnz = float(np.asarray(arr.as_np().nnz))
+                else:
+                    e_nnz = densities[ename] * float(
+                        np.prod(_rel_shape(arr)))
+
+    # one trip estimate for the whole stratum: every runner executes the
+    # same fixpoint, so candidates must never be priced with different
+    # iteration counts.  The linear operator's nnz is the best degree
+    # signal when available; the all-relations total is the fallback.
+    trip_cap = int(max(1, min(_TRIP_CAP, max_iters)))
+    if e_nnz is not None:
+        trips = _trip_estimate(n_vec, e_nnz, trip_cap)
+    else:
+        trips = _trip_estimate(n_dom,
+                               nnz_total if nnz_total else n_dom * 8.0,
+                               trip_cap)
+
+    # -- dense engine candidates ------------------------------------------
+    naive_f = state
+    gsn_f = state
+    for rule in stratum.rules.values():
+        sorts = engine.infer_var_sorts(rule.body, prog.schema, hints)
+        for t in rule.body.terms:
+            f = _term_flops(t, sorts, db, planned, densities)
+            naive_f += f
+            if any(isinstance(a, ir.RelAtom) and a.name in stratum.rules
+                   for a in t.atoms):
+                gsn_f += f
+    considered["dense_naive"] = CostEstimate(naive_f, 4.0 * naive_f, trips)
+    no_minus = [n for n in stratum.idbs
+                if sr_mod.get(prog.schema[n].semiring).minus is None]
+    if not stratum.is_linear():
+        rejected["dense_gsn"] = "non-linear recursion (δF needs a linear " \
+                                "program)"
+    elif no_minus:
+        rejected["dense_gsn"] = (
+            f"semiring {prog.schema[no_minus[0]].semiring} lacks ⊖ — GSN "
+            f"needs an idempotent lattice")
+    else:
+        considered["dense_gsn"] = CostEstimate(gsn_f, 4.0 * gsn_f, trips)
+
+    # -- vector-equation candidates ---------------------------------------
+    if vf is not None:
+        n = n_vec
+        if e_nnz is not None:
+            # staged loop: a full O(nnz) vspm re-derivation per iteration
+            considered["sparse_jit"] = CostEstimate(
+                e_nnz + n, 12.0 * e_nnz + 4.0 * n, trips)
+            # host worklist: O(nnz) *total* edge expansions (each vertex
+            # settles ~once) plus an O(n) Δ-scan per round
+            considered["sparse_frontier"] = CostEstimate(
+                e_nnz / trips + n, 12.0 * e_nnz / trips + 4.0 * n, trips)
+            rejected["vector_dense"] = ("linear operator is sparse — the "
+                                        "SpMV/SpMM runners cover it")
+        else:
+            considered["vector_dense"] = CostEstimate(
+                float(n) * n + n, 4.0 * (float(n) * n + n), trips)
+            why = "linear operator materializes dense (no sparse binary " \
+                  "EDB fast path)"
+            rejected["sparse_jit"] = why
+            rejected["sparse_frontier"] = why
+
+    # the host worklist only pays off for single-shot latency on a CPU
+    # host; batched serving and accelerators want the staged SpMM loop
+    frontier_ok = objective == "latency" and jax.default_backend() == "cpu"
+    if "sparse_frontier" in considered and not frontier_ok:
+        rejected["sparse_frontier"] = ("host worklist loses to the staged "
+                                       "while_loop off-CPU / for batches")
+        del considered["sparse_frontier"]
+    if objective == "throughput" and \
+            any(r in considered for r in VECTOR_RUNNERS):
+        for r in ("dense_naive", "dense_gsn"):
+            if r in considered:
+                rejected[r] = ("not batchable — throughput serving packs "
+                               "sources into one vector fixpoint")
+                del considered[r]
+    if edges is not None:
+        # the caller supplied the linear operator; only the vector
+        # runners consult it — a dense engine pick would silently run
+        # over the database's own relations instead
+        for r in ("dense_naive", "dense_gsn"):
+            if r in considered:
+                rejected[r] = ("edges override requires a vector runner "
+                               "(the engine paths read the stored "
+                               "relations, not the override)")
+                del considered[r]
+        if not considered:
+            raise ValueError(f"{prog.name}: edges override cannot be "
+                             f"honored: {_vector_rejection(rejected)}")
+
+    if cost_model == "hlo":
+        considered = _hlo_costs(considered, prog, stratum, db, hints, vf,
+                                edges, trips, storage)
+
+    # -- selection ---------------------------------------------------------
+    pref = list(RUNNERS)
+    if frontier_ok:
+        pref.remove("sparse_frontier")
+        pref.insert(0, "sparse_frontier")
+    runner = min(considered,
+                 key=lambda k: (considered[k].total, pref.index(k)))
+    cost = considered[runner]
+    reason = (f"min est. total flops among "
+              f"{len(considered)} feasible candidates")
+    if runner == "sparse_frontier":
+        reason += " (cpu host ⇒ frontier worklist)"
+    return StratumPlan(si, tuple(stratum.idbs), runner, reason, storage,
+                       notes, reads, cost, considered, rejected, vf, edges)
+
+
+def _forced_stratum_plan(prog, stratum, si, forced, reads,
+                         edges) -> StratumPlan:
+    """Legacy-mode plans: the runner is predetermined, storage stays as
+    the caller chose it, no candidates are priced.  Infeasibility (e.g.
+    forcing GSN on a non-linear stratum) surfaces at execution time with
+    the historical error, exactly as the pre-planner code did."""
+    vf = None
+    if forced in VECTOR_RUNNERS:
+        if len(prog.strata) != 1:
+            raise ValueError(
+                f"{prog.name}: cannot force runner {forced!r}: "
+                f"multi-stratum program")
+        try:
+            vf = vectorize.vector_form(prog)
+        except ValueError as e:
+            raise ValueError(
+                f"{prog.name}: cannot force runner {forced!r}: {e}")
+    elif edges is not None:
+        raise ValueError(
+            f"{prog.name}: edges override cannot be honored by forced "
+            f"runner {forced!r} — the dense engine paths read the stored "
+            f"relations, not the override")
+    return StratumPlan(si, tuple(stratum.idbs), forced,
+                       f"forced by mode={forced!r}", {}, {}, reads,
+                       None, {}, {}, vf, edges)
+
+
+def _rel_shape(arr):
+    return arr.shape if isinstance(arr, SparseRelation) else \
+        np.shape(arr)
+
+
+def _hlo_costs(considered, prog, stratum, db, hints, vf, edges, trips,
+               storage):
+    """Re-price each feasible candidate by staging its per-iteration step
+    and walking the optimized HLO (:func:`repro.launch.hlo_cost.
+    staged_cost`).  Falls back to the analytic estimate per candidate."""
+    from repro.core import program as prog_mod
+    from repro.launch import hlo_cost
+    out = dict(considered)
+    db2 = db
+    for name, target in storage.items():
+        db2 = db2.with_storage(name, target)
+
+    def price(runner):
+        if runner in ("dense_naive", "dense_gsn"):
+            ico = (prog_mod.make_ico(stratum, db2, hints)
+                   if runner == "dense_naive"
+                   else prog_mod.make_delta_ico(stratum, db2, hints))
+            x0 = prog_mod.zero_state(stratum, db2)
+            c = hlo_cost.staged_cost(ico, x0)
+        elif runner in ("sparse_jit", "sparse_frontier"):
+            from repro.sparse import contract
+            e = _materialize_edges(vf, db2, hints, override=edges)
+            sr = sr_mod.get(vf.semiring)
+            d0 = sr.zeros((db2.dom(vf.out_sort),))
+            c = hlo_cost.staged_cost(
+                lambda d: contract.vspm(d, e), d0)
+        else:  # vector_dense
+            from repro.kernels import ops as kops
+            e = _materialize_edges(vf, db2, hints, override=edges,
+                                   densify=True)
+            sr = sr_mod.get(vf.semiring)
+            d0 = sr.zeros((1, db2.dom(vf.out_sort)))
+            c = hlo_cost.staged_cost(
+                lambda d: kops.semiring_matmul(sr, d, e), d0)
+        return CostEstimate(max(c.flops, 1.0), c.bytes, trips, "hlo")
+
+    for runner in list(out):
+        try:
+            out[runner] = price(runner)
+        except Exception:  # noqa: BLE001 — keep the analytic estimate
+            pass
+    return out
+
+
+def _plan_signature(prog, db, plans) -> str:
+    parts = []
+    for sp, stratum in zip(plans, prog.strata):
+        shapes = tuple((n, prog.schema[n].semiring,
+                        tuple(db.dom(s) for s in prog.schema[n].sorts))
+                       for n in sp.idbs)
+        core = sp.vf.signature if sp.vf is not None else \
+            _stratum_hash(stratum)
+        parts.append((sp.runner, shapes, core,
+                      tuple(sorted(sp.storage.items()))))
+    payload = repr((tuple(r.head for r in prog.outputs), parts))
+    return hashlib.sha1(payload.encode()).hexdigest()[:16]
+
+
+def _stratum_hash(stratum) -> str:
+    payload = repr(sorted((n, repr(r.body))
+                          for n, r in stratum.rules.items()))
+    if stratum.init:
+        payload += repr(sorted((n, repr(e))
+                               for n, e in stratum.init.items()))
+    return hashlib.sha1(payload.encode()).hexdigest()[:16]
+
+
+# --------------------------------------------------------------------------
+# Explain
+# --------------------------------------------------------------------------
+
+
+def explain(plan: ExecutionPlan) -> str:
+    """Stable, golden-testable rendering of an :class:`ExecutionPlan`."""
+    lines = [f"plan {plan.program}  mode={plan.mode}  "
+             f"objective={plan.objective}  signature={plan.signature}"]
+    for sp in plan.strata:
+        lines.append(f"  stratum {sp.index}  runner={sp.runner}  "
+                     f"idbs={','.join(sp.idbs)}")
+        lines.append(f"    reason      {sp.reason}")
+        for name in sorted(sp.storage):
+            lines.append(f"    storage     {name}: {sp.storage_notes[name]}")
+        if sp.cost is not None:
+            c = sp.cost
+            lines.append(f"    cost        {c.flops_per_iter:.3g} flops/iter"
+                         f" × {c.trips} iters  [{c.source}]")
+        if sp.considered:
+            body = "  ".join(
+                f"{k}={v.total:.3g}" for k, v in
+                sorted(sp.considered.items(),
+                       key=lambda kv: (kv[1].total, kv[0])))
+            lines.append(f"    considered  {body}")
+        for k in sorted(sp.rejected):
+            lines.append(f"    rejected    {k}: {sp.rejected[k]}")
+    outs = " ← ".join(plan.outputs) if plan.outputs else "(fixpoint state)"
+    post = "  + host post-epilogue" if plan.has_post else ""
+    lines.append(f"  outputs    {outs}{post}")
+    return "\n".join(lines)
+
+
+# --------------------------------------------------------------------------
+# Execution
+# --------------------------------------------------------------------------
+
+
+def execute_plan(plan: ExecutionPlan, prog, db: engine.Database, *,
+                 max_iters: int = 10_000):
+    """Run ``prog`` under ``plan``; returns ``(answer, RunStats)``.
+
+    Staged executables, initial states, storage conversions, and
+    materialized linear operators are cached on the Program object keyed
+    by stable database fingerprints, so a cache hit skips `make_ico` /
+    `init_state` / `edge_operator` construction entirely.
+    """
+    from repro.core import program as prog_mod
+    hints = dict(prog.sort_hints)
+    cache = prog.__dict__.setdefault("_plan_cache", {})
+    iters_log: list[int] = []
+    # one fingerprint of the *input* database anchors every stratum's
+    # staged-cache key: stratum outputs are deterministic functions of
+    # the EDBs, so later strata reuse their staged closures across runs
+    # even though each run materializes fresh intermediate arrays (keying
+    # on those would make every later stratum a guaranteed cache miss)
+    all_reads: set[str] = set()
+    for sp in plan.strata:
+        all_reads |= set(sp.reads)
+    base_fp = db_fingerprint(db, all_reads)
+    cur_db = db
+    for sp, stratum in zip(plan.strata, prog.strata):
+        cur_db = _apply_storage(sp, cur_db, cache)
+        state, iters = _run_stratum(sp, stratum, prog, cur_db, hints,
+                                    cache, max_iters, base_fp)
+        iters_log.append(int(iters))
+        cur_db = cur_db.with_relations(state)
+    out = None
+    for rule in prog.outputs:
+        out = engine.eval_ssp(rule.body, cur_db, hints)
+        cur_db = cur_db.with_relations({rule.head: out})
+    if prog.post is not None:
+        out = prog.post(out, cur_db)
+    while len(cache) > _CACHE_MAX:
+        cache.pop(next(iter(cache)))
+    return out, prog_mod.RunStats(iters_log, plan.mode, plan)
+
+
+def _apply_storage(sp: StratumPlan, db: engine.Database, cache):
+    """Apply the plan's per-relation storage decisions, memoizing each
+    converted array so repeated executions reuse one stable object (and
+    therefore one stable fingerprint)."""
+    for name, target in sp.storage.items():
+        arr = db.relations.get(name)
+        if arr is None or db.storage_of(name) == target:
+            continue
+        key = ("storage", name, target, value_fingerprint(arr))
+        conv = _cache_get(cache, key)
+        if conv is None:
+            conv = db.with_storage(name, target).relations[name]
+            cache[key] = conv
+        db = db.with_relations({name: conv})
+    return db
+
+
+def _materialize_edges(vf, db, hints, *, override=None, densify=False):
+    """The linear operator E, cast into the equation's semiring; sparse
+    operators land as jnp COO ready for the SpMV/SpMM runners."""
+    e = override if override is not None else \
+        vectorize.edge_operator(vf, db, hints)
+    if isinstance(e, SparseRelation):
+        e = vectorize._sparse_into_semiring(e, vf.semiring)
+        e = e.to_dense() if densify else e.as_jnp()
+    return e
+
+
+def _run_stratum(sp, stratum, prog, cur_db, hints, cache, max_iters,
+                 base_fp):
+    from repro.core import fixpoint
+    from repro.core import program as prog_mod
+
+    key = (sp.index, sp.runner, max_iters, base_fp,
+           tuple(sorted(sp.storage.items())),
+           None if sp.edges_override is None
+           else value_fingerprint(sp.edges_override))
+    ent = _cache_get(cache, key)
+
+    if sp.runner in VECTOR_RUNNERS:
+        if ent is None:
+            vf = sp.vf
+            edges = _materialize_edges(
+                vf, cur_db, hints, override=sp.edges_override,
+                densify=sp.runner == "vector_dense")
+            if sp.runner != "vector_dense" and \
+                    not isinstance(edges, SparseRelation):
+                edges = SparseRelation.from_dense(
+                    np.asarray(edges), vf.semiring).as_jnp()
+            init = vectorize.init_vector(vf, cur_db, hints)
+            sr = sr_mod.get(vf.semiring)
+            if sp.runner == "sparse_frontier":
+                from repro.sparse.fixpoint import sparse_seminaive_fixpoint
+
+                def fn(e, i):
+                    return sparse_seminaive_fixpoint(
+                        e, i, mode="frontier", max_iters=max_iters)
+            elif sp.runner == "sparse_jit":
+                from repro.sparse.fixpoint import sparse_seminaive_fixpoint
+                fn = jax.jit(lambda e, i: sparse_seminaive_fixpoint(
+                    e, i, mode="jit", max_iters=max_iters))
+            else:
+                fn = jax.jit(lambda e, i: _dense_vector_fixpoint(
+                    e, i, sr, max_iters))
+            ent = (fn, edges, init)
+            cache[key] = ent
+        fn, edges, init = ent
+        x, iters = fn(edges, init)
+        return {sp.idbs[0]: x}, int(np.asarray(iters))
+
+    if ent is None:
+        ico = prog_mod.make_ico(stratum, cur_db, hints)
+        x0 = prog_mod.init_state(stratum, cur_db, hints)
+        if sp.runner == "dense_gsn":
+            srs = {n: sr_mod.get(cur_db.schema[n].semiring)
+                   for n in stratum.idbs}
+            dico = prog_mod.make_delta_ico(stratum, cur_db, hints)
+            fn = jax.jit(lambda x0: fixpoint.seminaive_fixpoint(
+                ico, dico, x0, srs, max_iters=max_iters))
+        elif sp.runner == "dense_naive":
+            fn = jax.jit(lambda x0: fixpoint.naive_fixpoint(
+                ico, x0, max_iters=max_iters))
+        else:  # dense_host: python loop, per-iteration visibility
+            def fn(x0, ico=ico):
+                return fixpoint.host_fixpoint(ico, x0,
+                                              max_iters=max_iters)
+        ent = (fn, x0)
+        cache[key] = ent
+    fn, x0 = ent
+    x, iters = fn(x0)
+    return x, int(np.asarray(iters))
+
+
+def _batched_dense_vector_fixpoint(edge, init, sr, max_iters):
+    """The vectorized ``x = init ⊕ x ⊗ E`` GSN step over a dense E for a
+    ``(B, n)`` init pack — the one dense vector runner shared by
+    :func:`execute_plan` (B = 1) and :func:`compile_batched`."""
+    from repro.core import fixpoint
+    from repro.kernels import ops as kops
+
+    def ico(s):
+        return {"x": sr.add(init, kops.semiring_matmul(sr, s["x"], edge))}
+
+    def dico(s):
+        return {"x": kops.semiring_matmul(sr, s["x"], edge)}
+
+    x0 = {"x": sr.zeros(init.shape)}
+    y, iters = fixpoint.batched_seminaive_fixpoint(
+        ico, dico, x0, {"x": sr}, max_iters=max_iters)
+    return y["x"], iters
+
+
+def _dense_vector_fixpoint(edge, init, sr, max_iters):
+    y, iters = _batched_dense_vector_fixpoint(edge, init.reshape(1, -1),
+                                              sr, max_iters)
+    return y[0], iters[0]
+
+
+# --------------------------------------------------------------------------
+# Batched serving hooks (the serve loop's side of the pipeline)
+# --------------------------------------------------------------------------
+
+
+def materialize_edges(plan: ExecutionPlan, db: engine.Database,
+                      hints=None, *, override=None):
+    """The linear operator for stratum 0, ready for
+    :func:`compile_batched` (sparse COO on device, or a dense matrix)."""
+    sp = plan.strata[0]
+    return _materialize_edges(sp.vf, db, hints,
+                              override=override
+                              if override is not None
+                              else sp.edges_override,
+                              densify=sp.runner == "vector_dense")
+
+
+def source_init(plan: ExecutionPlan, prog, db: engine.Database, *,
+                hints=None, backend: str = "jnp"):
+    """Vector-form a per-source program, verify it kept the plan's linear
+    operator, and evaluate its O(n) init terms."""
+    vf = vectorize.vector_form(prog)
+    base = plan.strata[0].vf
+    if vf.signature != base.signature:
+        raise ValueError(
+            f"{plan.program}: source program changed the linear operator "
+            f"({vf.signature} != {base.signature}) — sources must only "
+            f"move the init term")
+    return vectorize.init_vector(vf, db, hints, backend=backend)
+
+
+def compile_batched(plan: ExecutionPlan, *,
+                    max_iters: int = 10_000) -> Callable:
+    """A jitted ``run(edges, init)`` over a ``(B, n)`` init pack for
+    stratum 0's runner — the serve loop's compiled unit, cached by the
+    caller under ``(plan.signature, B-bucket)``."""
+    sp = plan.strata[0]
+    if sp.runner not in VECTOR_RUNNERS:
+        raise ValueError(f"{plan.program}: runner {sp.runner!r} has no "
+                         f"batched form")
+    sr = sr_mod.get(sp.vf.semiring)
+    if sp.runner in ("sparse_jit", "sparse_frontier"):
+        def run(edges, init):
+            from repro.sparse.fixpoint import sparse_seminaive_fixpoint
+            return sparse_seminaive_fixpoint(edges, init, mode="jit",
+                                             max_iters=max_iters)
+    else:
+        def run(edges, init):
+            return _batched_dense_vector_fixpoint(edges, init, sr,
+                                                  max_iters)
+
+    return jax.jit(run)

@@ -6,6 +6,10 @@ strata, so each stratum's ICO is monotone and has a least fixpoint).  Each
 stratum holds one merged rule per IDB (multiple rules with the same head are
 OR-ed into one SSP, the paper's convention) plus an optional non-0̄ initial
 state (the GH-program's ``Y ← G(X₀)``).
+
+Which physical runner executes each stratum is decided by the cost-based
+planner — see :mod:`repro.core.planner` and DESIGN.md §4;
+:func:`run_program` is a thin plan-then-execute shell.
 """
 
 from __future__ import annotations
@@ -13,7 +17,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Mapping
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import engine, fixpoint, ir
@@ -146,51 +149,29 @@ def make_delta_ico(stratum: Stratum, db: engine.Database,
 class RunStats:
     iterations: list[int]
     mode: str
+    plan: object | None = None  # the ExecutionPlan that was executed
 
 
-def run_program(prog: Program, db: engine.Database, *, mode: str = "naive",
-                max_iters: int = 10_000, jit_whole: bool = False,
-                ) -> tuple[jnp.ndarray, RunStats]:
-    """Run all strata to fixpoint, then evaluate the output rule G."""
-    hints = prog.sort_hints
-    iters_log: list[int] = []
-    cur_db = db
-    # query-plan cache: repeated executions of the same program against the
-    # same database reuse the staged fixpoint (keyed per stratum/mode/db)
-    plan_cache = prog.__dict__.setdefault("_plan_cache", {})
-    for si, stratum in enumerate(prog.strata):
-        cache_key = (si, mode, max_iters,
-                     tuple(sorted((k, id(v))
-                                  for k, v in cur_db.relations.items())))
-        ico = make_ico(stratum, cur_db, hints)
-        x0 = init_state(stratum, cur_db, hints)
-        if mode == "seminaive":
-            srs = {n: sr_mod.get(cur_db.schema[n].semiring)
-                   for n in stratum.idbs}
-            dico = make_delta_ico(stratum, cur_db, hints)
-            if cache_key not in plan_cache:
-                plan_cache[cache_key] = jax.jit(
-                    lambda x0, ico=ico, dico=dico, srs=srs:
-                    fixpoint.seminaive_fixpoint(ico, dico, x0, srs,
-                                                max_iters=max_iters))
-            x, iters = plan_cache[cache_key](x0)
-        elif mode == "naive":
-            if cache_key not in plan_cache:
-                plan_cache[cache_key] = jax.jit(
-                    lambda x0, ico=ico: fixpoint.naive_fixpoint(
-                        ico, x0, max_iters=max_iters))
-            x, iters = plan_cache[cache_key](x0)
-        else:  # host loop, per-iteration stats
-            x, iters = fixpoint.host_fixpoint(ico, x0, max_iters=max_iters)
-        iters_log.append(int(iters))
-        cur_db = cur_db.with_relations(x)
-    out = None
-    for rule in prog.outputs:
-        out = engine.eval_ssp(rule.body, cur_db, hints)
-        cur_db = cur_db.with_relations({rule.head: out})
-    if prog.post is not None:
-        out = prog.post(out, cur_db)
-    return out, RunStats(iters_log, mode)
+def run_program(prog: Program, db: engine.Database, *, mode: str = "auto",
+                max_iters: int = 10_000,
+                plan=None) -> tuple[jnp.ndarray, RunStats]:
+    """Run all strata to fixpoint, then evaluate the output rule G.
+
+    A thin shell over the cost-based planner (DESIGN.md §4):
+    ``mode="auto"`` (the default) lets :func:`repro.core.planner.
+    plan_program` pick a physical runner and per-relation storage per
+    stratum; the legacy mode strings compile to forced plans with the
+    historical semantics ("naive" → dense naive, "seminaive" → dense
+    GSN, anything else → the host loop), leaving storage untouched.
+    Pass a pre-built ``plan`` (e.g. one carrying an ``edges`` override)
+    to skip planning.  Staged fixpoints, initial states, and storage
+    conversions are cached on ``prog`` keyed by stable database
+    fingerprints (weakref tokens, not recyclable ``id()``s).
+    """
+    from repro.core import planner
+    if plan is None:
+        plan = planner.plan_for(prog, db, mode=mode, max_iters=max_iters)
+    return planner.execute_plan(plan, prog, db, max_iters=max_iters)
 
 
 def declare_idbs(prog: Program) -> None:

@@ -19,6 +19,10 @@ performs that split symbolically so the serve loop (DESIGN.md §3) can
 SpMM batched runner directly); anything more exotic — multiple linear
 terms, interpreted predicates in the remainder — falls back to a dense
 ``engine.eval_ssp`` materialization of E.
+
+The split is consumed by the cost-based planner (DESIGN.md §4): the
+vector runners of :mod:`repro.core.planner` and the serve loop's batched
+fixpoints are all built from a :class:`VectorForm`.
 """
 
 from __future__ import annotations
@@ -172,6 +176,23 @@ def init_vector(vf: VectorForm, db: engine.Database,
     return engine.eval_ssp(vf.init, db, hints, backend=backend)
 
 
+def edge_atom(vf: VectorForm) -> ir.RelAtom | None:
+    """The single plain binary atom behind E's sparse fast path, if the
+    linear operator is exactly one relation lookup — the one syntactic
+    predicate shared by :func:`edge_operator` and the planner's sparsity
+    costing (``repro.core.planner``), so plan and execution can never
+    disagree about whether E stays sparse."""
+    if len(vf.edge.terms) != 1:
+        return None
+    t = vf.edge.terms[0]
+    if len(t.atoms) != 1 or not isinstance(t.atoms[0], ir.RelAtom):
+        return None
+    a = t.atoms[0]
+    if a.neg or tuple(a.args) not in (vf.edge.head, vf.edge.head[::-1]):
+        return None
+    return a
+
+
 def edge_operator(vf: VectorForm, db: engine.Database, hints=None, *,
                   prefer_sparse: bool = True):
     """Materialize E[z, y] — sparse-preserving when the linear remainder
@@ -182,18 +203,13 @@ def edge_operator(vf: VectorForm, db: engine.Database, hints=None, *,
     dense ``(n, n)`` S-relation from ``engine.eval_ssp``.
     """
     from repro.sparse.coo import SparseRelation
-    if prefer_sparse and len(vf.edge.terms) == 1:
-        t = vf.edge.terms[0]
-        if len(t.atoms) == 1 and isinstance(t.atoms[0], ir.RelAtom):
-            a = t.atoms[0]
-            arr = db.relations.get(a.name)
-            if (isinstance(arr, SparseRelation) and not a.neg
-                    and arr.arity == 2
-                    and tuple(a.args) in (vf.edge.head,
-                                          vf.edge.head[::-1])):
-                rel = arr if tuple(a.args) == vf.edge.head \
-                    else arr.transpose()
-                return _sparse_into_semiring(rel, vf.semiring)
+    a = edge_atom(vf) if prefer_sparse else None
+    if a is not None:
+        arr = db.relations.get(a.name)
+        if isinstance(arr, SparseRelation) and arr.arity == 2:
+            rel = arr if tuple(a.args) == vf.edge.head \
+                else arr.transpose()
+            return _sparse_into_semiring(rel, vf.semiring)
     return engine.eval_ssp(vf.edge, db, hints)
 
 

@@ -221,8 +221,10 @@ def verify_programs_equal(p1: Program, p2: Program, dbs, *,
     """End-to-end Π₁ ≡ Π₂ answer check on concrete databases."""
     from repro.core.program import run_program
     for db in dbs:
-        a, _ = run_program(p1, db)
-        b, _ = run_program(p2, db)
+        # ground-truth naive evaluation: CEGIS candidates may be
+        # non-monotone mid-search, where fancier runners can diverge
+        a, _ = run_program(p1, db, mode="naive")
+        b, _ = run_program(p2, db, mode="naive")
         if not values_equal(np.asarray(a), np.asarray(b), atol):
             return False
     return True

@@ -5,19 +5,24 @@ queue, a packer that groups up to ``max_batch`` pending (family, source)
 queries of the same program family, and a compiled batched GSN fixpoint
 that answers the whole pack in one device program.  The pieces:
 
-* **Vector-form routing** — registered Π₂ programs (published rewrites or
-  ones freshly synthesized by :mod:`repro.core.fgh`) are split by
-  :mod:`repro.core.vectorize` into ``x = init ⊕ x ⊗ E``; only the O(n)
+* **Plan routing** — registered Π₂ programs (published rewrites or ones
+  freshly synthesized by :mod:`repro.core.fgh`) are planned once by the
+  cost-based planner (:func:`repro.core.planner.plan_program`,
+  ``objective="throughput"``, DESIGN.md §4), which splits them into
+  ``x = init ⊕ x ⊗ E`` and picks the batched runner; only the O(n)
   ``init`` is evaluated per request, while the linear operator E and the
   compiled fixpoint are shared by every source.
 * **Compile cache** — jitted batched runners are keyed on
-  ``(linear signature, n, semiring, B-bucket, backend)``.  Batch sizes
-  are bucketed to powers of two (padded with inert all-0̄ init rows), so
-  a steady-state server compiles each family a handful of times total.
-* **Batched runners** — sparse families go through the SpMM
+  ``(ExecutionPlan.signature, B-bucket)``; the plan signature already
+  folds in the linear-operator hash, n, the semiring, and the chosen
+  runner.  Batch sizes are bucketed to powers of two (padded with inert
+  all-0̄ init rows), so a steady-state server compiles each family a
+  handful of times total.
+* **Batched runners** — built by :func:`repro.core.planner.
+  compile_batched`: sparse families run the SpMM
   ``sparse_seminaive_fixpoint`` (one ``lax.while_loop`` for all B
-  sources, per-row convergence); dense families through
-  ``fixpoint.batched_seminaive_fixpoint`` with a semiring-matmul step.
+  sources, per-row convergence); dense families the
+  ``fixpoint.batched_seminaive_fixpoint`` semiring-matmul step.
 * **Sharding** — with a mesh attached, the query-batch axis is laid out
   across the "data" axis (``launch.rules`` kind "datalog") and the
   fixpoint's internal constraints keep it there.
@@ -40,13 +45,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import engine, fixpoint, ir, vectorize, verify
+from repro.core import engine, ir, planner, verify
 from repro.core import semiring as sr_mod
 from repro.core.program import Program
 from repro.distributed import sharding as sh
 from repro.launch import rules as rules_mod
 from repro.sparse.coo import SparseRelation
-from repro.sparse.fixpoint import sparse_seminaive_fixpoint
 
 
 @dataclasses.dataclass
@@ -81,7 +85,7 @@ class _Family:
     make_program: Callable[[int], Program]
     db: engine.Database
     host_db: engine.Database    # numpy twin for eager per-request init eval
-    vf: vectorize.VectorForm
+    plan: planner.ExecutionPlan
     edges: object               # SparseRelation (jnp) or dense (n, n) array
     hints: dict
     n: int
@@ -91,7 +95,9 @@ class _Family:
 
     @property
     def backend(self) -> str:
-        return "sparse" if isinstance(self.edges, SparseRelation) else "dense"
+        # derived from the plan so it can never disagree with the routing
+        return "sparse" if self.plan.strata[0].runner == "sparse_jit" \
+            else "dense"
 
 
 def _bucket(b: int, max_batch: int) -> int:
@@ -128,25 +134,19 @@ class DatalogServer:
 
         ``make_program(source)`` must return the optimized program for
         that source; all sources must share the linear operator (checked
-        per request via the vector-form signature).  ``edges`` overrides
-        the extracted E — e.g. a weighted COO adjacency for SSSP-style
+        per request by ``planner.source_init`` via the vector-form
+        signature).  ``edges`` overrides the
+        extracted E — e.g. a weighted COO adjacency for SSSP-style
         families whose schema-level edge relation is a dense 3-ary
         tensor that would not scale.
         """
         template = make_program(template_source)
-        vf = vectorize.vector_form(template)
-        sr = sr_mod.get(vf.semiring)
-        if sr.minus is None:
-            raise ValueError(
-                f"{name}: semiring {vf.semiring} lacks ⊖ — the batched "
-                f"GSN runner needs an idempotent lattice")
         hints = dict(template.sort_hints)
-        if edges is None:
-            edges = vectorize.edge_operator(vf, db, hints)
-        if isinstance(edges, SparseRelation):
-            edges = vectorize._sparse_into_semiring(edges, vf.semiring)
-            edges = edges.as_jnp()
-        n = db.dom(vf.out_sort)
+        plan = planner.plan_program(
+            template, db, hints, objective="throughput", edges=edges,
+            adapt_storage=False, require_vector=True)
+        edges = planner.materialize_edges(plan, db, hints)
+        n = db.dom(plan.strata[0].vf.out_sort)
         # numpy twin of the dense relations: per-request init evaluation
         # runs eagerly on the host (the jnp dispatch overhead of an O(n)
         # eval would dominate a packed batch otherwise).  Sparse
@@ -156,7 +156,7 @@ class DatalogServer:
                          else np.asarray(v))
                      for k, v in db.relations.items()}
         host_db = engine.Database(db.schema, db.domains, host_rels)
-        fam = _Family(name, make_program, db, host_db, vf, edges, hints,
+        fam = _Family(name, make_program, db, host_db, plan, edges, hints,
                       n, self.max_iters)
         self._families[name] = fam
         return fam
@@ -203,7 +203,7 @@ class DatalogServer:
             self.stats["batches"] += 1
             return batch
         bb = _bucket(len(live), self.max_batch)
-        sr = sr_mod.get(fam.vf.semiring, lib="np")
+        sr = sr_mod.get(fam.plan.strata[0].vf.semiring, lib="np")
         packed = np.full((bb, fam.n), sr.zero, sr.dtype)
         for i, v in enumerate(inits):
             packed[i] = np.asarray(v)
@@ -239,54 +239,28 @@ class DatalogServer:
 
     def _init_for(self, fam: _Family, source: int):
         """The per-request O(n) host work, memoized per source: rebuild
-        the source's program, check it kept the family's linear operator,
+        the source's program, check it kept the family's linear operator
+        (vector-form signature equality, ``planner.source_init``),
         evaluate its init terms."""
         if source in fam.init_cache:
             return fam.init_cache[source]
         prog = fam.make_program(source)
-        vf = vectorize.vector_form(prog)
-        if vf.signature != fam.vf.signature:
-            raise ValueError(
-                f"{fam.name}: source {source} changed the linear operator "
-                f"({vf.signature} != {fam.vf.signature}) — sources must "
-                f"only move the init term")
-        init = vectorize.init_vector(vf, fam.host_db,
-                                     dict(prog.sort_hints), backend="np")
+        init = planner.source_init(fam.plan, prog, fam.host_db,
+                                   hints=dict(prog.sort_hints),
+                                   backend="np")
         if len(fam.init_cache) >= _INIT_CACHE_MAX:
             fam.init_cache.pop(next(iter(fam.init_cache)))  # FIFO evict
         fam.init_cache[source] = init
         return init
 
     def _compiled_fixpoint(self, fam: _Family, bb: int) -> Callable:
-        key = (fam.vf.signature, fam.n, fam.vf.semiring, bb, fam.backend)
+        key = (fam.plan.signature, bb)
         if key in self._compiled:
             self.stats["cache_hits"] += 1
             return self._compiled[key]
         self.stats["cache_misses"] += 1
-        max_iters = fam.max_iters
-        if fam.backend == "sparse":
-            def run(edges, init):
-                return sparse_seminaive_fixpoint(edges, init, mode="jit",
-                                                 max_iters=max_iters)
-        else:
-            sr = sr_mod.get(fam.vf.semiring)
-
-            def run(edges, init):
-                from repro.kernels import ops as kops
-
-                def ico(s):
-                    return {"x": sr.add(init, kops.semiring_matmul(
-                        sr, s["x"], edges))}
-
-                def dico(s):
-                    return {"x": kops.semiring_matmul(sr, s["x"], edges)}
-
-                x0 = {"x": sr.zeros(init.shape)}
-                y, iters = fixpoint.batched_seminaive_fixpoint(
-                    ico, dico, x0, {"x": sr}, max_iters=max_iters)
-                return y["x"], iters
-
-        self._compiled[key] = jax.jit(run)
+        self._compiled[key] = planner.compile_batched(
+            fam.plan, max_iters=fam.max_iters)
         return self._compiled[key]
 
 

@@ -8,6 +8,10 @@ For every (architecture × workload shape × mesh) cell:
   lower jit(step) with production shardings → compile → record
   memory_analysis / cost_analysis / per-collective byte volumes.
 
+The lower→compile→HLO-walk recipe is shared with the cost-based
+execution planner (`repro.core.planner`, DESIGN.md §4) via
+`launch.hlo_cost.staged_cost`.
+
 The XLA_FLAGS line above must precede EVERY import (jax pins the device
 count at first init) — hence this module's unusual layout.  Do not set the
 flag globally: smoke tests and benchmarks should see 1 device.

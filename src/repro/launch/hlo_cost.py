@@ -16,6 +16,12 @@ re-derives the three roofline terms from ``compiled.as_text()``:
 
 Shapes are parsed from the HLO text itself, so the analysis is exact for
 the modules we generate (dots + elementwise + collectives + control flow).
+
+Consumers: the AOT dry-runs (:mod:`repro.launch.dryrun`,
+:mod:`repro.launch.datalog_dryrun`) walk their production step functions,
+and the cost-based execution planner (:mod:`repro.core.planner`,
+DESIGN.md §4) prices candidate fixpoint steps through
+:func:`staged_cost`.
 """
 
 from __future__ import annotations
@@ -177,6 +183,15 @@ def _trip_count(cond_ops: list[_Op]) -> int:
         for c in _CONST_RE.findall(op.line):
             best = max(best, int(c))
     return best
+
+
+def staged_cost(fn, *args) -> Cost:
+    """Lower + compile ``fn`` on example (or ShapeDtypeStruct) args and
+    walk the optimized HLO — the one lower→compile→analyze recipe shared
+    by the dry-run drivers and the planner's measured cost model."""
+    import jax
+    compiled = jax.jit(fn).lower(*args).compile()
+    return analyze(compiled.as_text())
 
 
 def analyze(text: str) -> Cost:

@@ -9,6 +9,11 @@ representation at hysteresis thresholds:
 * above :data:`DENSIFY_ABOVE` → dense tensors (MXU-shaped contraction);
 * in between → keep the current representation (avoids thrashing when a
   fixpoint frontier hovers around the boundary).
+
+The thresholds are consumed in two places: host-side ``Database.adapt``
+(between strata, :func:`adapt_value`) and — since the cost-based planner
+(DESIGN.md §4) — :func:`decide`, which folds the same hysteresis into
+per-stratum storage decisions of :func:`repro.core.planner.plan_program`.
 """
 
 from __future__ import annotations
@@ -36,6 +41,20 @@ def density(arr, semiring: str) -> float:
     return float(live) / (host.size or 1)
 
 
+def decide(density_value: float, current: str, *,
+           sparsify_below: float = SPARSIFY_BELOW,
+           densify_above: float = DENSIFY_ABOVE) -> str:
+    """Target storage ("sparse" | "dense") for a relation of the given
+    live fraction, with hysteresis around the current representation —
+    the one threshold table shared by ``Database.adapt`` and the
+    planner's storage folding (DESIGN.md §4)."""
+    if density_value < sparsify_below:
+        return "sparse"
+    if density_value > densify_above:
+        return "dense"
+    return current
+
+
 def adapt_value(arr, semiring: str, *,
                 sparsify_below: float = SPARSIFY_BELOW,
                 densify_above: float = DENSIFY_ABOVE):
@@ -46,11 +65,14 @@ def adapt_value(arr, semiring: str, *,
     time, which is exactly what static shapes require.
     """
     d = density(arr, semiring)
-    if isinstance(arr, SparseRelation):
-        if d > densify_above:
-            return arr.to_dense()
+    current = "sparse" if isinstance(arr, SparseRelation) else "dense"
+    target = decide(d, current, sparsify_below=sparsify_below,
+                    densify_above=densify_above)
+    if target == current:
         return arr
-    if d < sparsify_below and np.asarray(arr).ndim >= 1:
-        cap = max(1, int(d * np.asarray(arr).size * CAPACITY_SLACK) + 1)
-        return SparseRelation.from_dense(arr, semiring, capacity=cap)
-    return arr
+    if target == "dense":
+        return arr.to_dense()
+    if np.asarray(arr).ndim < 1:
+        return arr
+    cap = max(1, int(d * np.asarray(arr).size * CAPACITY_SLACK) + 1)
+    return SparseRelation.from_dense(arr, semiring, capacity=cap)

@@ -20,7 +20,9 @@ states, so the runners are interchangeable mid-stream):
   whole fixpoint is O(Σ_rounds Σ_{z ∈ frontier} deg(z)) ≤ O(nnz · depth),
   and per-round work is proportional to the frontier, not the graph.
 
-``mode="auto"`` picks "frontier" on CPU hosts and "jit" on accelerators.
+``mode="auto"`` picks "frontier" on CPU hosts and "jit" on accelerators;
+program-level routing between these and the dense runners is the
+cost-based planner's job (:mod:`repro.core.planner`, DESIGN.md §4).
 
 **Batched multi-source serving (DESIGN.md §3):** ``init`` may be a
 ``(B, n)`` frontier matrix — one row per source.  ``mode="jit"`` then

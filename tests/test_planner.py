@@ -1,0 +1,442 @@
+"""The cost-based execution planner (DESIGN.md §4): golden explain()
+renderings, forced-mode ≡ auto answer parity across semirings, stable
+plan-cache fingerprints (the id()-reuse fix), cache-hit construction
+hoisting, and scale/serve routing."""
+
+import gc
+import re
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine, planner
+from repro.core import program as prog_mod
+from repro.core.program import run_program
+from repro.datalog import datasets, programs
+from repro.sparse.coo import SparseRelation
+
+CPU = jax.default_backend() == "cpu"
+
+
+def _bm_db(n=120, avg_deg=3.0, seed=2, sparse=False):
+    g = datasets.erdos_renyi(n, avg_deg, seed=seed)
+    schema = programs.bm(a=0).original.schema
+    e = g.sparse_adjacency() if sparse else g.adjacency()
+    return engine.Database(schema, {"id": n},
+                           {"E": e, "V": jnp.ones((n,), bool)})
+
+
+def _norm(text: str) -> str:
+    """Blank out the 16-hex signature so goldens survive hash changes."""
+    return re.sub(r"signature=[0-9a-f]{16}", "signature=<sig>", text)
+
+
+# --------------------------------------------------------------------------
+# Golden explain() output (satellite: planner decision coverage)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.skipif(not CPU, reason="golden plans assume the CPU backend")
+def test_explain_golden_bm():
+    db = _bm_db(n=120, avg_deg=3.0, seed=2)
+    plan = planner.plan_program(programs.bm(a=0).optimized, db)
+    assert _norm(planner.explain(plan)) == """\
+plan BM_opt  mode=auto  objective=latency  signature=<sig>
+  stratum 0  runner=sparse_frontier  idbs=Q
+    reason      min est. total flops among 4 feasible candidates (cpu host ⇒ frontier worklist)
+    storage     E: dense→sparse (density 0.0257 < 0.05)
+    cost        194 flops/iter × 5 iters  [analytic]
+    considered  sparse_frontier=970  dense_gsn=2.45e+03  sparse_jit=2.45e+03  dense_naive=3.05e+03
+    rejected    vector_dense: linear operator is sparse — the SpMV/SpMM runners cover it
+  outputs    Qans"""
+
+
+@pytest.mark.skipif(not CPU, reason="golden plans assume the CPU backend")
+def test_explain_golden_cc_dense():
+    b = programs.cc()
+    g = datasets.erdos_renyi(40, 14.0, seed=1)
+    plan = planner.plan_program(b.optimized, b.make_db(g))
+    assert _norm(planner.explain(plan)) == """\
+plan CC_opt  mode=auto  objective=latency  signature=<sig>
+  stratum 0  runner=vector_dense  idbs=CC
+    reason      min est. total flops among 3 feasible candidates
+    cost        1.64e+03 flops/iter × 3 iters  [analytic]
+    considered  dense_gsn=4.92e+03  vector_dense=4.92e+03  dense_naive=5.04e+03
+    rejected    sparse_frontier: linear operator materializes dense (no sparse binary EDB fast path)
+    rejected    sparse_jit: linear operator materializes dense (no sparse binary EDB fast path)
+  outputs    CCans"""
+
+
+@pytest.mark.skipif(not CPU, reason="golden plans assume the CPU backend")
+def test_explain_golden_sssp():
+    b = programs.sssp(a=0, wmax=4, dmax=40)
+    g = datasets.erdos_renyi(60, 2.5, seed=4, weighted=True, wmax=4)
+    plan = planner.plan_program(b.optimized, b.make_db(g))
+    text = _norm(planner.explain(plan))
+    assert "runner=vector_dense" in text
+    # the dense value-domain join (n·n·w) must price above the n² matvec
+    sp = plan.strata[0]
+    assert sp.considered["dense_gsn"].total > \
+        sp.considered["vector_dense"].total
+    assert "outputs    SPans" in text
+
+
+def test_explain_forced_plan():
+    db = _bm_db()
+    plan = planner.plan_program(programs.bm(a=0).optimized, db,
+                                mode="seminaive")
+    assert plan.strata[0].runner == "dense_gsn"
+    assert plan.strata[0].storage == {}  # forced plans never re-home
+    assert "forced by mode='dense_gsn'" in planner.explain(plan)
+
+
+# --------------------------------------------------------------------------
+# Forced-mode plans agree with mode="auto" across semirings
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bench,db", [
+    ("bm", None), ("cc", None), ("sssp", None), ("radius", None),
+    ("ws", None), ("mlm", None),
+])
+def test_auto_matches_forced_modes(bench, db):
+    """Π₂ answers must be identical under auto and every feasible forced
+    runner — bool, trop, maxplus, nat all covered."""
+    if bench == "ws":
+        b = programs.ws()
+        db = b.make_db(datasets.vector_data(40, seed=1))
+    elif bench in ("radius", "mlm"):
+        b = getattr(programs, bench)()
+        db = b.make_db(datasets.random_recursive_tree(30, seed=3))
+    elif bench == "sssp":
+        b = programs.sssp(a=0, wmax=4, dmax=40)
+        db = b.make_db(datasets.erdos_renyi(48, 2.5, seed=4, weighted=True,
+                                            wmax=4))
+    else:
+        b = getattr(programs, bench)()
+        db = b.make_db(datasets.erdos_renyi(48, 3.0, seed=7))
+    ref, _ = run_program(b.optimized, db, mode="naive")
+    got, stats = run_program(b.optimized, db, mode="auto")
+    assert np.array_equal(np.asarray(ref), np.asarray(got)), \
+        stats.plan.strata[0].runner
+    sp = stats.plan.strata[0]
+    for runner in sp.considered:
+        forced, _ = run_program(b.optimized, db, mode=runner)
+        assert np.array_equal(np.asarray(ref), np.asarray(forced)), runner
+
+
+def test_originals_match_under_auto():
+    """Auto planning of the *original* Π₁ programs (multi-term strata,
+    value domains, output chains) changes nothing about the answers."""
+    g = datasets.erdos_renyi(24, 2.5, seed=6)
+    for mk in (programs.bm, programs.cc, programs.mlm):
+        b = mk()
+        db = b.make_db(g if mk is not programs.mlm
+                       else datasets.random_recursive_tree(24, seed=6))
+        ref, _ = run_program(b.original, db, mode="naive")
+        got, _ = run_program(b.original, db, mode="auto")
+        assert np.array_equal(np.asarray(ref), np.asarray(got)), b.name
+
+
+def test_nat_semiring_falls_back_to_naive():
+    """No ⊖ in ℕ: GSN and the vector runners must be rejected."""
+    b = programs.mlm()
+    db = b.make_db(datasets.random_recursive_tree(20, seed=1))
+    plan = planner.plan_program(b.optimized, db)
+    sp = plan.strata[0]
+    assert sp.runner == "dense_naive"
+    assert "lacks ⊖" in sp.rejected["dense_gsn"]
+    assert "lacks ⊖" in sp.rejected["sparse_jit"]
+
+
+# --------------------------------------------------------------------------
+# Stable fingerprints (satellite: the id()-reuse plan-cache key fix)
+# --------------------------------------------------------------------------
+
+
+def test_fingerprint_token_is_not_recycled():
+    """A dead array's token is evicted, so a new array landing on the
+    same id() can never alias its cache entry (the id(v) bug)."""
+    a = np.zeros((8, 8), np.float32)
+    tok_a = planner._token(a)
+    key = id(a)
+    assert key in planner._fp_tokens
+    del a
+    gc.collect()
+    assert key not in planner._fp_tokens  # weakref callback evicted it
+    b = np.zeros((8, 8), np.float32)
+    assert planner._token(b) != tok_a
+
+
+def test_fingerprint_distinguishes_same_shape_arrays():
+    a = jnp.zeros((4,))
+    b = jnp.zeros((4,))
+    assert planner.value_fingerprint(a) != planner.value_fingerprint(b)
+    assert planner.value_fingerprint(a) == planner.value_fingerprint(a)
+    s = SparseRelation.from_dense(np.eye(3, dtype=bool), "bool")
+    assert planner.value_fingerprint(s) == planner.value_fingerprint(s)
+    assert planner.value_fingerprint(s) != planner.value_fingerprint(
+        SparseRelation.from_dense(np.eye(3, dtype=bool), "bool"))
+
+
+def test_multi_stratum_cache_sees_prior_stratum_outputs():
+    """Regression: a later stratum whose rules read only earlier-stratum
+    IDBs (BC's Lv reads only R3) must still fingerprint those inputs —
+    the verifier's one-program/many-databases pattern."""
+    b = programs.bc(dmax=8)
+    g1 = datasets.erdos_renyi(6, 1.5, seed=0)
+    g2 = datasets.erdos_renyi(6, 1.5, seed=11)
+    db1, db2 = b.make_db(g1), b.make_db(g2)
+    a1, _ = run_program(b.original, db1, mode="naive")
+    a2, _ = run_program(b.original, db2, mode="naive")  # same Program obj
+    fresh2, _ = run_program(programs.bc(dmax=8).original, db2,
+                            mode="naive")
+    assert np.array_equal(np.asarray(a2), np.asarray(fresh2))
+    assert not np.array_equal(np.asarray(a1), np.asarray(a2))
+
+
+def test_domain_sizes_are_part_of_the_fingerprint():
+    """Regression: two databases sharing the same relation arrays but
+    differing in a sort domain (SSSP's value domain d) must not share
+    staged fixpoints — domain sizes are baked into staged shapes."""
+    b = programs.sssp(a=0, wmax=4, dmax=6)
+    g = datasets.path_graph(10)
+    db_small = b.make_db(g)                       # d domain = 6
+    db_big = engine.Database(db_small.schema,
+                             {**db_small.domains, "d": 40},
+                             db_small.relations)  # same arrays, bigger d
+    a_small, _ = run_program(b.original, db_small, mode="naive")
+    a_big, _ = run_program(b.original, db_big, mode="naive")
+    fresh = programs.sssp(a=0, wmax=4, dmax=6)
+    ref_big, _ = run_program(fresh.original,
+                             engine.Database(db_small.schema,
+                                             {**db_small.domains, "d": 40},
+                                             db_small.relations),
+                             mode="naive")
+    assert np.array_equal(np.asarray(a_big), np.asarray(ref_big))
+    assert not np.array_equal(np.asarray(a_small), np.asarray(a_big))
+
+
+def test_plans_with_different_edge_overrides_do_not_share_cache():
+    """Regression: two plans for the same Program/db differing only in
+    their ``edges=`` override (the serve-loop SSSP pattern, where E
+    arrives solely via the override) must not share staged fixpoints."""
+    b = programs.sssp(a=0, wmax=4, dmax=40)
+    db = engine.Database(b.original.schema, {"id": 60, "w": 4, "d": 40}, {})
+    g1 = datasets.erdos_renyi(60, 2.5, seed=4, weighted=True, wmax=4)
+    g2 = datasets.erdos_renyi(60, 2.5, seed=8, weighted=True, wmax=4)
+    p1 = planner.plan_program(b.optimized, db,
+                              edges=g1.sparse_adjacency(semiring="trop"))
+    p2 = planner.plan_program(b.optimized, db,
+                              edges=g2.sparse_adjacency(semiring="trop"))
+    a1, _ = run_program(b.optimized, db, plan=p1)
+    a2, _ = run_program(b.optimized, db, plan=p2)
+    ref2, _ = run_program(b.optimized, b.make_db(g2), mode="naive")
+    assert np.array_equal(np.asarray(a2), np.asarray(ref2))
+    assert not np.array_equal(np.asarray(a1), np.asarray(a2))
+
+
+def test_edges_override_is_always_honored():
+    """An ``edges=`` override must force a vector runner — a dense
+    engine pick would silently run over the stored relations instead."""
+    b = programs.bm(a=0)
+    db = _bm_db(n=40, seed=1)
+    g2 = datasets.erdos_renyi(40, 3.0, seed=9)
+    plan = planner.plan_program(b.optimized, db,
+                                edges=g2.adjacency().astype(bool))
+    assert plan.strata[0].runner in planner.VECTOR_RUNNERS
+    got, _ = run_program(b.optimized, db, plan=plan)
+    ref, _ = run_program(b.optimized, _bm_db(n=40, seed=9), mode="naive")
+    assert np.array_equal(np.asarray(got), np.asarray(ref))
+    own, _ = run_program(b.optimized, db, mode="naive")
+    assert not np.array_equal(np.asarray(got), np.asarray(own))
+    # a family that cannot take a vector runner must refuse the override
+    m = programs.mlm()
+    db_m = m.make_db(datasets.random_recursive_tree(20, seed=1))
+    with pytest.raises(ValueError, match="override cannot be honored"):
+        planner.plan_program(m.optimized, db_m,
+                             edges=db_m.relations["E"])
+
+
+def test_auto_and_forced_plans_do_not_alias_staged_cache(monkeypatch):
+    """Same runner, different storage decisions (auto sparsifies, forced
+    keeps) must not share staged closures."""
+    b = programs.bc(dmax=8)
+    db = b.make_db(datasets.erdos_renyi(40, 1.5, seed=0))
+    plan = planner.plan_for(b.original, db)
+    # the scenario needs a stratum where only storage differs from the
+    # forced plan: dense_naive chosen with E re-homed to sparse
+    sig_sp = plan.strata[2]
+    assert sig_sp.runner == "dense_naive" and \
+        sig_sp.storage == {"E": "sparse"}, (sig_sp.runner, sig_sp.storage)
+    calls = {"ico": 0}
+    real_ico = prog_mod.make_ico
+
+    def count(*a, **k):
+        calls["ico"] += 1
+        return real_ico(*a, **k)
+
+    monkeypatch.setattr(prog_mod, "make_ico", count)
+    a_auto, _ = run_program(b.original, db, mode="auto")
+    auto_calls = calls["ico"]
+    a_forced, _ = run_program(b.original, db, mode="naive")
+    assert calls["ico"] == auto_calls + len(b.original.strata)
+    assert np.array_equal(np.asarray(a_auto), np.asarray(a_forced))
+
+
+def test_different_databases_do_not_share_staged_plans():
+    """Two same-shape databases must produce their own answers even
+    through the staged-plan cache."""
+    b = programs.bm(a=0)
+    prog = b.optimized
+    db1 = _bm_db(n=40, seed=1)
+    db2 = _bm_db(n=40, seed=9)
+    a1, _ = run_program(prog, db1)
+    a2, _ = run_program(prog, db2)
+    r1, _ = run_program(prog, db1, mode="naive")
+    r2, _ = run_program(prog, db2, mode="naive")
+    assert np.array_equal(np.asarray(a1), np.asarray(r1))
+    assert np.array_equal(np.asarray(a2), np.asarray(r2))
+    assert not np.array_equal(np.asarray(r1), np.asarray(r2))
+
+
+# --------------------------------------------------------------------------
+# Construction hoisting (satellite: cache hits skip make_ico/init_state)
+# --------------------------------------------------------------------------
+
+
+def test_cache_hit_skips_ico_and_init_construction(monkeypatch):
+    b = programs.bm(a=0)
+    prog = b.optimized
+    db = _bm_db(n=30, seed=4)
+    calls = {"ico": 0, "init": 0}
+    real_ico, real_init = prog_mod.make_ico, prog_mod.init_state
+
+    def count_ico(*a, **k):
+        calls["ico"] += 1
+        return real_ico(*a, **k)
+
+    def count_init(*a, **k):
+        calls["init"] += 1
+        return real_init(*a, **k)
+
+    monkeypatch.setattr(prog_mod, "make_ico", count_ico)
+    monkeypatch.setattr(prog_mod, "init_state", count_init)
+    run_program(prog, db, mode="seminaive")
+    first = dict(calls)
+    assert first["ico"] == 1 and first["init"] == 1
+    run_program(prog, db, mode="seminaive")
+    assert calls == first  # cache hit: nothing rebuilt
+
+
+# --------------------------------------------------------------------------
+# Scale + serve routing
+# --------------------------------------------------------------------------
+
+
+def test_multi_stratum_second_run_hits_cache(monkeypatch):
+    """Later strata key their staged cache on the *input* database, not
+    on the previous stratum's fresh output arrays — so a repeat run
+    rebuilds nothing."""
+    b = programs.bc(dmax=8)
+    db = b.make_db(datasets.erdos_renyi(6, 1.5, seed=0))
+    calls = {"ico": 0}
+    real_ico = prog_mod.make_ico
+
+    def count(*a, **k):
+        calls["ico"] += 1
+        return real_ico(*a, **k)
+
+    monkeypatch.setattr(prog_mod, "make_ico", count)
+    a1, _ = run_program(b.original, db, mode="naive")
+    first = calls["ico"]
+    assert first == len(b.original.strata)
+    a2, _ = run_program(b.original, db, mode="naive")
+    assert calls["ico"] == first
+    assert np.array_equal(np.asarray(a1), np.asarray(a2))
+
+
+def test_auto_picks_sparse_path_at_50k():
+    """Acceptance: bm at n=50k (sparse adjacency) plans onto the sparse
+    vector runners; sssp does too via the edges override."""
+    g = datasets.erdos_renyi_sparse(50_000, 8.0, seed=0)
+    db = engine.Database(programs.bm(a=0).original.schema, {"id": g.n},
+                         {"E": g.sparse_adjacency(),
+                          "V": jnp.ones((g.n,), bool)})
+    plan = planner.plan_program(programs.bm(a=0).optimized, db)
+    assert plan.strata[0].runner in ("sparse_frontier", "sparse_jit")
+
+    b = programs.sssp(a=0, wmax=6, dmax=48)
+    gw = datasets.erdos_renyi_sparse(50_000, 6.0, seed=3, weighted=True,
+                                     wmax=6)
+    db_s = engine.Database(b.original.schema,
+                           {"id": gw.n, "w": 6, "d": 48}, {})
+    plan_s = planner.plan_program(
+        b.optimized, db_s, edges=gw.sparse_adjacency(semiring="trop"))
+    assert plan_s.strata[0].runner in ("sparse_frontier", "sparse_jit")
+
+
+def test_plan_signature_distinguishes_runner_shape_semiring():
+    db1 = _bm_db(n=40, seed=1)
+    db2 = _bm_db(n=64, seed=1)
+    prog = programs.bm(a=0).optimized
+    p_auto = planner.plan_program(prog, db1)
+    p_forced = planner.plan_program(prog, db1, mode="naive")
+    p_other_n = planner.plan_program(prog, db2)
+    p_cc = planner.plan_program(programs.cc().optimized,
+                                programs.cc().make_db(
+                                    datasets.erdos_renyi(40, 14.0, seed=1)))
+    sigs = {p.signature for p in (p_auto, p_forced, p_other_n, p_cc)}
+    assert len(sigs) == 4
+    # re-planning the same cell is deterministic
+    assert planner.plan_program(prog, db1).signature == p_auto.signature
+
+
+def test_serve_families_carry_plans():
+    """The serve loop's compile cache keys on (plan.signature, bucket)
+    and its runners come from planner.compile_batched."""
+    from repro.launch.datalog_serve import DatalogServer
+    db = _bm_db(n=60, seed=2, sparse=True)
+    server = DatalogServer(max_batch=4)
+    fam = server.register("reach", lambda a: programs.bm(a=a).optimized, db)
+    assert isinstance(fam.plan, planner.ExecutionPlan)
+    assert fam.plan.strata[0].runner == "sparse_jit"
+    assert fam.plan.objective == "throughput"
+    reqs = [server.submit("reach", s) for s in (0, 5, 9)]
+    server.run_until_idle()
+    assert {k[0] for k in server._compiled} == {fam.plan.signature}
+    for req in reqs:
+        ref, _ = run_program(programs.bm(a=req.source).optimized,
+                             db.with_storage("E", "dense"),
+                             mode="seminaive")
+        assert np.array_equal(req.result, np.asarray(ref))
+
+
+def test_throughput_objective_requires_vector_runner():
+    b = programs.mlm()
+    db = b.make_db(datasets.random_recursive_tree(20, seed=1))
+    with pytest.raises(ValueError, match="lacks"):
+        planner.plan_program(b.optimized, db, objective="throughput",
+                             require_vector=True)
+
+
+# --------------------------------------------------------------------------
+# HLO cost model
+# --------------------------------------------------------------------------
+
+
+def test_hlo_cost_model_prices_candidates():
+    db = _bm_db(n=24, seed=3)
+    plan = planner.plan_program(programs.bm(a=0).optimized, db,
+                                cost_model="hlo")
+    sp = plan.strata[0]
+    priced = [c for c in sp.considered.values() if c.source == "hlo"]
+    assert priced, sp.considered
+    assert all(c.flops_per_iter > 0 for c in priced)
+    # the hlo-priced plan still executes correctly
+    got, _ = run_program(programs.bm(a=0).optimized, db, plan=plan)
+    ref, _ = run_program(programs.bm(a=0).optimized, db, mode="naive")
+    assert np.array_equal(np.asarray(got), np.asarray(ref))
