@@ -2,11 +2,16 @@
 #
 #   make test        — fast tier-1 suite (slow-marked tests excluded)
 #   make test-all    — everything, including AOT dry-run compiles
+#   make lint        — ruff check + format check (no-op if ruff missing)
 #   make bench-smoke — small-size pass over the benchmark drivers
 #   make bench-sparse— dense-vs-sparse scaling acceptance run
 #   make bench-serve — batched serving throughput (writes BENCH_serve.json)
 #   make bench-plan  — planner-vs-empirical crossover smoke (CI gate;
 #                      exits 1 on disagreement at the extremes)
+#   make bench-incremental — streaming-update maintenance acceptance
+#                      (CI gate; exits 1 below the ≥10× update-to-answer
+#                      speedup, on answer divergence, or when the planner
+#                      fails to pick delta_restart; BENCH_incremental.json)
 
 PY      ?= python
 PYPATH  := src
@@ -15,10 +20,17 @@ test:
 	PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q
 
 test-all:
-	PYTHONPATH=$(PYPATH) $(PY) -m pytest -q -m "slow or not slow"
+	PYTHONPATH=$(PYPATH) $(PY) -m pytest -q -m "slow or not slow" --durations=20
+
+lint:
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check . && ruff format --check .; \
+	else \
+		echo "ruff not installed; skipping lint"; \
+	fi
 
 bench-smoke:
-	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --quick --only sparse,serve,kernel
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --quick --only sparse,serve,kernel,plan,incremental
 
 bench-sparse:
 	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.sparse_scaling
@@ -29,4 +41,8 @@ bench-serve:
 bench-plan:
 	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.plan_crossover --quick
 
-.PHONY: test test-all bench-smoke bench-sparse bench-serve bench-plan
+bench-incremental:
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.incremental_update
+
+.PHONY: test test-all lint bench-smoke bench-sparse bench-serve \
+	bench-plan bench-incremental

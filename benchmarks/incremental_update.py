@@ -1,0 +1,190 @@
+"""Incremental-maintenance acceptance: update-to-fresh-answer latency
+under streaming edge updates → ``BENCH_incremental.json``.
+
+Single-source shortest distances (trop) over a weighted 50k-vertex
+power-law graph, solved once from scratch; then the graph mutates and
+the fresh answer is produced two ways:
+
+* ``full``  — the pre-PR-4 shape: merge the delta with the coalescing
+  ``SparseRelation.union`` (the only mutation API that existed), then
+  recompute the fixpoint from ⊥ — every mutation throws away the old
+  solution, the old adjacency index, and the old relation layout;
+* ``delta`` — ``SparseRelation.apply_delta`` (O(nnz(Δ)) append that
+  *extends* the cached CSR adjacency instead of re-sorting it) and
+  *delta-restart* from the old solution
+  (:func:`repro.incremental.delta_restart_fixpoint`, DESIGN.md §5): an
+  O(nnz(Δ)) seed ``d₀ = (y* ⊗ ΔE) ⊖ y*`` plus re-convergence over only
+  the affected region.
+
+Two update sizes per the ISSUE-4 acceptance line: a single random edge
+and a 1 %-of-nnz batch.  The gate (CI: ``make bench-incremental``):
+
+* median update-to-answer speedup ≥ 10× at **both** sizes,
+* exact agreement with the from-scratch answer on every trial,
+* the cost-based planner, asked with ``objective="incremental"``, picks
+  the ``delta_restart`` strategy for this workload.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.incremental_update
+  PYTHONPATH=src python -m benchmarks.incremental_update --n 2000
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import engine, planner
+from repro.datalog import datasets, programs
+from repro.incremental import delta_restart_fixpoint
+from repro.sparse import SparseRelation, sparse_seminaive_fixpoint
+
+GATE_SPEEDUP = 10.0
+WMAX = 8
+
+
+def _weighted_powerlaw(n: int, seed: int) -> datasets.Graph:
+    g = datasets.powerlaw(n, 4, seed=seed)
+    rng = np.random.default_rng(seed)
+    g.weights = rng.integers(1, WMAX, len(g.edges))
+    return g
+
+
+def _trop_init(n: int, source: int) -> np.ndarray:
+    init = np.full(n, np.inf, np.float32)
+    init[source] = 0.0
+    return init
+
+
+def _rand_delta(rng, n: int, k: int):
+    coords = np.stack([rng.integers(0, n, k), rng.integers(0, n, k)],
+                      axis=1)
+    values = rng.integers(1, WMAX, k).astype(np.float32)
+    return coords, values
+
+
+def _one_trial(rel, init, y_star, coords, values, *, max_iters=10_000):
+    """Apply one delta both ways; returns (t_full, t_delta, exact,
+    resumed_iters)."""
+    dr = SparseRelation.from_coo(coords, values, rel.shape, rel.semiring,
+                                 lib="np")
+    # -- full recompute: coalescing union + from-scratch frontier fixpoint
+    t0 = time.perf_counter()
+    rel_full = rel.union(dr)
+    y_full, _ = sparse_seminaive_fixpoint(rel_full, init, mode="frontier",
+                                          max_iters=max_iters)
+    t_full = time.perf_counter() - t0
+    y_full = np.asarray(y_full)
+
+    # -- delta restart: O(nnz(Δ)) append + seed + affected-region rounds
+    t0 = time.perf_counter()
+    rel_delta = rel.apply_delta(coords, values)
+    y_delta, it = delta_restart_fixpoint(rel_delta, dr, y_star,
+                                         mode="frontier",
+                                         max_iters=max_iters)
+    t_delta = time.perf_counter() - t0
+    return t_full, t_delta, np.array_equal(np.asarray(y_delta), y_full), \
+        int(np.asarray(it))
+
+
+def _planner_pick(n: int, rel: SparseRelation, delta_nnz: int) -> str:
+    """What the cost-based planner chooses for this workload under
+    ``objective="incremental"`` (SSSP's schema-level E3 would be a dense
+    (n, n, w) tensor at 50k — the edges override routes the weighted COO
+    adjacency, exactly as the serve loop does)."""
+    b = programs.sssp(a=0, wmax=WMAX, dmax=64)
+    db = engine.Database(b.original.schema, {"id": n, "w": WMAX, "d": 64},
+                        {})
+    plan = planner.plan_program(b.optimized, db, objective="incremental",
+                                edges=rel, delta_nnz=delta_nnz)
+    return plan.strata[0].runner
+
+
+def run(n: int = 50_000, seed: int = 1, trials: int = 3,
+        out: str = "BENCH_incremental.json", source: int = 0,
+        gate: bool = True):
+    g = _weighted_powerlaw(n, seed)
+    rel = g.sparse_adjacency(semiring="trop")
+    nnz = int(np.asarray(rel.as_np().nnz))
+    init = _trop_init(n, source)
+
+    t0 = time.perf_counter()
+    y_star, iters0 = sparse_seminaive_fixpoint(rel, init, mode="frontier")
+    t_scratch = time.perf_counter() - t0
+    y_star = np.asarray(y_star)
+    emit("incremental/scratch", t_scratch,
+         f"n={n} nnz={nnz} iters={int(np.asarray(iters0))}")
+
+    rng = np.random.default_rng(seed + 1)
+    sizes = {"single": 1, "batch1pct": max(1, nnz // 100)}
+    rows, ok_exact = [], True
+    for label, k in sizes.items():
+        t_fulls, t_deltas, resumed = [], [], []
+        for _ in range(trials):
+            coords, values = _rand_delta(rng, n, k)
+            tf, td, exact, it = _one_trial(rel, init, y_star, coords,
+                                           values)
+            ok_exact &= exact
+            t_fulls.append(tf)
+            t_deltas.append(td)
+            resumed.append(it)
+        tf, td = float(np.median(t_fulls)), float(np.median(t_deltas))
+        speedup = tf / td
+        pick = _planner_pick(n, rel, k)
+        rows.append({"update": label, "nnz_delta": k,
+                     "t_full_s": tf, "t_delta_s": td, "speedup": speedup,
+                     "resumed_iters": resumed, "planner_pick": pick})
+        emit(f"incremental/{label}", td,
+             f"nnz(Δ)={k} full={tf * 1e3:.1f}ms delta={td * 1e3:.1f}ms "
+             f"speedup={speedup:.1f}x pick={pick}")
+
+    result = {"bench": "incremental_update", "family": "SSSP/trop",
+              "n": n, "nnz": nnz, "seed": seed, "trials": trials,
+              "scratch_s": t_scratch, "agreement": ok_exact,
+              "gate_speedup": GATE_SPEEDUP, "rows": rows}
+    if out:
+        pathlib.Path(out).write_text(json.dumps(result, indent=2) + "\n")
+        print(f"wrote {out}")
+
+    problems = []
+    if not ok_exact:
+        problems.append("delta-restart diverged from from-scratch answers")
+    for r in rows:
+        if gate and r["speedup"] < GATE_SPEEDUP:
+            problems.append(f"{r['update']}: speedup {r['speedup']:.1f}x "
+                            f"< {GATE_SPEEDUP:.0f}x")
+        if r["planner_pick"] != "delta_restart":
+            problems.append(f"{r['update']}: planner picked "
+                            f"{r['planner_pick']!r}, not delta_restart")
+    if problems:
+        raise RuntimeError("incremental_update gate failed: "
+                           + "; ".join(problems))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=50_000)
+    ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--trials", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_incremental.json")
+    ap.add_argument("--no-gate", action="store_true",
+                    help="report only; skip the ≥10× latency gate "
+                         "(exactness + planner-pick still checked)")
+    args = ap.parse_args()
+    try:
+        run(n=args.n, seed=args.seed, trials=args.trials, out=args.out,
+            gate=not args.no_gate)
+    except RuntimeError as e:
+        print(e, file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

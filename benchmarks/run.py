@@ -7,6 +7,8 @@
   kernel — semiring matmul engine throughput
   sparse — dense-vs-sparse scaling (BM/TC family)
   serve  — batched multi-source serving throughput (BENCH_serve.json)
+  plan   — planner-vs-empirical crossover checks
+  incremental — streaming-update maintenance (BENCH_incremental.json)
   (roofline runs separately on dry-run output: benchmarks/roofline.py)
 
 Suites are discovered lazily: one suite failing to import (a missing
@@ -37,6 +39,10 @@ SUITES: dict[str, tuple[str, str, dict, dict]] = {
     "serve": ("benchmarks.serve_batch", "run",
               {}, {"n": 2000, "batch_sizes": (1, 8), "out": None}),
     "plan": ("benchmarks.plan_crossover", "run", {}, {"quick": True}),
+    # quick mode keeps exactness + planner-pick assertions but waives the
+    # ≥10× latency gate: at toy sizes both paths run in ~1 ms of noise
+    "incremental": ("benchmarks.incremental_update", "run", {},
+                    {"n": 2000, "trials": 1, "out": None, "gate": False}),
 }
 
 

@@ -51,7 +51,9 @@ def run(n: int = 50_000, batch_sizes=(1, 8, 64), seed: int = 1,
     db = engine.Database(b0.original.schema, {"id": n},
                          {"E": rel, "V": jnp.ones((n,), bool)})
 
-    server = DatalogServer(max_batch=max(batch_sizes))
+    # warm answers off: this benchmark measures *cold* compute throughput
+    # (the warm path is benchmarks/incremental_update.py's subject)
+    server = DatalogServer(max_batch=max(batch_sizes), warm_answers=0)
     server.register("reach", lambda a: programs.bm(a=a).optimized, db)
 
     single = jax.jit(lambda e, i: sparse_seminaive_fixpoint(

@@ -85,6 +85,56 @@ class Database:
         rels[name] = arr
         return Database(self.schema, self.domains, rels)
 
+    # -- streaming updates --------------------------------------------------
+    def apply_delta(self, delta) -> "Database":
+        """Apply a :class:`repro.incremental.DeltaLog` (or any iterable of
+        entries with ``relation``/``coords``/``values``/``op`` fields)
+        and return the mutated database.
+
+        ``op="merge"`` is the ⊕-merge ``R′ = R ⊕ Δ`` — a COO append for
+        sparse relations (:meth:`SparseRelation.apply_delta`, capacity
+        doubling beyond the padded buffer) and a ⊕-combining scatter for
+        dense ones.  ``op="delete"`` removes keys outright (the
+        non-monotone mutation; warm fixpoint state over the relation must
+        be recomputed — see DESIGN.md §5).
+        """
+        from repro.sparse.coo import SparseRelation
+        entries = getattr(delta, "entries", delta)
+        rels = dict(self.relations)
+        for ent in entries:
+            arr = rels[ent.relation]
+            if isinstance(arr, SparseRelation):
+                if ent.op == "delete":
+                    rels[ent.relation] = arr.delete_keys(ent.coords)
+                else:
+                    rels[ent.relation] = arr.apply_delta(ent.coords,
+                                                         ent.values)
+                continue
+            sr = sr_mod.get(self.schema[ent.relation].semiring,
+                            lib="np" if isinstance(arr, np.ndarray)
+                            else "jnp")
+            coords = np.asarray(ent.coords, np.int64)
+            coords = coords.reshape(-1, np.ndim(arr))
+            idx = tuple(coords.T)
+            if ent.op == "delete":
+                if isinstance(arr, np.ndarray):
+                    out = arr.copy()
+                    out[idx] = sr.zero
+                else:
+                    out = arr.at[idx].set(sr.zero)
+            else:
+                vals = (np.full(len(coords), sr.one, sr.dtype)
+                        if ent.values is None
+                        else np.asarray(ent.values, sr.dtype))
+                if isinstance(arr, np.ndarray):
+                    out = arr.copy()
+                    sr_mod.NP_COMBINE[sr.name].at(out, idx, vals)
+                else:
+                    out = sr_mod.scatter_op(sr.name, arr.at[idx])(
+                        jnp.asarray(vals), mode="drop")
+            rels[ent.relation] = out
+        return Database(self.schema, self.domains, rels)
+
     def adapt(self, names=None) -> "Database":
         """Adaptive density switch: re-home each relation per the
         hysteresis thresholds in :mod:`repro.sparse.adaptive`."""

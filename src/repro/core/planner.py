@@ -51,9 +51,15 @@ from repro.core import semiring as sr_mod
 from repro.sparse import adaptive
 from repro.sparse.coo import SparseRelation
 
-#: physical runners, in tie-break preference order (earlier wins ties)
-RUNNERS = ("sparse_jit", "sparse_frontier", "vector_dense", "dense_gsn",
-           "dense_naive", "dense_host")
+#: physical runners, in tie-break preference order (earlier wins ties).
+#: "delta_restart" is the incremental-maintenance strategy (DESIGN.md §5):
+#: it resumes the previous solution instead of recomputing, so at equal
+#: priced cost it can only do less work — hence it leads the order.  It
+#: is only ever *considered* under ``objective="incremental"`` and is
+#: executed by :func:`repro.incremental.refresh_program`, never by
+#: :func:`execute_plan` (which has no previous solution to restart from).
+RUNNERS = ("delta_restart", "sparse_jit", "sparse_frontier",
+           "vector_dense", "dense_gsn", "dense_naive", "dense_host")
 
 #: runners that execute the vector equation ``x = init ⊕ x ⊗ E``
 VECTOR_RUNNERS = ("sparse_jit", "sparse_frontier", "vector_dense")
@@ -197,27 +203,37 @@ def plan_program(prog, db: engine.Database, hints=None, *,
                  objective: str = "latency", mode: str = "auto",
                  max_iters: int = 10_000, cost_model: str = "analytic",
                  edges=None, adapt_storage: bool = True,
-                 require_vector: bool = False) -> ExecutionPlan:
+                 require_vector: bool = False,
+                 delta_nnz: int | None = None) -> ExecutionPlan:
     """Choose a physical runner + storage for every stratum of ``prog``.
 
     ``objective`` is "latency" (one query; host frontier worklists are in
-    play on CPU) or "throughput" (batched serving; only staged runners).
-    ``mode`` other than "auto" forces a runner on every stratum (legacy
-    ``run_program`` strings compile to forced plans).  ``edges`` overrides
-    the extracted linear operator of a single-stratum vector program
-    (the serve loop's weighted-COO escape hatch).  ``adapt_storage=False``
-    pins every relation to its caller-chosen representation.
-    ``require_vector=True`` raises ``ValueError`` with the recorded
-    rejection reason when stratum 0 cannot take a vector runner (the
-    serve loop can only batch the vector equation).
+    play on CPU), "throughput" (batched serving; only staged runners), or
+    "incremental" (a warm previous solution exists and ``delta_nnz``
+    tuples just changed monotonically — the "delta_restart" strategy is
+    priced at O(nnz(Δ) · affected-trip-count) against every full-
+    recompute candidate, DESIGN.md §5).  ``mode`` other than "auto"
+    forces a runner on every stratum (legacy ``run_program`` strings
+    compile to forced plans).  ``edges`` overrides the extracted linear
+    operator of a single-stratum vector program (the serve loop's
+    weighted-COO escape hatch).  ``adapt_storage=False`` pins every
+    relation to its caller-chosen representation.  ``require_vector=True``
+    raises ``ValueError`` with the recorded rejection reason when
+    stratum 0 cannot take a vector runner (the serve loop can only batch
+    the vector equation).
     """
-    if objective not in ("latency", "throughput"):
+    if objective not in ("latency", "throughput", "incremental"):
         raise ValueError(f"unknown objective {objective!r}")
     hints = dict(prog.sort_hints) if hints is None else dict(hints)
     forced = None
     if mode != "auto":
         forced = mode if mode in RUNNERS else \
             LEGACY_MODES.get(mode, "dense_host")
+        if forced == "delta_restart":
+            raise ValueError(
+                "delta_restart cannot be forced by mode= — it needs a "
+                "previous solution; use objective='incremental' and "
+                "repro.incremental.refresh_program")
     plans = []
     for si, stratum in enumerate(prog.strata):
         plans.append(_plan_stratum(
@@ -225,7 +241,8 @@ def plan_program(prog, db: engine.Database, hints=None, *,
             forced=forced, cost_model=cost_model,
             edges=edges if si == 0 else None,
             adapt_storage=adapt_storage and forced is None,
-            max_iters=max_iters))
+            max_iters=max_iters,
+            delta_nnz=delta_nnz if si == 0 else None))
     plan = ExecutionPlan(
         prog.name, objective, mode, plans,
         tuple(r.head for r in prog.outputs), prog.post is not None,
@@ -328,8 +345,8 @@ def _term_flops(term: ir.Term, sorts: Mapping[str, str],
 
 
 def _plan_stratum(prog, stratum, si, db, hints, *, objective, forced,
-                  cost_model, edges, adapt_storage,
-                  max_iters) -> StratumPlan:
+                  cost_model, edges, adapt_storage, max_iters,
+                  delta_nnz=None) -> StratumPlan:
     # ``reads`` keeps every referenced relation name — including IDBs of
     # *earlier strata*, which exist only at execution time; the executor
     # fingerprints the input database over the union of all strata's
@@ -473,7 +490,8 @@ def _plan_stratum(prog, stratum, si, db, hints, *, objective, forced,
 
     # the host worklist only pays off for single-shot latency on a CPU
     # host; batched serving and accelerators want the staged SpMM loop
-    frontier_ok = objective == "latency" and jax.default_backend() == "cpu"
+    frontier_ok = (objective in ("latency", "incremental")
+                   and jax.default_backend() == "cpu")
     if "sparse_frontier" in considered and not frontier_ok:
         rejected["sparse_frontier"] = ("host worklist loses to the staged "
                                        "while_loop off-CPU / for batches")
@@ -499,6 +517,29 @@ def _plan_stratum(prog, stratum, si, db, hints, *, objective, forced,
             raise ValueError(f"{prog.name}: edges override cannot be "
                              f"honored: {_vector_rejection(rejected)}")
 
+    # -- incremental maintenance: the delta-restart strategy ---------------
+    # priced at O(nnz(Δ) · affected-trip-count): the warm restart seeds
+    # its frontier from the nnz(Δ) touched edges, and per round the
+    # affected region grows by ~the average degree, never beyond nnz(E)
+    # (full-recompute per-round work).  Only offered under
+    # objective="incremental" so latency/throughput plans are unchanged.
+    if objective == "incremental":
+        if delta_nnz is None:
+            rejected["delta_restart"] = (
+                "no update delta recorded — pass delta_nnz "
+                "(repro.incremental.refresh_program does)")
+        elif vf is None:
+            rejected["delta_restart"] = _vector_rejection(rejected)
+        elif e_nnz is None:
+            rejected["delta_restart"] = (
+                "linear operator materializes dense — delta seeding "
+                "needs the sparse fast path")
+        else:
+            deg = max(1.0, e_nnz / max(n_vec, 1))
+            affected = min(float(e_nnz), float(delta_nnz) * deg)
+            considered["delta_restart"] = CostEstimate(
+                affected + 1.0, 12.0 * affected, trips)
+
     if cost_model == "hlo":
         considered = _hlo_costs(considered, prog, stratum, db, hints, vf,
                                 edges, trips, storage)
@@ -515,6 +556,9 @@ def _plan_stratum(prog, stratum, si, db, hints, *, objective, forced,
               f"{len(considered)} feasible candidates")
     if runner == "sparse_frontier":
         reason += " (cpu host ⇒ frontier worklist)"
+    if runner == "delta_restart":
+        reason += (f" (warm restart: nnz(Δ)={int(delta_nnz)} seeds the "
+                   f"frontier)")
     return StratumPlan(si, tuple(stratum.idbs), runner, reason, storage,
                        notes, reads, cost, considered, rejected, vf, edges)
 
@@ -588,6 +632,8 @@ def _hlo_costs(considered, prog, stratum, db, hints, vf, edges, trips,
         return CostEstimate(max(c.flops, 1.0), c.bytes, trips, "hlo")
 
     for runner in list(out):
+        if runner == "delta_restart":
+            continue  # no staged step of its own — analytic price stands
         try:
             out[runner] = price(runner)
         except Exception:  # noqa: BLE001 — keep the analytic estimate
@@ -729,6 +775,11 @@ def _run_stratum(sp, stratum, prog, cur_db, hints, cache, max_iters,
     from repro.core import fixpoint
     from repro.core import program as prog_mod
 
+    if sp.runner == "delta_restart":
+        raise ValueError(
+            f"{prog.name}: delta_restart plans carry no previous "
+            f"solution to restart from — execute them via "
+            f"repro.incremental.refresh_program")
     key = (sp.index, sp.runner, max_iters, base_fp,
            tuple(sorted(sp.storage.items())),
            None if sp.edges_override is None

@@ -193,6 +193,16 @@ def edge_atom(vf: VectorForm) -> ir.RelAtom | None:
     return a
 
 
+def init_reads(vf: VectorForm, name: str) -> bool:
+    """Whether the init term references relation ``name``.  A ⊕-merge
+    into the linear operator's own relation then *also* changes the init
+    vector, so a delta-restart seeded from ``y* ⊗ ΔE`` alone would miss
+    the init contribution — the maintenance layers must fall back
+    (DESIGN.md §5)."""
+    return any(isinstance(a, ir.RelAtom) and a.name == name
+               for t in vf.init.terms for a in t.atoms)
+
+
 def edge_operator(vf: VectorForm, db: engine.Database, hints=None, *,
                   prefer_sparse: bool = True):
     """Materialize E[z, y] — sparse-preserving when the linear remainder

@@ -1,0 +1,32 @@
+"""Incremental fixpoint maintenance (DESIGN.md §5).
+
+Keeps fixpoint solutions warm across database mutations instead of
+recomputing from ⊥ on every change:
+
+* :class:`DeltaLog` — a typed log of streaming relation updates:
+  ⊕-merge edge insertions (and monotone weight decreases for
+  trop/minplus, where ⊕ = min absorbs them) plus explicit deletions,
+  which are the non-monotone case.
+* :func:`delta_restart_fixpoint` — re-converge ``x = init ⊕ x ⊗ E′``
+  from the previous solution ``y*``, seeding the GSN frontier with only
+  the rows reachable from touched edges (``d₀ = (y* ⊗ ΔE) ⊖ y*``,
+  O(nnz(Δ))); exactness is guaranteed by semiring monotonicity.  A 2-D
+  ``(B, n)`` previous solution repairs a whole batch of warm answers in
+  one SpMM pass per round.
+* :func:`refresh_program` — the policy layer: applies a
+  :class:`DeltaLog` through :meth:`repro.core.engine.Database.
+  apply_delta`, asks the cost-based planner (``objective="incremental"``)
+  whether delta-restart beats full recomputation, and falls back to a
+  full recompute — with an explicit reason — for non-monotone updates,
+  missing previous solutions, or deltas large enough that restarting
+  loses.
+"""
+
+from repro.incremental.delta import DeltaEntry, DeltaLog
+from repro.incremental.restart import (RefreshReport, delta_restart_fixpoint,
+                                       delta_seed, refresh_program)
+
+__all__ = [
+    "DeltaEntry", "DeltaLog", "RefreshReport", "delta_seed",
+    "delta_restart_fixpoint", "refresh_program",
+]

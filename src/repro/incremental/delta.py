@@ -1,0 +1,120 @@
+"""DeltaLog: a typed log of streaming relation updates.
+
+Each entry is one batch of tuple updates against one named relation.
+Two operations exist, chosen so the *monotone* case is syntactically
+recognizable without looking at the stored data:
+
+* ``merge`` — the ⊕-merge ``R′ = R ⊕ Δ``.  Always monotone in the
+  semiring order (``R′ ⊒ R``): boolean edge insertion (∨), tropical
+  weight decrease (min — inserting a weight *above* the stored one is
+  silently absorbed, which is still monotone, just a no-op), counting
+  increments (+).  Delta-restart maintenance (DESIGN.md §5) re-converges
+  the old fixpoint under merges without recomputing.
+* ``delete`` — remove keys outright.  Not expressible as ⊕ on any of
+  our semirings, hence non-monotone: the old solution may over-derive
+  and warm restart is unsound.  :func:`repro.incremental.refresh_program`
+  falls back to a full recompute with this recorded as the reason.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import semiring as sr_mod
+from repro.sparse.coo import SparseRelation
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaEntry:
+    """One batch of updates against one relation."""
+
+    relation: str
+    coords: np.ndarray           # (k, arity) int
+    values: np.ndarray | None    # (k,) semiring values; None → 1̄ each
+    op: str                      # "merge" | "delete"
+
+    @property
+    def size(self) -> int:
+        return len(self.coords)
+
+
+class DeltaLog:
+    """An append-only log of updates, consumable by
+    :meth:`repro.core.engine.Database.apply_delta` and the delta-restart
+    machinery (:mod:`repro.incremental.restart`)."""
+
+    def __init__(self) -> None:
+        self.entries: list[DeltaEntry] = []
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def __repr__(self) -> str:
+        per = {}
+        for e in self.entries:
+            per[e.relation] = per.get(e.relation, 0) + e.size
+        return f"DeltaLog({per})"
+
+    # -- recording -----------------------------------------------------------
+    def insert(self, relation: str, coords, values=None) -> "DeltaLog":
+        """⊕-merge tuples into ``relation`` (edge insertions; for
+        trop/minplus the same call records a monotone weight decrease,
+        since ⊕ = min).  Returns ``self`` for chaining."""
+        coords = np.atleast_2d(np.asarray(coords, np.int64))
+        if values is not None:
+            values = np.asarray(values).reshape(-1)
+            assert len(values) == len(coords), (coords.shape, values.shape)
+        self.entries.append(DeltaEntry(relation, coords, values, "merge"))
+        return self
+
+    def delete(self, relation: str, coords) -> "DeltaLog":
+        """Remove keys from ``relation`` — the non-monotone mutation."""
+        coords = np.atleast_2d(np.asarray(coords, np.int64))
+        self.entries.append(DeltaEntry(relation, coords, None, "delete"))
+        return self
+
+    # -- classification ------------------------------------------------------
+    def monotone(self) -> tuple[bool, str | None]:
+        """Whether every entry is a ⊕-merge (so the post-update least
+        fixpoint dominates the old one and delta-restart is exact);
+        otherwise the human-readable reason for the full-recompute
+        fallback."""
+        for e in self.entries:
+            if e.op != "merge":
+                return False, (f"{e.op} of {e.size} key(s) from "
+                               f"{e.relation} is non-monotone (not a "
+                               f"⊕-merge) — restarting from the old "
+                               f"solution could over-derive")
+        return True, None
+
+    def touched(self) -> set[str]:
+        return {e.relation for e in self.entries}
+
+    def nnz(self, relation: str | None = None) -> int:
+        """Total updated-tuple count (optionally for one relation) —
+        the nnz(Δ) the planner prices ``objective="incremental"`` with."""
+        return sum(e.size for e in self.entries
+                   if relation is None or e.relation == relation)
+
+    # -- materialization -----------------------------------------------------
+    def merged(self, relation: str, shape, semiring: str, *,
+               lib: str = "np") -> SparseRelation:
+        """All ``merge`` entries for ``relation`` coalesced into one
+        sparse Δ relation (the seed operand of delta-restart)."""
+        sr = sr_mod.get(semiring, lib="np")
+        coords, values = [], []
+        for e in self.entries:
+            if e.relation != relation or e.op != "merge":
+                continue
+            coords.append(e.coords)
+            values.append(np.full(e.size, sr.one, sr.dtype)
+                          if e.values is None
+                          else np.asarray(e.values, sr.dtype))
+        if not coords:
+            coords = [np.zeros((0, len(shape)), np.int64)]
+            values = [np.zeros((0,), sr.dtype)]
+        return SparseRelation.from_coo(
+            np.concatenate(coords), np.concatenate(values), tuple(shape),
+            semiring, lib=lib)

@@ -26,6 +26,20 @@ that answers the whole pack in one device program.  The pieces:
 * **Sharding** — with a mesh attached, the query-batch axis is laid out
   across the "data" axis (``launch.rules`` kind "datalog") and the
   fixpoint's internal constraints keep it there.
+* **Streaming updates** (DESIGN.md §5) — :meth:`DatalogServer.
+  submit_update` enqueues edge mutations *in the same FIFO queue as
+  queries*: a query packed into a batch never jumps ahead of an earlier
+  same-family update, and once an update is acknowledged every later
+  answer reflects it.  Monotone updates (⊕-merge insertions / tropical
+  weight decreases) are applied as a COO append
+  (:meth:`~repro.sparse.coo.SparseRelation.apply_delta` — capacity and
+  therefore the staged fixpoint's trace usually survive, so the compile
+  cache keeps hitting) and the family's warm answer cache is *repaired*,
+  not dropped: one batched delta-restart pass
+  (:func:`repro.incremental.delta_restart_fixpoint`) re-converges every
+  cached solution from an O(nnz(Δ)) SpMM seed.  Non-monotone updates
+  (deletions) rebuild the operator and invalidate the warm answers —
+  with the plan, signature, and compiled runners all kept.
 
 FGH families: :func:`fgh_make_program` derives Π₂ from a Π₁ benchmark
 *twice* at distinct placeholder sources and diffs the results to locate
@@ -45,7 +59,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import engine, ir, planner, verify
+from repro.core import engine, ir, planner, vectorize, verify
 from repro.core import semiring as sr_mod
 from repro.core.program import Program
 from repro.distributed import sharding as sh
@@ -75,6 +89,34 @@ class QueryRequest:
         return self.done_s - self.submitted_s
 
 
+@dataclasses.dataclass
+class UpdateRequest:
+    """One batch of edge mutations against a family's linear operator.
+
+    ``op="merge"`` is the monotone ⊕-merge (edge insertion; tropical
+    weight decrease); ``op="delete"`` removes keys and is non-monotone.
+    Coordinates live in the space the family's operator was built from:
+    the stored edge relation ``E(i, j)`` when one exists (the server
+    re-orients them for the operator), else the ``edges=`` override
+    given at registration.  Once ``applied`` is set the server
+    guarantees no later-served answer predates the update.
+    """
+
+    family: str
+    coords: np.ndarray
+    values: np.ndarray | None = None
+    op: str = "merge"
+    applied: bool = False
+    repaired: int = 0           # warm answers repaired in place
+    error: str | None = None
+    submitted_s: float = 0.0
+    done_s: float = 0.0
+
+    @property
+    def latency_s(self) -> float:
+        return self.done_s - self.submitted_s
+
+
 #: per-family cap on memoized init vectors (n floats each)
 _INIT_CACHE_MAX = 4096
 
@@ -90,8 +132,12 @@ class _Family:
     hints: dict
     n: int
     max_iters: int
+    edge_rel: str | None = None  # stored relation behind E (None: override)
+    init_reads_edges: bool = False  # init term references edge_rel too
     init_cache: dict[int, np.ndarray] = dataclasses.field(
         default_factory=dict)
+    answers: dict[int, np.ndarray] = dataclasses.field(
+        default_factory=dict)   # warm x* per source, repaired on update
 
     @property
     def backend(self) -> str:
@@ -112,18 +158,20 @@ class DatalogServer:
     """Request-queue serve loop over batched GSN fixpoints."""
 
     def __init__(self, *, max_batch: int = 64, mesh=None,
-                 max_iters: int = 10_000):
+                 max_iters: int = 10_000, warm_answers: int = 256):
         self.max_batch = max_batch
         self.max_iters = max_iters
         self.mesh = mesh
+        self.warm_answers = warm_answers
         self.rules = (rules_mod.make_rules(mesh, "datalog")
                       if mesh is not None else None)
         self._families: dict[str, _Family] = {}
-        self._queue: collections.deque[QueryRequest] = collections.deque()
+        self._queue: collections.deque = collections.deque()
         self._compiled: dict[tuple, Callable] = {}
         self.stats = {"served": 0, "failed": 0, "batches": 0,
                       "padded_rows": 0, "cache_hits": 0,
-                      "cache_misses": 0}
+                      "cache_misses": 0, "updates": 0, "warm_hits": 0,
+                      "answers_repaired": 0, "answers_dropped": 0}
 
     # -- registration -------------------------------------------------------
 
@@ -147,17 +195,25 @@ class DatalogServer:
             adapt_storage=False, require_vector=True)
         edges = planner.materialize_edges(plan, db, hints)
         n = db.dom(plan.strata[0].vf.out_sort)
-        # numpy twin of the dense relations: per-request init evaluation
-        # runs eagerly on the host (the jnp dispatch overhead of an O(n)
-        # eval would dominate a packed batch otherwise).  Sparse
-        # relations stay as-is; init terms never touch them for
-        # vector-shaped families.
-        host_rels = {k: (v if isinstance(v, SparseRelation)
+        # numpy twin of the relations: per-request init evaluation runs
+        # eagerly on the host (the jnp dispatch overhead of an O(n) eval
+        # would dominate a packed batch otherwise).  Sparse relations go
+        # to their np lib too — an init term may read the edge relation
+        # itself (e.g. Q(y) := E(a, y) ⊕ …), which the evaluator then
+        # densifies host-side.
+        host_rels = {k: (v.as_np() if isinstance(v, SparseRelation)
                          else np.asarray(v))
                      for k, v in db.relations.items()}
         host_db = engine.Database(db.schema, db.domains, host_rels)
         fam = _Family(name, make_program, db, host_db, plan, edges, hints,
                       n, self.max_iters)
+        if plan.strata[0].edges_override is None:
+            a = vectorize.edge_atom(plan.strata[0].vf)
+            if a is not None and isinstance(db.relations.get(a.name),
+                                            SparseRelation):
+                fam.edge_rel = a.name
+                fam.init_reads_edges = vectorize.init_reads(
+                    plan.strata[0].vf, a.name)
         self._families[name] = fam
         return fam
 
@@ -172,26 +228,71 @@ class DatalogServer:
         self._queue.append(req)
         return req
 
+    def submit_update(self, family: str, coords, values=None, *,
+                      op: str = "merge") -> UpdateRequest:
+        """Enqueue a batch of edge mutations behind every already-queued
+        request (FIFO: queries submitted after this update are never
+        answered from the pre-update graph)."""
+        if family not in self._families:
+            raise KeyError(f"unknown family {family!r}; "
+                           f"registered: {sorted(self._families)}")
+        if op not in ("merge", "delete"):
+            raise ValueError(f"unknown update op {op!r}")
+        req = UpdateRequest(family,
+                            np.atleast_2d(np.asarray(coords, np.int64)),
+                            None if values is None
+                            else np.asarray(values).reshape(-1), op,
+                            submitted_s=time.perf_counter())
+        self._queue.append(req)
+        return req
+
     def pending(self) -> int:
         return len(self._queue)
 
-    def step(self) -> list[QueryRequest]:
-        """Serve one packed batch: pop the oldest request plus up to
-        ``max_batch - 1`` more of the same family (others keep their
-        queue order), run the compiled batched fixpoint, unpack."""
+    def step(self) -> list:
+        """Process the queue head: a run of updates is applied (and the
+        family's warm answers repaired) in one pass; a query is packed
+        with up to ``max_batch - 1`` later same-family queries — but
+        never past an intervening same-family update, which would let a
+        pre-update answer overtake an acknowledged mutation."""
         if not self._queue:
             return []
         lead = self._queue.popleft()
+        if isinstance(lead, UpdateRequest):
+            ups = [lead]
+            while (self._queue
+                   and isinstance(self._queue[0], UpdateRequest)
+                   and self._queue[0].family == lead.family
+                   and self._queue[0].op == lead.op):
+                ups.append(self._queue.popleft())
+            self._apply_updates(self._families[lead.family], ups)
+            return ups
         batch = [lead]
-        rest: collections.deque[QueryRequest] = collections.deque()
+        rest: collections.deque = collections.deque()
         while self._queue and len(batch) < self.max_batch:
             req = self._queue.popleft()
-            (batch if req.family == lead.family else rest).append(req)
+            if isinstance(req, UpdateRequest) and req.family == lead.family:
+                # fence: no later same-family query may join this batch,
+                # so nothing further can be packed — stop scanning
+                rest.append(req)
+                break
+            if isinstance(req, QueryRequest) and req.family == lead.family:
+                batch.append(req)
+            else:
+                rest.append(req)
         self._queue = rest + self._queue
+        return self._serve_batch(self._families[lead.family], batch)
 
-        fam = self._families[lead.family]
+    def _serve_batch(self, fam: _Family, batch: list) -> list:
         live, inits = [], []
         for r in batch:
+            if r.source in fam.answers:
+                r.result = fam.answers[r.source]
+                r.iters = 0
+                r.done_s = time.perf_counter()
+                self.stats["warm_hits"] += 1
+                self.stats["served"] += 1
+                continue
             try:
                 inits.append(self._init_for(fam, r.source))
                 live.append(r)
@@ -225,15 +326,154 @@ class DatalogServer:
             req.result = y[i]
             req.iters = int(iters[i])
             req.done_s = now
+            self._remember(fam, req.source, y[i])
         self.stats["served"] += len(live)
         self.stats["batches"] += 1
         return batch
 
     def run_until_idle(self) -> int:
-        served = 0
+        done = 0
         while self._queue:
-            served += len(self.step())
-        return served
+            done += len(self.step())
+        return done
+
+    # -- streaming updates ---------------------------------------------------
+
+    def _remember(self, fam: _Family, source: int, y: np.ndarray) -> None:
+        if not self.warm_answers:
+            return
+        if len(fam.answers) >= self.warm_answers:
+            fam.answers.pop(next(iter(fam.answers)))  # FIFO evict
+        fam.answers[source] = y
+
+    def _apply_updates(self, fam: _Family, ups: list) -> None:
+        """Apply a run of same-op updates in one pass: mutate the stored
+        relation + operator, then repair (monotone) or drop (delete) the
+        warm answer cache.  The family's plan, signature, and compiled
+        runners are untouched — within operator capacity not even the
+        staged fixpoint's trace changes."""
+        now = time.perf_counter()
+        try:
+            coords = np.concatenate([u.coords for u in ups])
+            values = None
+            if any(u.values is not None for u in ups):
+                one = np.asarray(
+                    sr_mod.get(self._rel_semiring(fam), lib="np").one)
+                values = np.concatenate(
+                    [u.values if u.values is not None
+                     else np.full(len(u.coords), one) for u in ups])
+            if ups[0].op == "merge":
+                self._merge_edges(fam, coords, values)
+            else:
+                self._delete_edges(fam, coords)
+        except Exception as e:  # a bad update must not kill the queue
+            for u in ups:
+                u.error = f"{type(e).__name__}: {e}"
+                u.done_s = now
+            self.stats["failed"] += len(ups)
+            return
+        for u in ups:
+            u.applied = True
+            u.done_s = time.perf_counter()
+        self.stats["updates"] += len(ups)
+
+    def _rel_semiring(self, fam: _Family) -> str:
+        if fam.edge_rel is not None:
+            return fam.db.schema[fam.edge_rel].semiring
+        vf = fam.plan.strata[0].vf
+        return (fam.edges.semiring
+                if isinstance(fam.edges, SparseRelation) else vf.semiring)
+
+    def _operator_delta(self, fam: _Family, coords, values
+                        ) -> SparseRelation:
+        """The update batch as a sparse Δ in the operator's own space:
+        re-oriented from stored-relation order when needed, values cast
+        into the vector equation's semiring."""
+        vf = fam.plan.strata[0].vf
+        rel_sr = self._rel_semiring(fam)
+        delta = SparseRelation.from_coo(
+            coords,
+            np.ones(len(coords), sr_mod.get(rel_sr, lib="np").dtype)
+            * sr_mod.get(rel_sr, lib="np").one
+            if values is None else values,
+            (fam.n, fam.n), rel_sr)
+        if fam.edge_rel is not None:
+            a = vectorize.edge_atom(vf)
+            if tuple(a.args) != vf.edge.head:
+                delta = delta.transpose()
+        return vectorize._sparse_into_semiring(delta, vf.semiring)
+
+    def _merge_edges(self, fam: _Family, coords, values) -> None:
+        from repro.incremental import DeltaEntry, delta_restart_fixpoint
+        delta_op = self._operator_delta(fam, coords, values)
+        dh = delta_op.as_np()
+        k = int(dh.nnz)
+        if fam.edge_rel is not None:
+            ent = [DeltaEntry(fam.edge_rel, coords, values, "merge")]
+            fam.db = fam.db.apply_delta(ent)
+            fam.host_db = fam.host_db.apply_delta(ent)
+        if isinstance(fam.edges, SparseRelation):
+            fam.edges = fam.edges.apply_delta(dh.coords[:k], dh.values[:k])
+        else:  # dense operator: ⊕-scatter in place
+            idx = tuple(np.asarray(dh.coords[:k]).T)
+            fam.edges = sr_mod.scatter_op(
+                delta_op.semiring,
+                jnp.asarray(fam.edges).at[idx])(jnp.asarray(dh.values[:k]),
+                                                mode="drop")
+        if fam.init_reads_edges:
+            # the merge also changed the init term: memoized init vectors
+            # are stale and a Δ-seeded repair would miss the init
+            # contribution — recompute cold (correctness over warmth)
+            fam.init_cache.clear()
+            self.stats["answers_dropped"] += len(fam.answers)
+            fam.answers.clear()
+            return
+        if not fam.answers:
+            return
+        if not isinstance(fam.edges, SparseRelation):
+            # no sparse Δ-seed path for a dense operator — recompute cold
+            self.stats["answers_dropped"] += len(fam.answers)
+            fam.answers.clear()
+            return
+        # one batched delta-restart pass repairs every warm answer:
+        # bucketed to a power of two with inert 0̄ rows, one SpMM per
+        # round (DESIGN.md §5)
+        sources = list(fam.answers)
+        sr = sr_mod.get(fam.plan.strata[0].vf.semiring, lib="np")
+        bb = _bucket(len(sources), 1 << 30)
+        prev = np.full((bb, fam.n), sr.zero, sr.dtype)
+        for i, s in enumerate(sources):
+            prev[i] = fam.answers[s]
+        y, _ = delta_restart_fixpoint(fam.edges, delta_op, prev,
+                                      max_iters=fam.max_iters, mode="jit")
+        y = np.asarray(y)
+        for i, s in enumerate(sources):
+            fam.answers[s] = y[i]
+        self.stats["answers_repaired"] += len(sources)
+
+    def _delete_edges(self, fam: _Family, coords) -> None:
+        from repro.incremental import DeltaEntry
+        if fam.edge_rel is not None:
+            ent = [DeltaEntry(fam.edge_rel, coords, None, "delete")]
+            fam.db = fam.db.apply_delta(ent)
+            fam.host_db = fam.host_db.apply_delta(ent)
+            fam.edges = planner.materialize_edges(fam.plan, fam.db,
+                                                  fam.hints)
+        elif isinstance(fam.edges, SparseRelation):
+            delta_op = self._operator_delta(fam, coords, None)
+            dh = delta_op.as_np()
+            fam.edges = fam.edges.delete_keys(dh.coords[:int(dh.nnz)])
+        else:
+            vf = fam.plan.strata[0].vf
+            sr = sr_mod.get(vf.semiring)
+            idx = tuple(np.asarray(np.atleast_2d(coords)).T)
+            fam.edges = jnp.asarray(fam.edges).at[idx].set(sr.zero)
+        # deletion is non-monotone: warm answers may over-derive — drop
+        # them (the plan and compiled runners survive untouched)
+        if fam.init_reads_edges:
+            fam.init_cache.clear()
+        self.stats["answers_dropped"] += len(fam.answers)
+        fam.answers.clear()
 
     # -- internals ----------------------------------------------------------
 

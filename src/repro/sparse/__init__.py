@@ -11,10 +11,10 @@ from repro.sparse.adaptive import (DENSIFY_ABOVE, SPARSIFY_BELOW,
                                    adapt_value, density)
 from repro.sparse.contract import mspm, spmm, spmspm, spmv, vspm
 from repro.sparse.coo import SparseRelation
-from repro.sparse.fixpoint import sparse_seminaive_fixpoint
+from repro.sparse.fixpoint import resume_fixpoint, sparse_seminaive_fixpoint
 
 __all__ = [
     "SparseRelation", "spmv", "vspm", "spmm", "mspm", "spmspm",
-    "sparse_seminaive_fixpoint", "density", "adapt_value",
-    "SPARSIFY_BELOW", "DENSIFY_ABOVE",
+    "sparse_seminaive_fixpoint", "resume_fixpoint", "density",
+    "adapt_value", "SPARSIFY_BELOW", "DENSIFY_ABOVE",
 ]

@@ -174,6 +174,93 @@ class SparseRelation:
         return cls.from_coo(coords, values, host.shape, semiring,
                             capacity=capacity, lib=lib)
 
+    # -- streaming updates -------------------------------------------------
+    def apply_delta(self, coords, values=None) -> "SparseRelation":
+        """⊕-merge a batch of tuple updates (host-side, O(nnz(Δ))).
+
+        Appends the delta rows into the padding slots when they fit
+        (capacity, and therefore every staged consumer's trace, is
+        unchanged — the compile caches keep hitting); beyond capacity the
+        buffers are re-padded at the next power-of-two capacity ≥ the new
+        live count (amortized-O(1) doubling, one retrace per doubling).
+
+        Appended duplicates of live keys are *not* coalesced: every
+        consumer (``to_dense`` scatter, segment-reduce contraction) is
+        ⊕-combining, and ⊗ distributes over ⊕, so an appended row is
+        exactly the ⊕-merge ``E′ = E ⊕ Δ``.  For trop/minplus that makes
+        a weight decrease a plain append; a weight *increase* cannot be
+        expressed this way (⊕ = min absorbs it) — that is the
+        non-monotone case callers must route to a rebuild.
+
+        ``values=None`` fills 1̄ per tuple (bool edge insertions).
+        """
+        sr = sr_mod.get(self.semiring, lib="np")
+        coords = np.asarray(coords, np.int64).reshape(-1, self.arity)
+        if values is None:
+            values = np.full(len(coords), sr.one, sr.dtype)
+        values = np.asarray(values, sr.dtype).reshape(-1)
+        assert len(coords) == len(values), (coords.shape, values.shape)
+        if np.any(coords < 0) or np.any(coords >= np.asarray(self.shape)):
+            raise ValueError("delta coordinates out of range for shape "
+                             f"{self.shape}")
+        # explicit 0̄ rows are ⊕-identities — drop them up front
+        live = values if self.semiring == "bool" else values != sr.zero
+        coords, values = coords[live], values[live]
+        host = self.as_np()
+        k, d = int(host.nnz), len(values)
+        if d == 0:
+            return self
+        need = k + d
+        if need <= self.capacity:
+            new_coords = host.coords.copy()
+            new_values = host.values.copy()
+            new_coords[k:need] = coords
+            new_values[k:need] = values
+            out = SparseRelation(new_coords, new_values,
+                                 np.asarray(need, np.int32), self.shape,
+                                 self.semiring)
+        else:
+            # doubling re-pad: a plain prefix-preserving copy, *not* a
+            # from_coo re-coalesce — appended duplicates are ⊕-merged by
+            # every consumer, and an O(nnz log nnz) re-sort here would
+            # make a one-edge update cost as much as a rebuild
+            cap = max(1, self.capacity)
+            while cap < need:
+                cap <<= 1
+            pad = cap - need
+            sentinel = np.tile(np.asarray(self.shape, np.int64), (pad, 1))
+            new_coords = np.concatenate(
+                [host.coords[:k], coords, sentinel]).astype(np.int32)
+            new_values = np.concatenate(
+                [host.values[:k], values,
+                 np.full(pad, sr.zero, sr.dtype)])
+            out = SparseRelation(new_coords, new_values,
+                                 np.asarray(need, np.int32), self.shape,
+                                 self.semiring)
+        out = out if self.lib == "np" else out.as_jnp()
+        if self.arity == 2:
+            # extend any cached host CSR adjacency with an O(nnz(Δ))
+            # overlay so warm frontier solves never re-sort (DESIGN.md §5)
+            from repro.sparse import fixpoint as fx
+            fx.register_delta(self, out, coords, values)
+        return out
+
+    def delete_keys(self, coords) -> "SparseRelation":
+        """Remove the given keys entirely (host-side rebuild at the same
+        capacity).  Deletion is *not* a ⊕-merge — it is the non-monotone
+        mutation; callers owning warm fixpoint state must recompute from
+        scratch afterwards (see :mod:`repro.incremental`)."""
+        coords = np.asarray(coords, np.int64).reshape(-1, self.arity)
+        host = self.as_np()
+        k = int(host.nnz)
+        gone = {tuple(c) for c in coords.tolist()}
+        keep = np.array([tuple(c) not in gone
+                         for c in host.coords[:k].tolist()], bool)
+        out = SparseRelation.from_coo(
+            host.coords[:k][keep], host.values[:k][keep], self.shape,
+            self.semiring, capacity=self.capacity, lib="np")
+        return out if self.lib == "np" else out.as_jnp()
+
     def union(self, other: "SparseRelation", *,
               capacity: int | None = None) -> "SparseRelation":
         """⊕-merge two sparse relations (host-side, coalescing)."""

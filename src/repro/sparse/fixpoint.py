@@ -39,6 +39,7 @@ inert — the serve loop uses them as batch padding.
 from __future__ import annotations
 
 import dataclasses
+import weakref
 
 import jax
 import jax.numpy as jnp
@@ -89,7 +90,26 @@ def sparse_seminaive_fixpoint_stats(edges: SparseRelation, init, *,
     return _dispatch(edges, init, max_iters=max_iters, mode=mode)
 
 
-def _dispatch(edges, init, *, max_iters, mode):
+def resume_fixpoint(edges: SparseRelation, y0, d0, *,
+                    max_iters: int = 10_000, mode: str = "auto"):
+    """Re-converge ``x = init ⊕ x ⊗ E`` from a warm ``(y0, d0)`` pair.
+
+    The GSN loop body is *identical* to :func:`sparse_seminaive_fixpoint`
+    — only the carry's starting point differs: ``y0`` is a known
+    pre-fixpoint (``y0 ≤ F(y0)``) and ``d0 = F(y0) ⊖ y0`` its pending
+    delta.  Delta-restart maintenance (:mod:`repro.incremental`,
+    DESIGN.md §5) seeds ``d0`` from only the touched edges, so the
+    re-convergence explores just the affected region instead of the whole
+    key space.  ``y0`` may be ``(B, n)`` for a batched repair (one SpMM
+    per round, per-row convergence).
+
+    Returns ``(x*, iters)``; ``iters`` counts only the *resumed* rounds.
+    """
+    return _dispatch(edges, None, max_iters=max_iters, mode=mode,
+                     warm=(y0, d0))[:2]
+
+
+def _dispatch(edges, init, *, max_iters, mode, warm=None):
     if edges.arity != 2 or edges.shape[0] != edges.shape[1]:
         raise ValueError(f"recursive expansion needs a square binary edge "
                          f"relation, got shape {edges.shape}")
@@ -99,20 +119,26 @@ def _dispatch(edges, init, *, max_iters, mode):
                          "GSN needs an idempotent complete lattice")
     if mode == "auto":
         mode = "frontier" if jax.default_backend() == "cpu" else "jit"
-    batched = np.ndim(init) == 2
+    batched = np.ndim(init if warm is None else warm[0]) == 2
     if mode == "jit":
+        jw = None if warm is None else (jnp.asarray(warm[0]),
+                                        jnp.asarray(warm[1]))
         if batched:
-            y, iters = _batched_jit_fixpoint(edges.as_jnp(),
-                                             jnp.asarray(init), sr,
-                                             max_iters)
+            y, iters = _batched_jit_fixpoint(
+                edges.as_jnp(),
+                None if init is None else jnp.asarray(init), sr,
+                max_iters, warm=jw)
         else:
-            y, iters = _jit_fixpoint(edges.as_jnp(), jnp.asarray(init),
-                                     sr, max_iters)
+            y, iters = _jit_fixpoint(
+                edges.as_jnp(),
+                None if init is None else jnp.asarray(init), sr,
+                max_iters, warm=jw)
         return y, iters, None
     if mode == "frontier":
         if batched:
-            return _batched_frontier_fixpoint(edges, init, max_iters)
-        return _frontier_fixpoint(edges, init, max_iters)
+            return _batched_frontier_fixpoint(edges, init, max_iters,
+                                              warm=warm)
+        return _frontier_fixpoint(edges, init, max_iters, warm=warm)
     raise ValueError(f"unknown mode {mode!r}")
 
 
@@ -121,9 +147,15 @@ def _dispatch(edges, init, *, max_iters, mode):
 # --------------------------------------------------------------------------
 
 
-def _jit_fixpoint(edges: SparseRelation, init, sr, max_iters: int):
-    x0 = jnp.full_like(init, sr.zero)
-    d0 = sr.minus(sr.add(init, contract.vspm(x0, edges)), x0)
+def _jit_fixpoint(edges: SparseRelation, init, sr, max_iters: int, *,
+                  warm=None):
+    if warm is None:
+        x0 = jnp.full_like(init, sr.zero)
+        d0 = sr.minus(sr.add(init, contract.vspm(x0, edges)), x0)
+    else:
+        x0, d0 = warm
+
+    live0 = jnp.asarray(True) if warm is None else jnp.any(d0 != sr.zero)
 
     def cond(carry):
         y, d, changed, it = carry
@@ -136,27 +168,37 @@ def _jit_fixpoint(edges: SparseRelation, init, sr, max_iters: int):
         return y_new, d_new, jnp.any(d_new != sr.zero), it + 1
 
     y, _, _, iters = jax.lax.while_loop(
-        cond, body, (x0, d0, jnp.asarray(True), jnp.asarray(0)))
+        cond, body, (x0, d0, live0, jnp.asarray(0)))
     return y, iters
 
 
-def _batched_jit_fixpoint(edges: SparseRelation, init, sr, max_iters: int):
+def _batched_jit_fixpoint(edges: SparseRelation, init, sr, max_iters: int,
+                          *, warm=None):
     """All B sources in one ``lax.while_loop``: SpMM frontier advance,
     per-row convergence masks, per-row iteration counts.
 
     The carry lives in the (n, B) layout so every gather/scatter moves a
     contiguous B-wide row per edge (contract.spmm); the batch axis is
     annotated with the ``query_batch`` logical axis so an active mesh
-    shards it across devices (no-op otherwise).
+    shards it across devices (no-op otherwise).  ``warm`` is an optional
+    ``(y0, d0)`` pair of (B, n) arrays for delta-restart repair.
     """
     from repro.distributed import sharding as sh
 
-    b = init.shape[0]
-    x0 = jnp.full(init.shape[::-1], sr.zero, sr.dtype)        # (n, B)
-    i_nb = sh.constrain(jnp.asarray(init).T, ("vertex", "query_batch"))
-    d0 = sr.minus(sr.add(i_nb, contract.spmm(edges, x0, transpose=True)),
-                  x0)
-    live0 = jnp.ones((b,), bool)
+    if warm is None:
+        b = init.shape[0]
+        x0 = jnp.full(init.shape[::-1], sr.zero, sr.dtype)    # (n, B)
+        i_nb = sh.constrain(jnp.asarray(init).T,
+                            ("vertex", "query_batch"))
+        d0 = sr.minus(sr.add(i_nb,
+                             contract.spmm(edges, x0, transpose=True)),
+                      x0)
+    else:
+        b = warm[0].shape[0]
+        x0 = sh.constrain(warm[0].T, ("vertex", "query_batch"))
+        d0 = sh.constrain(warm[1].T, ("vertex", "query_batch"))
+    live0 = (jnp.ones((b,), bool) if warm is None
+             else jnp.any(d0 != sr.zero, axis=0))
 
     def cond(carry):
         y, d, live, it_rows, it = carry
@@ -182,9 +224,98 @@ def _batched_jit_fixpoint(edges: SparseRelation, init, sr, max_iters: int):
 # --------------------------------------------------------------------------
 # Host path: true sparse worklist over a CSR view of the edges
 # --------------------------------------------------------------------------
+#
+# The CSR adjacency is cached per coords buffer (weakref-evicted, like the
+# planner's fingerprint tokens) and — the incremental-maintenance piece,
+# DESIGN.md §5 — ``SparseRelation.apply_delta`` *extends* the parent's
+# index with an O(nnz(Δ)) unsorted overlay instead of re-sorting, so under
+# streaming updates the per-update index work is proportional to the
+# delta.  Overlays are compacted into the sorted base once they exceed a
+# quarter of it (the child is simply left unregistered, so its next
+# frontier solve rebuilds — classic LSM-style amortization).
 
 
-def _batched_frontier_fixpoint(edges, init, max_iters):
+@dataclasses.dataclass
+class _CsrIndex:
+    """Sorted CSR base + unsorted appended overlay of one edge relation."""
+
+    counts: np.ndarray   # (n,) out-degrees of the sorted base
+    starts: np.ndarray   # (n,) row starts into src/dst/w
+    src: np.ndarray
+    dst: np.ndarray
+    w: np.ndarray
+    xsrc: np.ndarray     # overlay rows (appended by apply_delta)
+    xdst: np.ndarray
+    xw: np.ndarray
+
+
+_CSR_CACHE: dict[tuple[int, int], tuple[object, object, _CsrIndex]] = {}
+_EMPTY = np.zeros(0, np.int64)
+
+
+def _csr_lookup(rel: SparseRelation) -> _CsrIndex | None:
+    # keyed on BOTH buffers: transposes share values and semiring casts
+    # share coords — either alone would alias distinct relations
+    ent = _CSR_CACHE.get((id(rel.coords), id(rel.values)))
+    if ent is not None and ent[0]() is rel.coords \
+            and ent[1]() is rel.values:
+        return ent[2]
+    return None
+
+
+def _csr_store(rel: SparseRelation, idx: _CsrIndex) -> None:
+    key = (id(rel.coords), id(rel.values))
+
+    def _evict(ref, k=key):
+        cur = _CSR_CACHE.get(k)
+        if cur is not None and ref in (cur[0], cur[1]):
+            _CSR_CACHE.pop(k, None)
+
+    try:
+        _CSR_CACHE[key] = (weakref.ref(rel.coords, _evict),
+                           weakref.ref(rel.values, _evict), idx)
+    except TypeError:  # pragma: no cover — all our buffers are weakrefable
+        pass
+
+
+def csr_index(edges: SparseRelation) -> _CsrIndex:
+    """The (cached) host CSR adjacency of a binary sparse relation."""
+    idx = _csr_lookup(edges)
+    if idx is None:
+        eh = edges.as_np()
+        k = int(eh.nnz)
+        src = eh.coords[:k, 0].astype(np.int64)
+        dst = eh.coords[:k, 1].astype(np.int64)
+        w = eh.values[:k]
+        order = np.argsort(src, kind="stable")
+        src, dst, w = src[order], dst[order], w[order]
+        counts = np.bincount(src, minlength=edges.shape[0])
+        starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        idx = _CsrIndex(counts, starts, src, dst, w,
+                        _EMPTY, _EMPTY, w[:0])
+        _csr_store(edges, idx)
+    return idx
+
+
+def register_delta(parent: SparseRelation, child: SparseRelation,
+                   coords: np.ndarray, values: np.ndarray) -> None:
+    """``child = parent ⊕ appended rows``: give the child the parent's
+    cached CSR plus an O(nnz(Δ)) overlay (no-op when the parent was
+    never indexed, or when the grown overlay warrants a compaction)."""
+    pidx = _csr_lookup(parent)
+    if pidx is None:
+        return
+    xsrc = np.concatenate([pidx.xsrc, coords[:, 0].astype(np.int64)])
+    if len(xsrc) > max(1024, len(pidx.src) // 4):
+        return  # compaction point: child rebuilds a sorted base on use
+    xdst = np.concatenate([pidx.xdst, coords[:, 1].astype(np.int64)])
+    xw = np.concatenate([pidx.xw, values])
+    _csr_store(child,
+               _CsrIndex(pidx.counts, pidx.starts, pidx.src, pidx.dst,
+                         pidx.w, xsrc, xdst, xw))
+
+
+def _batched_frontier_fixpoint(edges, init, max_iters, *, warm=None):
     """Host worklist mode for a (B, n) init: one worklist per source.
 
     The frontier representation is inherently per-source (each row has
@@ -193,32 +324,34 @@ def _batched_frontier_fixpoint(edges, init, max_iters):
     vector, and the per-source FrontierStats list.
     """
     ys, iters, stats = [], [], []
-    for row in np.asarray(init):
-        y, it, st = _frontier_fixpoint(edges, row, max_iters)
+    rows = (np.asarray(init) if warm is None
+            else zip(np.asarray(warm[0]), np.asarray(warm[1])))
+    for row in rows:
+        y, it, st = _frontier_fixpoint(
+            edges, None if warm is not None else row, max_iters,
+            warm=row if warm is not None else None)
         ys.append(y)
         iters.append(it)
         stats.append(st)
     return jnp.stack(ys), np.asarray(iters, np.int32), stats
 
 
-def _frontier_fixpoint(edges: SparseRelation, init, max_iters: int):
+def _frontier_fixpoint(edges: SparseRelation, init, max_iters: int, *,
+                       warm=None):
     sr = sr_mod.get(edges.semiring, lib="np")
-    eh = edges.as_np()
-    k = int(eh.nnz)
-    src = eh.coords[:k, 0].astype(np.int64)
-    dst = eh.coords[:k, 1].astype(np.int64)
-    w = eh.values[:k]
-    n_src, n_out = edges.shape
-    # CSR by source vertex
-    order = np.argsort(src, kind="stable")
-    src, dst, w = src[order], dst[order], w[order]
-    counts = np.bincount(src, minlength=n_src)
-    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    idx = csr_index(edges)
+    counts, starts = idx.counts, idx.starts
+    dst, w = idx.dst, idx.w
+    n_out = edges.shape[1]
 
     zero = np.asarray(sr.zero, sr.dtype)
-    x0 = np.full(n_out, sr.zero, sr.dtype)
-    y = x0.copy()
-    d = sr.minus(np.asarray(init, sr.dtype), x0)  # δ of the constant term
+    if warm is None:
+        x0 = np.full(n_out, sr.zero, sr.dtype)
+        y = x0.copy()
+        d = sr.minus(np.asarray(init, sr.dtype), x0)  # δ of constant term
+    else:
+        y = np.asarray(warm[0], sr.dtype).copy()
+        d = np.asarray(warm[1], sr.dtype)
 
     stats = FrontierStats([], [])
     iters = 0
@@ -230,19 +363,25 @@ def _frontier_fixpoint(edges: SparseRelation, init, max_iters: int):
         # δF(Δ): expand only the frontier's adjacency rows
         deg = counts[frontier]
         rep = np.repeat(np.arange(len(frontier)), deg)
+        derived = np.full(n_out, sr.zero, sr.dtype)
         if len(rep):
             run_off = np.arange(len(rep)) - np.repeat(
                 np.concatenate([[0], np.cumsum(deg)[:-1]]), deg)
             esel = starts[frontier[rep]] + run_off
             cand_dst = dst[esel]
             cand_val = sr.mul(dvals[rep], w[esel])
-            derived = np.full(n_out, sr.zero, sr.dtype)
             _combine_at(sr.name, derived, cand_dst, cand_val)
-        else:
-            derived = np.full(n_out, sr.zero, sr.dtype)
+        expanded = len(rep)
+        if len(idx.xsrc):
+            # the unsorted apply_delta overlay: scan is O(nnz(Δ)) / round
+            m = live[idx.xsrc]
+            if m.any():
+                _combine_at(sr.name, derived, idx.xdst[m],
+                            sr.mul(d[idx.xsrc[m]], idx.xw[m]))
+                expanded += int(m.sum())
         d = sr.minus(derived, y)               # Δ ← δF(Δ) ⊖ (Y ⊕ Δ)
         stats.frontier_sizes.append(int(len(frontier)))
-        stats.edges_expanded.append(int(len(rep)))
+        stats.edges_expanded.append(expanded)
         live = d != zero if sr.name != "bool" else d
         iters += 1
     return jnp.asarray(y), iters, stats

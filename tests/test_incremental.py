@@ -1,0 +1,348 @@
+"""Incremental fixpoint maintenance (DESIGN.md §5): delta-restart must
+agree *exactly* with from-scratch recomputation — across semirings,
+single vs batched deltas, the capacity-doubling re-pad path, and the
+planner-routed ``refresh_program`` policy layer (which must fall back to
+a full recompute, with a reason, whenever warm restart would be
+unsound)."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from helpers import given, settings, strategies as st
+
+from repro.core import engine, planner
+from repro.core.program import run_program
+from repro.datalog import datasets, programs
+from repro.incremental import (DeltaLog, delta_restart_fixpoint,
+                               refresh_program)
+from repro.sparse import SparseRelation, sparse_seminaive_fixpoint
+from repro.sparse.fixpoint import csr_index
+
+
+def _rand_rel(rng, n, avg_deg, semiring, *, capacity=None):
+    g = datasets.erdos_renyi(n, avg_deg, seed=int(rng.integers(1 << 30)),
+                             weighted=semiring != "bool", wmax=6)
+    return g.sparse_adjacency(semiring=semiring, capacity=capacity)
+
+
+def _rand_delta(rng, n, k, semiring):
+    coords = np.stack([rng.integers(0, n, k), rng.integers(0, n, k)], 1)
+    values = (np.ones(k, bool) if semiring == "bool"
+              else rng.integers(1, 6, k).astype(np.float32))
+    return coords, values
+
+
+def _trop_init(n, s):
+    init = np.full(n, np.inf, np.float32)
+    init[s] = 0.0
+    return init
+
+
+def _bool_init(n, s):
+    init = np.zeros(n, bool)
+    init[s] = True
+    return init
+
+
+# --------------------------------------------------------------------------
+# Randomized differential: delta-restart ≡ from-scratch
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("semiring", ["bool", "trop"])
+@pytest.mark.parametrize("mode", ["frontier", "jit"])
+@settings(max_examples=8, deadline=None)
+@given(data=st.data())
+def test_delta_restart_matches_scratch(semiring, mode, data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 10_000)))
+    n = data.draw(st.integers(10, 40))
+    k = data.draw(st.integers(1, 12))
+    rel = _rand_rel(rng, n, 2.0, semiring)
+    init = (_bool_init if semiring == "bool" else _trop_init)(
+        n, int(rng.integers(0, n)))
+    y0, _ = sparse_seminaive_fixpoint(rel, init, mode=mode)
+
+    coords, values = _rand_delta(rng, n, k, semiring)
+    delta = SparseRelation.from_coo(coords, values, rel.shape, semiring,
+                                    lib="np")
+    rel2 = rel.apply_delta(coords, values)
+    y_warm, _ = delta_restart_fixpoint(rel2, delta, np.asarray(y0),
+                                       mode=mode)
+    y_cold, _ = sparse_seminaive_fixpoint(rel2, init, mode=mode)
+    assert np.array_equal(np.asarray(y_warm), np.asarray(y_cold))
+
+
+@pytest.mark.parametrize("semiring", ["bool", "trop"])
+@settings(max_examples=6, deadline=None)
+@given(data=st.data())
+def test_batched_delta_repair_matches_scratch(semiring, data):
+    """(B, n) warm state repaired in one SpMM pass ≡ B from-scratch
+    solves on the mutated graph."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 10_000)))
+    n = data.draw(st.integers(12, 32))
+    b = data.draw(st.integers(2, 5))
+    rel = _rand_rel(rng, n, 2.0, semiring)
+    mk = _bool_init if semiring == "bool" else _trop_init
+    inits = np.stack([mk(n, int(rng.integers(0, n))) for _ in range(b)])
+    y0, _ = sparse_seminaive_fixpoint(rel, inits, mode="jit")
+
+    coords, values = _rand_delta(rng, n, 4, semiring)
+    delta = SparseRelation.from_coo(coords, values, rel.shape, semiring,
+                                    lib="np")
+    rel2 = rel.apply_delta(coords, values)
+    y_warm, _ = delta_restart_fixpoint(rel2, delta, np.asarray(y0),
+                                       mode="jit")
+    y_cold, _ = sparse_seminaive_fixpoint(rel2, inits, mode="jit")
+    assert np.array_equal(np.asarray(y_warm), np.asarray(y_cold))
+
+
+@settings(max_examples=6, deadline=None)
+@given(data=st.data())
+def test_capacity_doubling_repad_path(data):
+    """Deltas bigger than the padded slack re-pad at the doubled
+    capacity — same answers, prefix-preserving layout, and the CSR
+    overlay stays consistent with a cold rebuild."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 10_000)))
+    n = data.draw(st.integers(10, 24))
+    rel = _rand_rel(rng, n, 1.5, "trop")        # capacity == nnz: 0 slack
+    cap0 = rel.capacity
+    k = cap0 + data.draw(st.integers(1, 8))     # guaranteed overflow
+    coords, values = _rand_delta(rng, n, k, "trop")
+    rel2 = rel.apply_delta(coords, values)
+    assert rel2.capacity > cap0
+    assert rel2.capacity >= int(np.asarray(rel2.nnz))
+
+    # dense semantics: ⊕-merge of the delta into the old relation
+    sr_zero = np.float32(np.inf)
+    want = np.asarray(rel.to_dense()).copy()
+    np.minimum.at(want, tuple(coords.T), values)
+    assert np.array_equal(np.asarray(rel2.to_dense()),
+                          np.where(want == sr_zero, sr_zero, want))
+
+    init = _trop_init(n, int(rng.integers(0, n)))
+    y0, _ = sparse_seminaive_fixpoint(rel, init, mode="frontier")
+    delta = SparseRelation.from_coo(coords, values, rel.shape, "trop",
+                                    lib="np")
+    y_warm, _ = delta_restart_fixpoint(rel2, delta, np.asarray(y0),
+                                       mode="frontier")
+    y_cold, _ = sparse_seminaive_fixpoint(rel2, init, mode="frontier")
+    assert np.array_equal(np.asarray(y_warm), np.asarray(y_cold))
+
+
+def test_csr_overlay_chain_and_compaction():
+    """A chain of apply_delta calls keeps the frontier runner exact, both
+    below the overlay-compaction threshold (index extended in O(nnz(Δ)))
+    and above it (child deliberately left unregistered → rebuilt)."""
+    rng = np.random.default_rng(7)
+    n = 30
+    rel = _rand_rel(rng, n, 2.0, "bool")
+    csr_index(rel)                       # warm the cached base index
+    init = _bool_init(n, 3)
+    cur = rel
+    for step in range(3):                # small deltas: overlay extension
+        coords, values = _rand_delta(rng, n, 5, "bool")
+        cur = cur.apply_delta(coords, values)
+        y, _ = sparse_seminaive_fixpoint(cur, init, mode="frontier")
+        cold = SparseRelation.from_dense(np.asarray(cur.to_dense()),
+                                         "bool")
+        y_cold, _ = sparse_seminaive_fixpoint(cold, init, mode="frontier")
+        assert np.array_equal(np.asarray(y), np.asarray(y_cold)), step
+
+    # past the compaction threshold (>1024 overlay rows on a tiny base)
+    coords, values = _rand_delta(rng, n, 1500, "bool")
+    big = cur.apply_delta(coords, values)
+    y, _ = sparse_seminaive_fixpoint(big, init, mode="frontier")
+    cold = SparseRelation.from_dense(np.asarray(big.to_dense()), "bool")
+    y_cold, _ = sparse_seminaive_fixpoint(cold, init, mode="frontier")
+    assert np.array_equal(np.asarray(y), np.asarray(y_cold))
+
+
+# --------------------------------------------------------------------------
+# apply_delta semantics
+# --------------------------------------------------------------------------
+
+
+def test_trop_weight_decrease_and_absorbed_increase():
+    rel = SparseRelation.from_coo([[0, 1]], [4.0], (3, 3), "trop",
+                                  capacity=4)
+    dec = rel.apply_delta([[0, 1]], [2.0])    # decrease: min absorbs old
+    assert np.asarray(dec.to_dense())[0, 1] == 2.0
+    inc = rel.apply_delta([[0, 1]], [9.0])    # increase: ⊕-merge no-op
+    assert np.asarray(inc.to_dense())[0, 1] == 4.0
+
+
+def test_apply_delta_validates_and_drops_zeros():
+    rel = SparseRelation.from_coo([[0, 1]], [True], (3, 3), "bool",
+                                  capacity=4)
+    with pytest.raises(ValueError, match="out of range"):
+        rel.apply_delta([[0, 3]])
+    same = rel.apply_delta([[1, 2]], [False])  # explicit 0̄: identity
+    assert int(np.asarray(same.nnz)) == 1
+
+
+def test_database_apply_delta_dense_and_sparse():
+    schema = programs.bm(a=0).original.schema
+    g = datasets.erdos_renyi(12, 1.5, seed=0)
+    dbs = engine.Database(schema, {"id": 12},
+                          {"E": g.sparse_adjacency(),
+                           "V": jnp.ones((12,), bool)})
+    dbd = dbs.with_storage("E", "dense")
+    log = DeltaLog().insert("E", [[2, 7], [7, 11]])
+    for db in (dbs, dbd):
+        out = db.apply_delta(log)
+        dense = np.asarray(out.relations["E"] if db is dbd
+                           else out.relations["E"].to_dense())
+        assert dense[2, 7] and dense[7, 11]
+    gone = dbs.apply_delta(DeltaLog().insert("E", [[2, 7]])) \
+        .apply_delta(DeltaLog().delete("E", [[2, 7]]))
+    assert not np.asarray(gone.relations["E"].to_dense())[2, 7]
+
+
+# --------------------------------------------------------------------------
+# refresh_program: the planner-routed policy layer
+# --------------------------------------------------------------------------
+
+
+def _bm_setup(n=40, seed=2):
+    g = datasets.erdos_renyi(n, 1.5, seed=seed)
+    db = engine.Database(programs.bm(a=0).original.schema, {"id": n},
+                         {"E": g.sparse_adjacency(),
+                          "V": jnp.ones((n,), bool)})
+    return programs.bm(a=0).optimized, db
+
+
+@settings(max_examples=6, deadline=None)
+@given(data=st.data())
+def test_refresh_program_differential_bool(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 10_000)))
+    prog, db = _bm_setup(seed=int(rng.integers(1 << 20)))
+    prev, _ = run_program(prog, db)
+    coords, _ = _rand_delta(rng, 40, int(rng.integers(1, 6)), "bool")
+    log = DeltaLog().insert("E", coords)
+    y, db2, rep = refresh_program(prog, db, np.asarray(prev), log)
+    scratch, _ = run_program(prog, db2)
+    assert np.array_equal(np.asarray(y), np.asarray(scratch))
+    assert rep.strategy == "delta_restart"
+
+
+def test_refresh_program_nat_falls_back_full_and_exact():
+    """ℕ (counting) has no ⊖ — delta-restart is infeasible; refresh must
+    fall back to a full recompute and still be exact."""
+    b = programs.mlm()
+    g = datasets.random_recursive_tree(14, seed=3)
+    db = b.make_db(g)
+    db = db.with_relations(
+        {"E": SparseRelation.from_dense(np.asarray(db.relations["E"]),
+                                        "bool", capacity=64)})
+    prev, _ = run_program(b.optimized, db)
+    log = DeltaLog().insert("E", [[0, 9]])
+    y, db2, rep = refresh_program(b.optimized, db, np.asarray(prev), log)
+    scratch, _ = run_program(b.optimized, db2)
+    assert np.array_equal(np.asarray(y), np.asarray(scratch))
+    assert rep.strategy == "full"
+
+
+def _edge_init_prog(a=0):
+    """Q(y) := E(a, y) ⊕ ⊕_z Q(z) ⊗ E(z, y) — the init term reads the
+    edge relation itself, so a ⊕-merge into E changes *both* the linear
+    operator and the init vector."""
+    from repro.core import ir
+    from repro.core.program import Program, Rule, Stratum
+
+    schema = programs.bm(a=0).original.schema
+    body = ir.SSP(("y",), (
+        ir.Term((ir.RelAtom("E", (ir.C(a), "y")),), ()),
+        ir.Term((ir.RelAtom("Q", ("z",)), ir.RelAtom("E", ("z", "y"))),
+                ("z",))), "bool")
+    return Program("edge_init", schema,
+                   [Stratum({"Q": Rule("Q", body)})],
+                   [Rule("Qans", ir.SSP(("y",), (ir.Term(
+                       (ir.RelAtom("Q", ("y",)),), ()),), "bool"))])
+
+
+def test_refresh_edge_fed_init_falls_back_full():
+    """A merge into an edge relation that also feeds the init term must
+    NOT delta-restart: the Δ-seed (y* ⊗ ΔE) ⊖ y* misses the init
+    contribution entirely (here y* is all-0̄, so the seed derives
+    nothing while the true answer becomes non-empty)."""
+    n = 4
+    db = engine.Database(programs.bm(a=0).original.schema, {"id": n},
+                         {"E": SparseRelation.from_coo(
+                             [[1, 2]], [True], (n, n), "bool",
+                             capacity=8),
+                          "V": jnp.ones((n,), bool)})
+    prog = _edge_init_prog(a=0)
+    prev, _ = run_program(prog, db)
+    assert not np.asarray(prev).any()
+    log = DeltaLog().insert("E", [[0, 1]])
+    y, db2, rep = refresh_program(prog, db, np.asarray(prev), log)
+    scratch, _ = run_program(prog, db2)
+    assert np.array_equal(np.asarray(y), np.asarray(scratch))
+    assert np.asarray(y).any()
+    assert rep.strategy == "full" and "feeds the init term" in rep.reason
+
+
+def test_refresh_fallback_reasons():
+    prog, db = _bm_setup()
+    prev, _ = run_program(prog, db)
+    prev = np.asarray(prev)
+
+    _, _, rep = refresh_program(prog, db, prev,
+                                DeltaLog().delete("E", [[0, 1]]))
+    assert rep.strategy == "full" and "non-monotone" in rep.reason
+
+    _, _, rep = refresh_program(prog, db, None,
+                                DeltaLog().insert("E", [[0, 1]]))
+    assert rep.strategy == "full" and "no previous solution" in rep.reason
+
+    log = DeltaLog().insert("E", [[0, 1]]).insert("V", [[2]])
+    _, _, rep = refresh_program(prog, db, prev, log)
+    assert rep.strategy == "full" and "outside the linear" in rep.reason
+
+
+# --------------------------------------------------------------------------
+# Planner: the objective="incremental" candidate
+# --------------------------------------------------------------------------
+
+
+def test_planner_incremental_candidate():
+    prog, db = _bm_setup(n=200, seed=5)
+    plan = planner.plan_program(prog, db, objective="incremental",
+                                delta_nnz=2)
+    sp = plan.strata[0]
+    assert sp.runner == "delta_restart"
+    assert "delta_restart" in sp.considered
+    assert sp.considered["delta_restart"].total < min(
+        v.total for k, v in sp.considered.items() if k != "delta_restart")
+    assert "warm restart" in planner.explain(plan)
+
+
+def test_planner_incremental_requires_delta():
+    prog, db = _bm_setup()
+    plan = planner.plan_program(prog, db, objective="incremental")
+    sp = plan.strata[0]
+    assert sp.runner != "delta_restart"
+    assert "no update delta" in sp.rejected["delta_restart"]
+
+
+def test_planner_latency_never_offers_delta_restart():
+    prog, db = _bm_setup()
+    plan = planner.plan_program(prog, db, delta_nnz=3)  # objective=latency
+    sp = plan.strata[0]
+    assert "delta_restart" not in sp.considered
+    assert "delta_restart" not in sp.rejected
+
+
+def test_delta_restart_cannot_be_forced_or_executed_cold():
+    prog, db = _bm_setup()
+    with pytest.raises(ValueError, match="cannot be forced"):
+        planner.plan_program(prog, db, mode="delta_restart")
+    plan = planner.plan_program(prog, db, objective="incremental",
+                                delta_nnz=1)
+    with pytest.raises(ValueError, match="refresh_program"):
+        planner.execute_plan(plan, prog, db)

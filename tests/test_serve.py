@@ -8,7 +8,7 @@ import pytest
 
 import jax.numpy as jnp
 
-from repro.core import engine, vectorize
+from repro.core import engine, ir, vectorize
 from repro.core.program import run_program
 from repro.datalog import datasets, programs
 from repro.launch.datalog_serve import (DatalogServer, fgh_make_program,
@@ -57,9 +57,14 @@ def test_served_answers_match_engine(sparse):
 
 
 def test_compile_cache_reuse_and_buckets():
-    """Same B-bucket → cache hit; new bucket → exactly one new entry."""
+    """Same B-bucket → cache hit; new bucket → exactly one new entry.
+
+    The warm answer cache is disabled: this test re-serves the same
+    sources to count *compile*-cache traffic, which warm hits would
+    short-circuit before the compiled runner is even looked up.
+    """
     _, db = _bm_db()
-    server = DatalogServer(max_batch=8)
+    server = DatalogServer(max_batch=8, warm_answers=0)
     server.register("reach", lambda a: programs.bm(a=a).optimized, db)
     for s in range(8):
         server.submit("reach", s)
@@ -263,6 +268,203 @@ def test_vector_form_rejects_non_vector_programs():
     ws = programs.ws()
     with pytest.raises(ValueError):
         vectorize.vector_form(ws.original)
+
+
+def _bridge_db(n=80):
+    """Two disjoint path components 0..n/2-1 and n/2..n-1 — updates that
+    bridge them make answers change visibly."""
+    h = n // 2
+    edges = np.concatenate(
+        [np.stack([np.arange(0, h - 1), np.arange(1, h)], 1),
+         np.stack([np.arange(h, n - 1), np.arange(h + 1, n)], 1)])
+    g = datasets.Graph(n, edges)
+    db = engine.Database(programs.bm(a=0).original.schema, {"id": n},
+                         {"E": g.sparse_adjacency(),
+                          "V": jnp.ones((n,), bool)})
+    return db, h
+
+
+def test_update_acknowledged_before_later_queries():
+    """FIFO through the shared queue: a query submitted after an update
+    must never be served from the pre-update graph — even when it could
+    have been packed into the same batch as a pre-update query, and even
+    when the answer comes from the warm cache (which the update must
+    repair, not leak stale)."""
+    db, h = _bridge_db()
+    server = DatalogServer(max_batch=8)
+    server.register("reach", lambda a: programs.bm(a=a).optimized, db)
+    q1 = server.submit("reach", 0)
+    u = server.submit_update("reach", [[10, h]])
+    q2 = server.submit("reach", 0)
+    server.run_until_idle()
+    assert not q1.result[h:].any(), "q1 predates the update"
+    assert u.applied and u.latency_s >= 0
+    assert q2.result[h:].all(), "q2 was served a pre-update answer"
+
+    db2 = db.with_relations(
+        {"E": db.relations["E"].apply_delta([[10, h]])})
+    assert np.array_equal(q2.result, _expected_bm(db2, 0))
+    # q1 was cached cold, the update repaired it, q2 warm-hit the repair
+    assert server.stats["warm_hits"] == 1
+    assert server.stats["answers_repaired"] == 1
+
+
+def test_update_compile_cache_survives_mutations():
+    """Mutations must not re-plan or re-lower: the compiled-runner cache
+    sees zero new misses across updates — including one that overflows
+    the COO capacity and re-pads at doubled capacity."""
+    db, h = _bridge_db()
+    server = DatalogServer(max_batch=4, warm_answers=0)
+    fam = server.register("reach", lambda a: programs.bm(a=a).optimized,
+                          db)
+    sig0 = fam.plan.signature
+    for s in (0, 1, 2, 3):
+        server.submit("reach", s)
+    server.run_until_idle()
+    misses0 = server.stats["cache_misses"]
+
+    cap = fam.edges.capacity
+    server.submit_update("reach", [[10, h]])
+    server.run_until_idle()
+    rng = np.random.default_rng(0)
+    big = np.stack([rng.integers(0, 80, cap + 8),
+                    rng.integers(0, 80, cap + 8)], 1)
+    server.submit_update("reach", big)         # forces capacity doubling
+    for s in (0, 1, 2, 3):
+        server.submit("reach", s)
+    server.run_until_idle()
+    assert fam.edges.capacity > cap
+    assert fam.plan.signature == sig0
+    assert server.stats["cache_misses"] == misses0, \
+        "an update re-lowered the staged fixpoint"
+    assert server.stats["updates"] == 2
+
+    db2 = db.with_relations({"E": db.relations["E"]
+                             .apply_delta([[10, h]]).apply_delta(big)})
+    q = server.submit("reach", 0)
+    server.run_until_idle()
+    assert np.array_equal(q.result, _expected_bm(db2, 0))
+
+
+def test_warm_answers_repaired_in_one_pass():
+    """Several cached sources; one update repairs them all in a single
+    batched delta-restart; every repaired answer is exact."""
+    db, h = _bridge_db()
+    server = DatalogServer(max_batch=8)
+    server.register("reach", lambda a: programs.bm(a=a).optimized, db)
+    sources = (0, 3, 9, 11)
+    for s in sources:
+        server.submit("reach", s)
+    server.run_until_idle()
+    server.submit_update("reach", [[10, h], [h + 3, 2]])
+    server.run_until_idle()
+    assert server.stats["answers_repaired"] == len(sources)
+
+    db2 = db.with_relations(
+        {"E": db.relations["E"].apply_delta([[10, h], [h + 3, 2]])})
+    reqs = [server.submit("reach", s) for s in sources]
+    hits0 = server.stats["warm_hits"]
+    server.run_until_idle()
+    assert server.stats["warm_hits"] == hits0 + len(sources)
+    for req in reqs:
+        assert np.array_equal(req.result, _expected_bm(db2, req.source)), \
+            req.source
+
+
+def test_delete_update_drops_warm_answers_but_serves_fresh():
+    db, h = _bridge_db()
+    server = DatalogServer(max_batch=4)
+    server.register("reach", lambda a: programs.bm(a=a).optimized, db)
+    server.submit("reach", 0)
+    server.submit_update("reach", [[10, h]])
+    server.run_until_idle()
+    u = server.submit_update("reach", [[10, h]], op="delete")
+    q = server.submit("reach", 0)
+    server.run_until_idle()
+    assert u.applied
+    assert server.stats["answers_dropped"] >= 1
+    assert not q.result[h:].any()
+    assert np.array_equal(q.result, _expected_bm(db, 0))
+
+
+def test_update_weighted_override_family():
+    """Updates against an edges=-override family (weighted SSSP COO):
+    a monotone weight decrease repairs the warm distances exactly."""
+    b = programs.sssp(a=0, wmax=6, dmax=48)
+    g = datasets.erdos_renyi(60, 2.5, seed=11, weighted=True, wmax=6)
+    db = b.make_db(g)
+    rel = g.sparse_adjacency(semiring="trop")
+    server = DatalogServer(max_batch=4)
+    server.register("sssp",
+                    lambda a: programs.sssp(a=a, wmax=6, dmax=48).optimized,
+                    db, edges=rel)
+    q0 = server.submit("sssp", 0)
+    server.run_until_idle()
+    u = server.submit_update("sssp", [[0, 42]], [1.0])
+    q1 = server.submit("sssp", 0)
+    server.run_until_idle()
+    assert u.applied and server.stats["answers_repaired"] == 1
+    assert q1.result[42] == 1.0
+    # reference: single-source run over the updated override operator
+    from repro.sparse import sparse_seminaive_fixpoint
+    init = np.full(60, np.inf, np.float32)
+    init[0] = 0.0
+    y_ref, _ = sparse_seminaive_fixpoint(rel.apply_delta([[0, 42]], [1.0]),
+                                         init, mode="frontier")
+    assert np.array_equal(q1.result, np.asarray(y_ref))
+    assert (q0.result[42] >= q1.result[42]).all()
+
+
+def test_update_edge_fed_init_family_recomputes_cold():
+    """A family whose init term reads the edge relation cannot have its
+    warm answers repaired (the Δ-seed misses the init change) nor its
+    memoized init vectors kept — updates must drop both and later
+    queries recompute cold, exactly."""
+    from repro.core.program import Program, Rule, Stratum
+
+    n = 6
+    schema = programs.bm(a=0).original.schema
+
+    def make_program(a):
+        body = ir.SSP(("y",), (
+            ir.Term((ir.RelAtom("E", (ir.C(a), "y")),), ()),
+            ir.Term((ir.RelAtom("Q", ("z",)), ir.RelAtom("E", ("z", "y"))),
+                    ("z",))), "bool")
+        return Program("edge_init", schema,
+                       [Stratum({"Q": Rule("Q", body)})],
+                       [Rule("Qans", ir.SSP(("y",), (ir.Term(
+                           (ir.RelAtom("Q", ("y",)),), ()),), "bool"))])
+
+    db = engine.Database(schema, {"id": n},
+                         {"E": SparseRelation.from_coo(
+                             [[1, 2]], [True], (n, n), "bool", capacity=8),
+                          "V": jnp.ones((n,), bool)})
+    server = DatalogServer(max_batch=4)
+    fam = server.register("ei", make_program, db)
+    assert fam.init_reads_edges
+    q0 = server.submit("ei", 0)
+    server.run_until_idle()
+    assert not q0.result.any()          # nothing reachable from 0 yet
+    server.submit_update("ei", [[0, 1]])
+    q1 = server.submit("ei", 0)
+    server.run_until_idle()
+    assert server.stats["answers_repaired"] == 0
+    assert server.stats["answers_dropped"] == 1
+    db2 = db.with_relations({"E": db.relations["E"]
+                             .apply_delta([[0, 1]])})
+    expect, _ = run_program(make_program(0), db2)
+    assert np.asarray(expect).any()
+    assert np.array_equal(q1.result, np.asarray(expect))
+
+
+def test_update_unknown_family_or_op_rejected():
+    server = DatalogServer()
+    with pytest.raises(KeyError, match="unknown family"):
+        server.submit_update("nope", [[0, 1]])
+    db, _ = _bridge_db()
+    server.register("reach", lambda a: programs.bm(a=a).optimized, db)
+    with pytest.raises(ValueError, match="unknown update op"):
+        server.submit_update("reach", [[0, 1]], op="upsert")
 
 
 def test_edge_operator_sparse_fast_path_matches_dense():
