@@ -12,15 +12,27 @@
 #                      (CI gate; exits 1 below the ≥10× update-to-answer
 #                      speedup, on answer divergence, or when the planner
 #                      fails to pick delta_restart; BENCH_incremental.json)
+#   make test-dist   — the sharded suite on 8 simulated host devices
+#                      (DESIGN.md §6; CI job test-distributed)
+#   make bench-sharded — graph-axis sharded fixpoint acceptance on 8
+#                      simulated devices (CI gate; exits 1 on
+#                      sharded/single-device divergence or when the
+#                      planner skips sparse_sharded; BENCH_sharded.json)
+#   make bench-check — regression gate: fresh BENCH_*.json vs the
+#                      committed baselines (exits 1 on >25% regression)
 
 PY      ?= python
 PYPATH  := src
+DIST_FLAGS := --xla_force_host_platform_device_count=8
 
 test:
 	PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q
 
 test-all:
 	PYTHONPATH=$(PYPATH) $(PY) -m pytest -q -m "slow or not slow" --durations=20
+
+test-dist:
+	XLA_FLAGS=$(DIST_FLAGS) PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q tests/test_sharded.py
 
 lint:
 	@if command -v ruff >/dev/null 2>&1; then \
@@ -30,7 +42,7 @@ lint:
 	fi
 
 bench-smoke:
-	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --quick --only sparse,serve,kernel,plan,incremental
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --quick --only sparse,serve,kernel,plan,incremental,sharded
 
 bench-sparse:
 	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.sparse_scaling
@@ -44,5 +56,11 @@ bench-plan:
 bench-incremental:
 	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.incremental_update
 
-.PHONY: test test-all lint bench-smoke bench-sparse bench-serve \
-	bench-plan bench-incremental
+bench-sharded:
+	XLA_FLAGS=$(DIST_FLAGS) PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.sharded_scaling
+
+bench-check:
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.check_regression
+
+.PHONY: test test-all test-dist lint bench-smoke bench-sparse \
+	bench-serve bench-plan bench-incremental bench-sharded bench-check

@@ -1,0 +1,160 @@
+"""Benchmark regression gate: freshly produced ``BENCH_*.json`` vs the
+committed baselines.
+
+The CI bench job used to only *upload* the reports — a 10× throughput
+regression sailed through green.  This gate walks each fresh report next
+to its committed baseline (``git show HEAD:<file>`` by default, or a
+``--baseline-dir`` snapshot) and fails when any matched metric regressed
+by more than ``--threshold`` (default 25 %):
+
+* **lower-is-better** metrics: numeric leaves whose key ends in ``_s``
+  or ``_ms`` or contains ``latency`` (wall times);
+* **higher-is-better** metrics: keys containing ``qps``, ``speedup``,
+  or ``throughput``.
+
+Non-metric leaves (sizes, seeds, iteration counts, booleans, picks) are
+ignored; a metric present on only one side is reported but never fails
+the gate (suites are allowed to grow/shrink rows).  Improvements are
+never gated.
+
+Wall-clock baselines are machine-relative: committing a fresh
+``BENCH_*.json`` *is* the re-baselining act, so when the bench hardware
+changes (or the gate pages on a known-benign shift), regenerate the
+report there and commit it — the unitless ``speedup`` columns carry
+across machines; the ``*_s`` columns deliberately pin the current
+hardware so slow drift on one box cannot hide.
+
+Usage:
+  python -m benchmarks.check_regression                  # all BENCH_*.json
+  python -m benchmarks.check_regression BENCH_serve.json --threshold 0.4
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import pathlib
+import subprocess
+import sys
+
+#: key fragments → metric direction
+LOWER_BETTER = ("latency",)
+LOWER_SUFFIXES = ("_s", "_ms")
+HIGHER_BETTER = ("qps", "speedup", "throughput")
+
+
+def metric_direction(key: str) -> str | None:
+    """"lower" | "higher" | None (not a gated metric)."""
+    k = key.lower()
+    if any(f in k for f in HIGHER_BETTER):
+        return "higher"
+    if any(f in k for f in LOWER_BETTER) or k.endswith(LOWER_SUFFIXES):
+        return "lower"
+    return None
+
+
+def metrics_of(doc, path: str = "") -> dict[str, float]:
+    """Flatten a report to {json-path: value} over gated numeric leaves.
+
+    List elements are keyed by a stable row identity when one exists
+    (``update``/``semiring``/``mode``/``name`` fields) so reordered rows
+    still line up across the two reports.
+    """
+    out: dict[str, float] = {}
+    if isinstance(doc, dict):
+        for k, v in doc.items():
+            if isinstance(v, (dict, list)):
+                out.update(metrics_of(v, f"{path}/{k}"))
+            elif isinstance(v, (int, float)) and not isinstance(v, bool) \
+                    and metric_direction(k):
+                out[f"{path}/{k}"] = float(v)
+    elif isinstance(doc, list):
+        for i, item in enumerate(doc):
+            ident = i
+            if isinstance(item, dict):
+                ident = "|".join(
+                    str(item[f]) for f in ("update", "semiring", "mode",
+                                           "name", "family")
+                    if f in item) or i
+            out.update(metrics_of(item, f"{path}[{ident}]"))
+    return out
+
+
+def baseline_text(name: str, baseline_dir: str | None) -> str | None:
+    if baseline_dir is not None:
+        p = pathlib.Path(baseline_dir) / pathlib.Path(name).name
+        return p.read_text() if p.exists() else None
+    try:
+        return subprocess.run(
+            ["git", "show", f"HEAD:{name}"], capture_output=True,
+            text=True, check=True).stdout
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        return None
+
+
+def check_file(name: str, threshold: float,
+               baseline_dir: str | None) -> list[str]:
+    """Compare one fresh report against its baseline; returns the list
+    of regression messages (empty = pass)."""
+    fresh_path = pathlib.Path(name)
+    if not fresh_path.exists():
+        print(f"{name}: no fresh report (suite not run here) — skipped")
+        return []
+    base_text = baseline_text(name, baseline_dir)
+    if base_text is None:
+        print(f"{name}: no committed baseline — skipped (will gate once "
+              f"committed)")
+        return []
+    fresh = metrics_of(json.loads(fresh_path.read_text()))
+    base = metrics_of(json.loads(base_text))
+    failures = []
+    for key in sorted(base):
+        if key not in fresh:
+            print(f"{name}{key}: dropped from fresh report — not gated")
+            continue
+        b, f = base[key], fresh[key]
+        if b <= 0:
+            continue
+        direction = metric_direction(key.rsplit("/", 1)[-1])
+        ratio = f / b
+        worse = ratio - 1.0 if direction == "lower" else 1.0 - ratio
+        mark = "REGRESSED" if worse > threshold else "ok"
+        print(f"{name}{key}: base={b:.6g} fresh={f:.6g} "
+              f"({'+' if ratio >= 1 else ''}{(ratio - 1) * 100:.1f}%, "
+              f"{direction}-is-better) {mark}")
+        if worse > threshold:
+            failures.append(
+                f"{name}{key}: {b:.6g} → {f:.6g} "
+                f"({worse * 100:.0f}% worse than baseline, "
+                f"threshold {threshold * 100:.0f}%)")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*",
+                    help="fresh reports to gate (default: BENCH_*.json)")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="allowed fractional regression (default 0.25)")
+    ap.add_argument("--baseline-dir", default=None,
+                    help="directory of baseline reports (default: the "
+                         "committed versions via `git show HEAD:<file>`)")
+    args = ap.parse_args()
+    files = args.files or sorted(glob.glob("BENCH_*.json"))
+    if not files:
+        print("no BENCH_*.json reports found — nothing to gate")
+        return
+    failures: list[str] = []
+    for name in files:
+        failures += check_file(name, args.threshold, args.baseline_dir)
+    if failures:
+        print("\nbenchmark regression gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        sys.exit(1)
+    print(f"\nregression gate passed for {len(files)} report(s)")
+
+
+if __name__ == "__main__":
+    main()

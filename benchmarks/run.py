@@ -9,7 +9,10 @@
   serve  — batched multi-source serving throughput (BENCH_serve.json)
   plan   — planner-vs-empirical crossover checks
   incremental — streaming-update maintenance (BENCH_incremental.json)
-  (roofline runs separately on dry-run output: benchmarks/roofline.py)
+  sharded — graph-axis sharded fixpoints (BENCH_sharded.json)
+  (roofline runs separately on dry-run output: benchmarks/roofline.py;
+  regression gating against committed BENCH_*.json baselines:
+  benchmarks/check_regression.py)
 
 Suites are discovered lazily: one suite failing to import (a missing
 optional dependency, e.g. no networkx for the graph generators or a
@@ -23,6 +26,7 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import sys
 import traceback
 
 #: name -> (module, runner attr, default kwargs, quick kwargs)
@@ -43,6 +47,10 @@ SUITES: dict[str, tuple[str, str, dict, dict]] = {
     # ≥10× latency gate: at toy sizes both paths run in ~1 ms of noise
     "incremental": ("benchmarks.incremental_update", "run", {},
                     {"n": 2000, "trials": 1, "out": None, "gate": False}),
+    # graph-axis sharded fixpoints; the planner-pick gate needs ≥ 2
+    # devices (CI: XLA_FLAGS=--xla_force_host_platform_device_count=8)
+    "sharded": ("benchmarks.sharded_scaling", "run", {},
+                {"n": 2000, "out": None}),
 }
 
 
@@ -70,9 +78,15 @@ def run_suite(name: str, overrides: dict | None = None,
     try:
         getattr(mod, attr)(**kwargs)
         return "ok"
-    except Exception as e:  # keep the remaining suites running
+    except KeyboardInterrupt:
+        raise
+    except BaseException as e:  # keep the remaining suites running.
+        # BaseException, not Exception: a suite gate that calls
+        # ``sys.exit(0)`` raises SystemExit, which previously sailed
+        # straight through main() and terminated the whole run with
+        # exit code 0 — a green CI bench job with suites never run.
         traceback.print_exc()
-        print(f"{name},failed,{type(e).__name__}: {e}", flush=True)
+        print(f"{name},FAILED,{type(e).__name__}: {e}", flush=True)
         return "failed"
 
 
@@ -106,7 +120,8 @@ def main() -> None:
               if run_suite(name, overrides.get(name),
                            quick=args.quick) == "failed"]
     if failed:
-        raise SystemExit(f"suites failed: {','.join(failed)}")
+        print(f"FAILED: {','.join(failed)}", file=sys.stderr, flush=True)
+        sys.exit(1)
 
 
 if __name__ == '__main__':

@@ -1,0 +1,198 @@
+"""Graph-axis sharded fixpoint acceptance → ``BENCH_sharded.json``.
+
+The ISSUE-5 acceptance run (DESIGN.md §6): a 100k-vertex power-law
+graph, solved on a D-way ``("graph",)`` mesh of simulated host devices
+(CI: ``XLA_FLAGS=--xla_force_host_platform_device_count=8``) and
+checked three ways:
+
+* **exactness** — the sharded fixpoint must agree bit-for-bit (values
+  *and* per-source iteration counts) with whatever single-device runner
+  the planner picks for the same workload, for the 𝔹 (reachability) and
+  Trop (shortest-distance) lattices, plus a sharded-vs-single-device
+  ℕ∞ contraction probe (ℕ∞ lacks ⊖, so the fixpoint runners are
+  rightly out of its reach — the SpMM exchange itself is what's
+  checked);
+* **planning** — given the mesh, ``plan_program`` must select
+  ``sparse_sharded`` and ``explain()`` must render the partition line;
+* **reporting** — per-mode wall times land in ``BENCH_sharded.json``
+  for the CI regression gate (``benchmarks/check_regression.py``).
+
+Simulated host devices share one physical CPU, so no wall-clock speedup
+is gated — the point is exact distributed semantics plus the planner's
+device-dimension routing; real scaling comes with real devices.
+
+Usage:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m benchmarks.sharded_scaling
+  PYTHONPATH=src python -m benchmarks.sharded_scaling --n 2000
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+
+def _ensure_devices(d: int) -> None:
+    """Best-effort: force ``d`` simulated host devices when jax has not
+    been initialized yet (the Makefile/CI set XLA_FLAGS explicitly)."""
+    if "jax" not in sys.modules:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count={d}"
+            ).strip()
+
+
+def run(n: int = 100_000, seed: int = 1, source: int = 0,
+        out: str | None = "BENCH_sharded.json", iters: int = 2,
+        gate: bool | None = None):
+    import jax
+    import numpy as np
+
+    from benchmarks.common import emit, timeit
+    from repro.core import engine, planner
+    from repro.datalog import datasets, programs
+    from repro.distributed import datalog as dd
+    from repro.launch.mesh import make_graph_mesh
+    from repro.sparse import contract
+    from repro.sparse.fixpoint import sparse_seminaive_fixpoint
+
+    ndev = len(jax.devices())
+    d = 1
+    while d * 2 <= ndev:
+        d *= 2
+    if gate is None:
+        gate = d >= 2
+    mesh = make_graph_mesh(d)
+    g = datasets.powerlaw(n, 4, seed=seed)
+    rng = np.random.default_rng(seed)
+    g.weights = rng.integers(1, 8, len(g.edges))
+    problems: list[str] = []
+    rows = []
+
+    def check(label, cond, msg):
+        if not cond:
+            problems.append(f"{label}: {msg}")
+
+    # -- bool / trop: full sharded fixpoints vs the planner's own pick ----
+    for semiring in ("bool", "trop"):
+        rel = g.sparse_adjacency(semiring=semiring)
+        nnz = int(np.asarray(rel.as_np().nnz))
+        if semiring == "bool":
+            init = np.zeros(n, bool)
+            init[source] = True
+        else:
+            init = np.full(n, np.inf, np.float32)
+            init[source] = 0.0
+
+        # plan the *matching* workload per semiring: BM reachability over
+        # the stored bool adjacency, SSSP over the weighted COO operator
+        # (its schema-level E3 would be a dense (n, n, w) tensor at this
+        # scale — the edges= override routes the adjacency, exactly as
+        # the serve loop does)
+        if semiring == "bool":
+            b = programs.bm(a=source)
+            db = engine.Database(b.original.schema, {"id": n},
+                                 {"E": g.sparse_adjacency(),
+                                  "V": np.ones((n,), bool)})
+            plan_kwargs = {}
+        else:
+            b = programs.sssp(a=source, wmax=8, dmax=64)
+            db = engine.Database(b.original.schema,
+                                 {"id": n, "w": 8, "d": 64}, {})
+            plan_kwargs = {"edges": rel}
+        plan0 = planner.plan_program(b.optimized, db, **plan_kwargs)
+        pick0 = plan0.strata[0].runner
+        y0, it0 = sparse_seminaive_fixpoint(
+            rel, init,
+            mode="frontier" if pick0 == "sparse_frontier" else "jit")
+        t0 = timeit(lambda: sparse_seminaive_fixpoint(
+            rel, init,
+            mode="frontier" if pick0 == "sparse_frontier" else "jit")[0],
+            iters=iters)
+
+        sharded = dd.shard_relation(rel, mesh)
+        run_fn = jax.jit(lambda e, i: dd.sharded_seminaive_fixpoint(
+            e, i, mesh=mesh))
+        ys, its = run_fn(sharded, init)
+        ts = timeit(lambda: run_fn(sharded, init)[0], iters=iters)
+        exact = bool(np.array_equal(np.asarray(ys), np.asarray(y0))
+                     and int(its) == int(it0))
+        check(semiring, exact,
+              f"sharded D={d} diverged from single-device {pick0}")
+        emit(f"sharded_scaling/{semiring}/n{n}", ts,
+             f"D={d} nnz={nnz} iters={int(its)} single={t0 * 1e3:.1f}ms "
+             f"({pick0}) exact={exact}")
+        rows.append({"semiring": semiring, "mode": "fixpoint", "D": d,
+                     "nnz": nnz, "iters": int(its), "exact": exact,
+                     "t_sharded_s": ts, "t_single_s": t0,
+                     "single_runner": pick0})
+
+        plan_m = planner.plan_program(b.optimized, db, mesh=mesh,
+                                      **plan_kwargs)
+        pick_m = plan_m.strata[0].runner
+        text = planner.explain(plan_m)
+        if gate:
+            check(f"planner/{semiring}", pick_m == "sparse_sharded",
+                  f"picked {pick_m!r} with the mesh attached")
+            check(f"planner/{semiring}",
+                  "partition   graph axis" in text,
+                  "explain() did not render the partition")
+        emit(f"sharded_scaling/planner/{semiring}/n{n}", float("nan"),
+             f"pick={pick_m} D={d}")
+        rows.append({"semiring": semiring, "mode": "planner",
+                     "D": d, "pick": pick_m})
+
+    # -- nat: no ⊖, so no GSN fixpoint — probe the sharded exchange -------
+    reln = g.sparse_adjacency(semiring="nat")
+    x = rng.random(n).astype(np.float32)
+    a = np.asarray(contract.vspm(x, reln.as_jnp()))
+    contract_fn = jax.jit(lambda e, v: dd.sharded_contract(e, v,
+                                                           mesh=mesh))
+    sharded_n = dd.shard_relation(reln, mesh)
+    bshard = np.asarray(contract_fn(sharded_n, x))
+    exact = bool(np.allclose(a, bshard, rtol=1e-6, atol=1e-4))
+    check("nat", exact, "sharded contraction diverged from vspm")
+    tn = timeit(lambda: contract_fn(sharded_n, x), iters=iters)
+    emit(f"sharded_scaling/nat/n{n}", tn, f"D={d} exact={exact}")
+    rows.append({"semiring": "nat", "mode": "contract", "D": d,
+                 "exact": exact, "t_sharded_s": tn})
+
+    result = {"bench": "sharded_scaling", "n": n, "seed": seed, "D": d,
+              "devices": ndev, "gate": gate, "rows": rows}
+    if out:
+        pathlib.Path(out).write_text(json.dumps(result, indent=2) + "\n")
+        print(f"wrote {out}")
+    if problems:
+        raise RuntimeError("sharded_scaling gate failed: "
+                           + "; ".join(problems))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=100_000)
+    ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--devices", type=int, default=8,
+                    help="simulated host devices to request when jax is "
+                         "not yet initialized (CI sets XLA_FLAGS itself)")
+    ap.add_argument("--out", default="BENCH_sharded.json")
+    ap.add_argument("--no-gate", action="store_true",
+                    help="report only; skip the planner-pick gate "
+                         "(exactness is still checked)")
+    args = ap.parse_args()
+    _ensure_devices(args.devices)
+    try:
+        run(n=args.n, seed=args.seed, out=args.out,
+            gate=False if args.no_gate else None)
+    except RuntimeError as e:
+        print(e, file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -58,11 +58,18 @@ from repro.sparse.coo import SparseRelation
 #: is only ever *considered* under ``objective="incremental"`` and is
 #: executed by :func:`repro.incremental.refresh_program`, never by
 #: :func:`execute_plan` (which has no previous solution to restart from).
-RUNNERS = ("delta_restart", "sparse_jit", "sparse_frontier",
-           "vector_dense", "dense_gsn", "dense_naive", "dense_host")
+RUNNERS = ("delta_restart", "sparse_sharded", "sparse_jit",
+           "sparse_frontier", "vector_dense", "dense_gsn", "dense_naive",
+           "dense_host")
 
-#: runners that execute the vector equation ``x = init ⊕ x ⊗ E``
+#: single-device runners that execute the vector equation
+#: ``x = init ⊕ x ⊗ E``
 VECTOR_RUNNERS = ("sparse_jit", "sparse_frontier", "vector_dense")
+
+#: every vector-equation runner the serve loop can batch — the
+#: single-device three plus the graph-axis sharded SpMM loop
+#: (:mod:`repro.distributed.datalog`, DESIGN.md §6)
+BATCHED_RUNNERS = VECTOR_RUNNERS + ("sparse_sharded",)
 
 #: legacy ``run_program`` mode strings → forced runners; any *other*
 #: unknown string keeps the historical "host loop with stats" behaviour
@@ -178,6 +185,7 @@ class StratumPlan:
     rejected: dict[str, str]
     vf: vectorize.VectorForm | None = None
     edges_override: object | None = None
+    partition: str | None = None   # sparse_sharded: the graph-axis split
 
 
 @dataclasses.dataclass
@@ -192,6 +200,11 @@ class ExecutionPlan:
     outputs: tuple[str, ...]
     has_post: bool
     signature: str
+    #: the graph mesh this plan was priced against — a jax Mesh with a
+    #: "graph" axis (executable), or a plain int D (planning/explain
+    #: only; execution resolves a local mesh of that size).  ``None``
+    #: plans are single-device and identical to the pre-§6 planner.
+    mesh: object | None = None
 
 
 # --------------------------------------------------------------------------
@@ -204,7 +217,8 @@ def plan_program(prog, db: engine.Database, hints=None, *,
                  max_iters: int = 10_000, cost_model: str = "analytic",
                  edges=None, adapt_storage: bool = True,
                  require_vector: bool = False,
-                 delta_nnz: int | None = None) -> ExecutionPlan:
+                 delta_nnz: int | None = None,
+                 mesh=None) -> ExecutionPlan:
     """Choose a physical runner + storage for every stratum of ``prog``.
 
     ``objective`` is "latency" (one query; host frontier worklists are in
@@ -221,10 +235,20 @@ def plan_program(prog, db: engine.Database, hints=None, *,
     raises ``ValueError`` with the recorded rejection reason when
     stratum 0 cannot take a vector runner (the serve loop can only batch
     the vector equation).
+
+    ``mesh`` adds the device dimension (DESIGN.md §6): a jax Mesh with a
+    ``("graph",)`` axis — or a plain int D for planning-only — makes the
+    row-partitioned ``sparse_sharded`` runner a candidate, priced at
+    per-shard nnz work plus the per-iteration frontier all-gather, and
+    rejected with a recorded reason on single-device meshes or dense
+    operators.  ``mesh=None`` plans are byte-identical to before.
     """
     if objective not in ("latency", "throughput", "incremental"):
         raise ValueError(f"unknown objective {objective!r}")
     hints = dict(prog.sort_hints) if hints is None else dict(hints)
+    if mesh is not None:
+        from repro.distributed.datalog import mesh_size
+        mesh_size(mesh)  # validate early: needs a "graph" axis / D ≥ 1
     forced = None
     if mode != "auto":
         forced = mode if mode in RUNNERS else \
@@ -234,6 +258,10 @@ def plan_program(prog, db: engine.Database, hints=None, *,
                 "delta_restart cannot be forced by mode= — it needs a "
                 "previous solution; use objective='incremental' and "
                 "repro.incremental.refresh_program")
+        if forced == "sparse_sharded" and mesh is None:
+            raise ValueError(
+                "sparse_sharded needs a graph mesh — pass mesh= "
+                "(launch.mesh.make_graph_mesh) alongside the forced mode")
     plans = []
     for si, stratum in enumerate(prog.strata):
         plans.append(_plan_stratum(
@@ -242,14 +270,15 @@ def plan_program(prog, db: engine.Database, hints=None, *,
             edges=edges if si == 0 else None,
             adapt_storage=adapt_storage and forced is None,
             max_iters=max_iters,
-            delta_nnz=delta_nnz if si == 0 else None))
+            delta_nnz=delta_nnz if si == 0 else None,
+            mesh=mesh))
     plan = ExecutionPlan(
         prog.name, objective, mode, plans,
         tuple(r.head for r in prog.outputs), prog.post is not None,
-        _plan_signature(prog, db, plans))
+        _plan_signature(prog, db, plans), mesh=mesh)
     if require_vector:
         sp = plan.strata[0] if plan.strata else None
-        if sp is None or sp.runner not in VECTOR_RUNNERS:
+        if sp is None or sp.runner not in BATCHED_RUNNERS:
             why = "program has no fixpoint stratum" if sp is None \
                 else _vector_rejection(sp.rejected)
             raise ValueError(f"{prog.name}: {why}")
@@ -346,7 +375,7 @@ def _term_flops(term: ir.Term, sorts: Mapping[str, str],
 
 def _plan_stratum(prog, stratum, si, db, hints, *, objective, forced,
                   cost_model, edges, adapt_storage, max_iters,
-                  delta_nnz=None) -> StratumPlan:
+                  delta_nnz=None, mesh=None) -> StratumPlan:
     # ``reads`` keeps every referenced relation name — including IDBs of
     # *earlier strata*, which exist only at execution time; the executor
     # fingerprints the input database over the union of all strata's
@@ -357,7 +386,8 @@ def _plan_stratum(prog, stratum, si, db, hints, *, objective, forced,
         # a forced runner needs no candidate enumeration — skip density
         # transfers, sort inference, and vector-form splitting (the CEGIS
         # verifier forces "naive" on every candidate × sample db)
-        return _forced_stratum_plan(prog, stratum, si, forced, reads, edges)
+        return _forced_stratum_plan(prog, stratum, si, forced, reads,
+                                    edges, mesh=mesh)
 
     # -- storage folding (adaptive density thresholds, DESIGN.md §2/§4) ----
     storage: dict[str, str] = {}
@@ -488,6 +518,42 @@ def _plan_stratum(prog, stratum, si, db, hints, *, objective, forced,
             rejected["sparse_jit"] = why
             rejected["sparse_frontier"] = why
 
+    # -- graph-axis sharded candidate (DESIGN.md §6) -----------------------
+    # row-partitioned SpMM under shard_map: per-iteration critical-path
+    # work is the worst shard's O(nnz/D) contraction plus its O(n/D)
+    # carry update.  The frontier exchange (one all-gather of n values
+    # to D-1 peers) is *reported* in bytes_per_iter; selection — like
+    # every candidate here — compares flops only, so attaching a D ≥ 2
+    # graph mesh routes every feasible vector stratum through the
+    # partition (the mesh is an instruction with pricing, not a hint
+    # the model may overrule on communication grounds)
+    partition = None
+    if mesh is not None:
+        if vf is None:
+            rejected["sparse_sharded"] = _vector_rejection(rejected)
+        else:
+            from repro.distributed.datalog import mesh_size
+            d_ax = mesh_size(mesh)
+            nb = -(-n_vec // d_ax)
+            if d_ax < 2:
+                rejected["sparse_sharded"] = (
+                    "graph mesh has a single device — the single-device "
+                    "runners cover it")
+            elif e_nnz is None:
+                rejected["sparse_sharded"] = (
+                    "linear operator materializes dense (no sparse "
+                    "binary EDB fast path)")
+            else:
+                considered["sparse_sharded"] = CostEstimate(
+                    (e_nnz + n_vec) / d_ax,
+                    12.0 * e_nnz / d_ax + 4.0 * n_vec * (d_ax - 1),
+                    trips)
+                partition = (
+                    f"graph axis D={d_ax} × {nb} dst rows/shard; "
+                    f"nnz(E)={int(e_nnz)} "
+                    f"(≈{-(-int(e_nnz) // d_ax)}/shard); "
+                    f"frontier all-gather {4 * n_vec * (d_ax - 1)} B/iter")
+
     # the host worklist only pays off for single-shot latency on a CPU
     # host; batched serving and accelerators want the staged SpMM loop
     frontier_ok = (objective in ("latency", "incremental")
@@ -560,17 +626,19 @@ def _plan_stratum(prog, stratum, si, db, hints, *, objective, forced,
         reason += (f" (warm restart: nnz(Δ)={int(delta_nnz)} seeds the "
                    f"frontier)")
     return StratumPlan(si, tuple(stratum.idbs), runner, reason, storage,
-                       notes, reads, cost, considered, rejected, vf, edges)
+                       notes, reads, cost, considered, rejected, vf, edges,
+                       partition if runner == "sparse_sharded" else None)
 
 
-def _forced_stratum_plan(prog, stratum, si, forced, reads,
-                         edges) -> StratumPlan:
+def _forced_stratum_plan(prog, stratum, si, forced, reads, edges, *,
+                         mesh=None) -> StratumPlan:
     """Legacy-mode plans: the runner is predetermined, storage stays as
     the caller chose it, no candidates are priced.  Infeasibility (e.g.
     forcing GSN on a non-linear stratum) surfaces at execution time with
     the historical error, exactly as the pre-planner code did."""
     vf = None
-    if forced in VECTOR_RUNNERS:
+    partition = None
+    if forced in BATCHED_RUNNERS:
         if len(prog.strata) != 1:
             raise ValueError(
                 f"{prog.name}: cannot force runner {forced!r}: "
@@ -580,6 +648,9 @@ def _forced_stratum_plan(prog, stratum, si, forced, reads,
         except ValueError as e:
             raise ValueError(
                 f"{prog.name}: cannot force runner {forced!r}: {e}")
+        if forced == "sparse_sharded":
+            from repro.distributed.datalog import mesh_size
+            partition = f"graph axis D={mesh_size(mesh)} (forced)"
     elif edges is not None:
         raise ValueError(
             f"{prog.name}: edges override cannot be honored by forced "
@@ -587,7 +658,7 @@ def _forced_stratum_plan(prog, stratum, si, forced, reads,
             f"relations, not the override")
     return StratumPlan(si, tuple(stratum.idbs), forced,
                        f"forced by mode={forced!r}", {}, {}, reads,
-                       None, {}, {}, vf, edges)
+                       None, {}, {}, vf, edges, partition)
 
 
 def _rel_shape(arr):
@@ -632,8 +703,10 @@ def _hlo_costs(considered, prog, stratum, db, hints, vf, edges, trips,
         return CostEstimate(max(c.flops, 1.0), c.bytes, trips, "hlo")
 
     for runner in list(out):
-        if runner == "delta_restart":
-            continue  # no staged step of its own — analytic price stands
+        if runner in ("delta_restart", "sparse_sharded"):
+            # neither has a single-device staged step to walk (the
+            # sharded per-iteration HLO is per-shard) — analytic stands
+            continue
         try:
             out[runner] = price(runner)
         except Exception:  # noqa: BLE001 — keep the analytic estimate
@@ -677,6 +750,8 @@ def explain(plan: ExecutionPlan) -> str:
         lines.append(f"  stratum {sp.index}  runner={sp.runner}  "
                      f"idbs={','.join(sp.idbs)}")
         lines.append(f"    reason      {sp.reason}")
+        if sp.partition is not None:
+            lines.append(f"    partition   {sp.partition}")
         for name in sorted(sp.storage):
             lines.append(f"    storage     {name}: {sp.storage_notes[name]}")
         if sp.cost is not None:
@@ -728,7 +803,8 @@ def execute_plan(plan: ExecutionPlan, prog, db: engine.Database, *,
     for sp, stratum in zip(plan.strata, prog.strata):
         cur_db = _apply_storage(sp, cur_db, cache)
         state, iters = _run_stratum(sp, stratum, prog, cur_db, hints,
-                                    cache, max_iters, base_fp)
+                                    cache, max_iters, base_fp,
+                                    mesh=plan.mesh)
         iters_log.append(int(iters))
         cur_db = cur_db.with_relations(state)
     out = None
@@ -770,8 +846,33 @@ def _materialize_edges(vf, db, hints, *, override=None, densify=False):
     return e
 
 
+def _mesh_key(mesh):
+    """Hashable identity of a (graph) mesh for the staged-runner cache:
+    axis layout plus the concrete device ids (an int-D planning mesh
+    resolves to the local devices at execution)."""
+    from jax.sharding import Mesh
+    if isinstance(mesh, Mesh):
+        return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+                tuple(d.id for d in mesh.devices.flat))
+    return int(mesh)
+
+
+def exec_mesh(plan: ExecutionPlan):
+    """The concrete Mesh a ``sparse_sharded`` plan executes on: the
+    plan's own Mesh, or — when planning used a plain int D — a local
+    graph mesh of that size (needs ≥ D local devices)."""
+    from jax.sharding import Mesh
+    if isinstance(plan.mesh, Mesh):
+        return plan.mesh
+    if plan.mesh is None:
+        raise ValueError(f"{plan.program}: sparse_sharded plan has no "
+                         f"mesh — re-plan with mesh=")
+    from repro.launch.mesh import make_graph_mesh
+    return make_graph_mesh(int(plan.mesh))
+
+
 def _run_stratum(sp, stratum, prog, cur_db, hints, cache, max_iters,
-                 base_fp):
+                 base_fp, *, mesh=None):
     from repro.core import fixpoint
     from repro.core import program as prog_mod
 
@@ -783,10 +884,11 @@ def _run_stratum(sp, stratum, prog, cur_db, hints, cache, max_iters,
     key = (sp.index, sp.runner, max_iters, base_fp,
            tuple(sorted(sp.storage.items())),
            None if sp.edges_override is None
-           else value_fingerprint(sp.edges_override))
+           else value_fingerprint(sp.edges_override),
+           None if mesh is None else _mesh_key(mesh))
     ent = _cache_get(cache, key)
 
-    if sp.runner in VECTOR_RUNNERS:
+    if sp.runner in BATCHED_RUNNERS:
         if ent is None:
             vf = sp.vf
             edges = _materialize_edges(
@@ -808,6 +910,16 @@ def _run_stratum(sp, stratum, prog, cur_db, hints, cache, max_iters,
                 from repro.sparse.fixpoint import sparse_seminaive_fixpoint
                 fn = jax.jit(lambda e, i: sparse_seminaive_fixpoint(
                     e, i, mode="jit", max_iters=max_iters))
+            elif sp.runner == "sparse_sharded":
+                from repro.distributed.datalog import (
+                    shard_relation, sharded_seminaive_fixpoint)
+                from repro.launch.mesh import make_graph_mesh
+                from jax.sharding import Mesh
+                m = mesh if isinstance(mesh, Mesh) else \
+                    make_graph_mesh(int(mesh))
+                edges = shard_relation(edges, m)
+                fn = jax.jit(lambda e, i: sharded_seminaive_fixpoint(
+                    e, i, mesh=m, max_iters=max_iters))
             else:
                 fn = jax.jit(lambda e, i: _dense_vector_fixpoint(
                     e, i, sr, max_iters))
@@ -902,11 +1014,19 @@ def compile_batched(plan: ExecutionPlan, *,
     stratum 0's runner — the serve loop's compiled unit, cached by the
     caller under ``(plan.signature, B-bucket)``."""
     sp = plan.strata[0]
-    if sp.runner not in VECTOR_RUNNERS:
+    if sp.runner not in BATCHED_RUNNERS:
         raise ValueError(f"{plan.program}: runner {sp.runner!r} has no "
                          f"batched form")
     sr = sr_mod.get(sp.vf.semiring)
-    if sp.runner in ("sparse_jit", "sparse_frontier"):
+    if sp.runner == "sparse_sharded":
+        mesh = exec_mesh(plan)
+
+        def run(edges, init):
+            from repro.distributed.datalog import \
+                sharded_seminaive_fixpoint
+            return sharded_seminaive_fixpoint(edges, init, mesh=mesh,
+                                              max_iters=max_iters)
+    elif sp.runner in ("sparse_jit", "sparse_frontier"):
         def run(edges, init):
             from repro.sparse.fixpoint import sparse_seminaive_fixpoint
             return sparse_seminaive_fixpoint(edges, init, mode="jit",

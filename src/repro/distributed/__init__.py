@@ -1,1 +1,12 @@
-"""Distributed runtime: sharding rules, collectives, fault tolerance."""
+"""Distributed runtime: sharding rules, collectives, fault tolerance,
+and graph-axis sharded Datalog fixpoints (DESIGN.md §6)."""
+
+from repro.distributed.datalog import (  # noqa: F401
+    GRAPH_AXIS,
+    ShardedRelation,
+    shard_relation,
+    sharded_contract,
+    sharded_resume_fixpoint,
+    sharded_seminaive_fixpoint,
+    unshard,
+)

@@ -23,9 +23,18 @@ that answers the whole pack in one device program.  The pieces:
   ``sparse_seminaive_fixpoint`` (one ``lax.while_loop`` for all B
   sources, per-row convergence); dense families the
   ``fixpoint.batched_seminaive_fixpoint`` semiring-matmul step.
-* **Sharding** — with a mesh attached, the query-batch axis is laid out
-  across the "data" axis (``launch.rules`` kind "datalog") and the
-  fixpoint's internal constraints keep it there.
+* **Sharding** — with a ``("data",)`` mesh attached, the query-batch
+  axis is laid out across the "data" axis (``launch.rules`` kind
+  "datalog") and the fixpoint's internal constraints keep it there.
+  With a ``("graph",)`` mesh (``launch.mesh.make_graph_mesh``,
+  DESIGN.md §6) the *vertex* axis is partitioned instead: registration
+  plans with ``mesh=`` so the planner can pick the row-partitioned
+  ``sparse_sharded`` runner, the family's operator is kept as a
+  :class:`~repro.distributed.datalog.ShardedRelation`, compiled runners
+  are keyed ``(plan.signature, B-bucket, D)``, and ``submit_update``
+  routes delta rows to their owning destination shards
+  (:meth:`~repro.distributed.datalog.ShardedRelation.apply_delta`) so
+  capacity — and the compiled trace — survives monotone updates.
 * **Streaming updates** (DESIGN.md §5) — :meth:`DatalogServer.
   submit_update` enqueues edge mutations *in the same FIFO queue as
   queries*: a query packed into a batch never jumps ahead of an earlier
@@ -132,6 +141,9 @@ class _Family:
     hints: dict
     n: int
     max_iters: int
+    #: graph-sharded twin of ``edges`` (ShardedRelation) when the plan
+    #: picked the row-partitioned runner; the compiled fixpoint's operand
+    sharded: object | None = None
     edge_rel: str | None = None  # stored relation behind E (None: override)
     init_reads_edges: bool = False  # init term references edge_rel too
     init_cache: dict[int, np.ndarray] = dataclasses.field(
@@ -142,8 +154,8 @@ class _Family:
     @property
     def backend(self) -> str:
         # derived from the plan so it can never disagree with the routing
-        return "sparse" if self.plan.strata[0].runner == "sparse_jit" \
-            else "dense"
+        return "sparse" if self.plan.strata[0].runner in (
+            "sparse_jit", "sparse_sharded") else "dense"
 
 
 def _bucket(b: int, max_batch: int) -> int:
@@ -163,8 +175,15 @@ class DatalogServer:
         self.max_iters = max_iters
         self.mesh = mesh
         self.warm_answers = warm_answers
+        # a ("graph",) mesh partitions the vertex axis (DESIGN.md §6);
+        # any other mesh shards the query-batch axis over "data"
+        self.graph_mesh = (mesh if mesh is not None
+                           and "graph" in mesh.axis_names else None)
+        self.graph_d = (1 if self.graph_mesh is None else
+                        int(self.graph_mesh.shape["graph"]))
         self.rules = (rules_mod.make_rules(mesh, "datalog")
-                      if mesh is not None else None)
+                      if mesh is not None and self.graph_mesh is None
+                      else None)
         self._families: dict[str, _Family] = {}
         self._queue: collections.deque = collections.deque()
         self._compiled: dict[tuple, Callable] = {}
@@ -192,7 +211,8 @@ class DatalogServer:
         hints = dict(template.sort_hints)
         plan = planner.plan_program(
             template, db, hints, objective="throughput", edges=edges,
-            adapt_storage=False, require_vector=True)
+            adapt_storage=False, require_vector=True,
+            mesh=self.graph_mesh)
         edges = planner.materialize_edges(plan, db, hints)
         n = db.dom(plan.strata[0].vf.out_sort)
         # numpy twin of the relations: per-request init evaluation runs
@@ -207,6 +227,9 @@ class DatalogServer:
         host_db = engine.Database(db.schema, db.domains, host_rels)
         fam = _Family(name, make_program, db, host_db, plan, edges, hints,
                       n, self.max_iters)
+        if plan.strata[0].runner == "sparse_sharded":
+            from repro.distributed import datalog as dd
+            fam.sharded = dd.shard_relation(edges, self.graph_mesh)
         if plan.strata[0].edges_override is None:
             a = vectorize.edge_atom(plan.strata[0].vf)
             if a is not None and isinstance(db.relations.get(a.name),
@@ -311,14 +334,18 @@ class DatalogServer:
         self.stats["padded_rows"] += bb - len(live)
 
         run = self._compiled_fixpoint(fam, bb)
-        if self.mesh is not None:
+        operand = fam.sharded if fam.sharded is not None else fam.edges
+        if self.mesh is not None and self.graph_mesh is None:
             with sh.use_rules(self.mesh, self.rules):
                 init_dev = sh.put(jnp.asarray(packed),
                                   ("query_batch", "vertex"))
-                y, iters = run(fam.edges, init_dev)
+                y, iters = run(operand, init_dev)
                 y = np.asarray(jax.device_get(y))
         else:
-            y, iters = run(fam.edges, jnp.asarray(packed))
+            # graph-sharded families lay out their own operands: the
+            # shard_map in/out specs partition the vertex axis and keep
+            # the query batch replicated
+            y, iters = run(operand, jnp.asarray(packed))
             y = np.asarray(y)
         iters = np.asarray(iters)
         now = time.perf_counter()
@@ -414,6 +441,12 @@ class DatalogServer:
             fam.host_db = fam.host_db.apply_delta(ent)
         if isinstance(fam.edges, SparseRelation):
             fam.edges = fam.edges.apply_delta(dh.coords[:k], dh.values[:k])
+            if fam.sharded is not None:
+                # route the same rows to their owning destination shards
+                # — per-shard capacity usually holds, so the compiled
+                # sharded fixpoint's trace (and cache entry) survives
+                fam.sharded = fam.sharded.apply_delta(dh.coords[:k],
+                                                      dh.values[:k])
         else:  # dense operator: ⊕-scatter in place
             idx = tuple(np.asarray(dh.coords[:k]).T)
             fam.edges = sr_mod.scatter_op(
@@ -444,8 +477,20 @@ class DatalogServer:
         prev = np.full((bb, fam.n), sr.zero, sr.dtype)
         for i, s in enumerate(sources):
             prev[i] = fam.answers[s]
-        y, _ = delta_restart_fixpoint(fam.edges, delta_op, prev,
-                                      max_iters=fam.max_iters, mode="jit")
+        if fam.sharded is not None:
+            # sharded warm repair: the O(nnz(Δ)) seed is derived on the
+            # host, then the graph-axis resume loop re-converges every
+            # row — same loop body as cold sharded serving
+            from repro.distributed import datalog as dd
+            from repro.incremental import delta_seed
+            d0 = delta_seed(delta_op, prev, backend="np")
+            y, _ = dd.sharded_resume_fixpoint(
+                fam.sharded, prev, d0, mesh=self.graph_mesh,
+                max_iters=fam.max_iters)
+        else:
+            y, _ = delta_restart_fixpoint(fam.edges, delta_op, prev,
+                                          max_iters=fam.max_iters,
+                                          mode="jit")
         y = np.asarray(y)
         for i, s in enumerate(sources):
             fam.answers[s] = y[i]
@@ -468,6 +513,11 @@ class DatalogServer:
             sr = sr_mod.get(vf.semiring)
             idx = tuple(np.asarray(np.atleast_2d(coords)).T)
             fam.edges = jnp.asarray(fam.edges).at[idx].set(sr.zero)
+        if fam.sharded is not None:
+            # a deletion rebuilt the operator — re-partition it (the
+            # compiled sharded runners survive unless capacity moved)
+            from repro.distributed import datalog as dd
+            fam.sharded = dd.shard_relation(fam.edges, self.graph_mesh)
         # deletion is non-monotone: warm answers may over-derive — drop
         # them (the plan and compiled runners survive untouched)
         if fam.init_reads_edges:
@@ -494,7 +544,7 @@ class DatalogServer:
         return init
 
     def _compiled_fixpoint(self, fam: _Family, bb: int) -> Callable:
-        key = (fam.plan.signature, bb)
+        key = (fam.plan.signature, bb, self.graph_d)
         if key in self._compiled:
             self.stats["cache_hits"] += 1
             return self._compiled[key]

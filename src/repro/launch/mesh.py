@@ -21,6 +21,25 @@ def make_host_mesh(model: int = 1):
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
+def make_graph_mesh(d: int | None = None):
+    """1-D ``("graph",)`` mesh for vertex-partitioned Datalog fixpoints
+    (DESIGN.md §6).
+
+    Each of the ``d`` devices (default: all local devices) owns an
+    ``n/d`` destination-row block of the fixpoint state and the COO
+    edge tuples landing there (:mod:`repro.distributed.datalog`).  On a
+    CPU host, simulate devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
+    n = len(jax.devices())
+    d = n if d is None else d
+    if d > n:
+        raise ValueError(f"graph mesh needs {d} devices, have {n} "
+                         f"(set XLA_FLAGS="
+                         f"--xla_force_host_platform_device_count={d})")
+    return jax.make_mesh((d,), ("graph",), devices=jax.devices()[:d])
+
+
 def make_datalog_mesh(data: int | None = None):
     """1-D data mesh for batched query serving (DESIGN.md §3).
 
