@@ -34,9 +34,21 @@ test-all:
 test-dist:
 	XLA_FLAGS=$(DIST_FLAGS) PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q tests/test_sharded.py
 
+# Format-check only files changed since origin/main (or HEAD~1): the
+# tree predates ruff-format, so a blanket --check fails on files the
+# change never touched — same scoping as the CI lint job.
 lint:
 	@if command -v ruff >/dev/null 2>&1; then \
-		ruff check . && ruff format --check .; \
+		ruff check . || exit 1; \
+		BASE=$$(git merge-base origin/main HEAD 2>/dev/null \
+			|| git rev-parse HEAD~1 2>/dev/null \
+			|| git rev-parse HEAD); \
+		CHANGED=$$(git diff --name-only --diff-filter=ACMR "$$BASE" -- '*.py'); \
+		if [ -z "$$CHANGED" ]; then \
+			echo "no Python files changed — format check skipped"; \
+		else \
+			echo "$$CHANGED" | xargs ruff format --check; \
+		fi; \
 	else \
 		echo "ruff not installed; skipping lint"; \
 	fi

@@ -8,9 +8,17 @@ to its committed baseline (``git show HEAD:<file>`` by default, or a
 by more than ``--threshold`` (default 25 %):
 
 * **lower-is-better** metrics: numeric leaves whose key ends in ``_s``
-  or ``_ms`` or contains ``latency`` (wall times);
+  or ``_ms`` or contains ``latency`` or a tail percentile (``p50``/
+  ``p95``/``p99``);
 * **higher-is-better** metrics: keys containing ``qps``, ``speedup``,
   or ``throughput``.
+
+Thresholds are per-metric: ``--metric-threshold fragment=value``
+(repeatable) overrides the global ``--threshold`` for any metric whose
+key contains the fragment — the longest matching fragment wins.  Tail
+percentiles default to a looser 50 % bound (they are order statistics
+of a handful of requests, far noisier than a mean), overridable the
+same way (``--metric-threshold p99=0.3``).
 
 Non-metric leaves (sizes, seeds, iteration counts, booleans, picks) are
 ignored; a metric present on only one side is reported but never fails
@@ -39,9 +47,14 @@ import subprocess
 import sys
 
 #: key fragments → metric direction
-LOWER_BETTER = ("latency",)
+LOWER_BETTER = ("latency", "p50", "p95", "p99")
 LOWER_SUFFIXES = ("_s", "_ms")
 HIGHER_BETTER = ("qps", "speedup", "throughput")
+
+#: per-fragment default thresholds (overridable via --metric-threshold);
+#: tail percentiles are order statistics over a few hundred requests —
+#: far noisier run-to-run than means, so they get a looser gate
+DEFAULT_METRIC_THRESHOLDS = {"p50": 0.5, "p95": 0.5, "p99": 0.5}
 
 
 def metric_direction(key: str) -> str | None:
@@ -93,10 +106,24 @@ def baseline_text(name: str, baseline_dir: str | None) -> str | None:
         return None
 
 
-def check_file(name: str, threshold: float,
-               baseline_dir: str | None) -> list[str]:
+def threshold_for(key: str, default: float,
+                  per_metric: dict[str, float]) -> float:
+    """The gate for one metric: the longest ``per_metric`` fragment
+    contained in the key wins; otherwise the global default."""
+    k = key.lower()
+    best = None
+    for frag, th in per_metric.items():
+        if frag in k and (best is None or len(frag) > len(best)):
+            best, out = frag, th
+    return out if best is not None else default
+
+
+def check_file(name: str, threshold: float, baseline_dir: str | None,
+               per_metric: dict[str, float] | None = None) -> list[str]:
     """Compare one fresh report against its baseline; returns the list
     of regression messages (empty = pass)."""
+    per_metric = dict(DEFAULT_METRIC_THRESHOLDS,
+                      **(per_metric or {}))
     fresh_path = pathlib.Path(name)
     if not fresh_path.exists():
         print(f"{name}: no fresh report (suite not run here) — skipped")
@@ -117,17 +144,18 @@ def check_file(name: str, threshold: float,
         if b <= 0:
             continue
         direction = metric_direction(key.rsplit("/", 1)[-1])
+        gate = threshold_for(key, threshold, per_metric)
         ratio = f / b
         worse = ratio - 1.0 if direction == "lower" else 1.0 - ratio
-        mark = "REGRESSED" if worse > threshold else "ok"
+        mark = "REGRESSED" if worse > gate else "ok"
         print(f"{name}{key}: base={b:.6g} fresh={f:.6g} "
               f"({'+' if ratio >= 1 else ''}{(ratio - 1) * 100:.1f}%, "
-              f"{direction}-is-better) {mark}")
-        if worse > threshold:
+              f"{direction}-is-better, gate {gate * 100:.0f}%) {mark}")
+        if worse > gate:
             failures.append(
                 f"{name}{key}: {b:.6g} → {f:.6g} "
                 f"({worse * 100:.0f}% worse than baseline, "
-                f"threshold {threshold * 100:.0f}%)")
+                f"threshold {gate * 100:.0f}%)")
     return failures
 
 
@@ -140,14 +168,26 @@ def main() -> None:
     ap.add_argument("--baseline-dir", default=None,
                     help="directory of baseline reports (default: the "
                          "committed versions via `git show HEAD:<file>`)")
+    ap.add_argument("--metric-threshold", action="append", default=[],
+                    metavar="FRAGMENT=VALUE",
+                    help="per-metric override, e.g. p99=0.3 (repeatable; "
+                         "longest matching fragment wins)")
     args = ap.parse_args()
+    per_metric = {}
+    for spec in args.metric_threshold:
+        frag, _, val = spec.partition("=")
+        if not frag or not val:
+            ap.error(f"--metric-threshold needs FRAGMENT=VALUE, "
+                     f"got {spec!r}")
+        per_metric[frag.lower()] = float(val)
     files = args.files or sorted(glob.glob("BENCH_*.json"))
     if not files:
         print("no BENCH_*.json reports found — nothing to gate")
         return
     failures: list[str] = []
     for name in files:
-        failures += check_file(name, args.threshold, args.baseline_dir)
+        failures += check_file(name, args.threshold, args.baseline_dir,
+                               per_metric)
     if failures:
         print("\nbenchmark regression gate FAILED:", file=sys.stderr)
         for f in failures:

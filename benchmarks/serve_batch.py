@@ -1,22 +1,28 @@
-"""Batched multi-source serving throughput → ``BENCH_serve.json``.
+"""Serving throughput and tail latency → ``BENCH_serve.json``.
 
-Single-source reachability (the FGH-optimized BM program) served from a
-power-law graph two ways, at increasing batch sizes B:
+Two sections:
 
-* ``loop``    — the pre-PR-2 shape: a Python loop of B single-source
-  jitted GSN fixpoints (each O(nnz)/iteration SpMV);
-* ``batched`` — the serve loop (`launch.datalog_serve`): pack B sources
-  into one (B, n) frontier, advance them in a single ``lax.while_loop``
-  whose step is one SpMM, answer all B at once.
+**Closed-loop** (the original ISSUE 2 acceptance): single-source
+reachability (the FGH-optimized BM program) on a power-law graph, served
+at increasing batch sizes B by a Python loop of single-source jitted GSN
+fixpoints (``loop``) vs the packed-FIFO serve loop (``batched``,
+`launch.datalog_serve`).  At B=64 on 50k vertices the batched path must
+reach ≥ 5× the loop's queries/sec; at B=1 the latency route must keep
+the server at least at loop parity (it was 0.81× before ISSUE 6).
 
-Both paths are warmed (compile cache populated) before timing, and every
-batched answer is checked for exact agreement against its single-source
-run.  The acceptance line (ISSUE 2): at B=64 on a 50k-vertex power-law
-graph the batched path must reach ≥ 5× the loop's queries/sec.
+**Open-loop** (the ISSUE 6 acceptance): a Poisson arrival stream of
+mixed traffic — 50 % boolean reachability, 50 % integer-weighted SSSP —
+offered at well above either server's capacity, served by the packed
+FIFO server and by the continuous-batching scheduler
+(`repro.serve.ContinuousServer`) at equal ``max_batch``.  Reports
+sustained qps and p50/p95/p99 end-to-end latency for each server; the
+continuous scheduler must clear ≥ 5× the FIFO qps, with every answer
+identical across the two servers (and spot-checked against single-source
+fixpoints).
 
 Usage:
   PYTHONPATH=src python -m benchmarks.serve_batch
-  PYTHONPATH=src python -m benchmarks.serve_batch --n 2000 --batches 1,8
+  PYTHONPATH=src python -m benchmarks.serve_batch --n 2000 --requests 64
 """
 
 from __future__ import annotations
@@ -34,6 +40,7 @@ from benchmarks.common import emit
 from repro.core import engine
 from repro.datalog import datasets, programs
 from repro.launch.datalog_serve import DatalogServer
+from repro.serve import ContinuousServer
 from repro.sparse import sparse_seminaive_fixpoint
 
 
@@ -43,18 +50,58 @@ def _one_hot(n: int, s: int) -> np.ndarray:
     return v
 
 
-def run(n: int = 50_000, batch_sizes=(1, 8, 64), seed: int = 1,
-        out: str = "BENCH_serve.json", check: bool = True):
-    g = datasets.powerlaw(n, 4, seed=seed)
-    rel = g.sparse_adjacency().as_jnp()
-    b0 = programs.bm(a=0)
-    db = engine.Database(b0.original.schema, {"id": n},
-                         {"E": rel, "V": jnp.ones((n,), bool)})
+def _trop_init(n: int, s: int) -> np.ndarray:
+    v = np.full(n, np.inf, np.float32)
+    v[s] = 0.0
+    return v
 
-    # warm answers off: this benchmark measures *cold* compute throughput
+
+def _mk_bm(a):
+    return programs.bm(a=a).optimized
+
+
+def _mk_sssp(a):
+    return programs.sssp(a=a, wmax=4, dmax=64).optimized
+
+
+def _graphs(n: int, seed: int):
+    """The serving pair: one unweighted power-law graph for BM, one
+    integer-weighted (1..4) for SSSP."""
+    g_bm = datasets.powerlaw(n, 4, seed=seed)
+    g0 = datasets.powerlaw(n, 4, seed=seed + 1)
+    rng = np.random.default_rng(seed + 2)
+    g_ss = datasets.Graph(g0.n, g0.edges,
+                          rng.integers(1, 5, len(g0.edges)))
+    return g_bm, g_ss
+
+
+def _dbs(n: int, g_bm, g_ss):
+    bm_rel = g_bm.sparse_adjacency().as_jnp()
+    db_bm = engine.Database(programs.bm(a=0).original.schema, {"id": n},
+                            {"E": bm_rel, "V": jnp.ones((n,), bool)})
+    # the schema-level E3 is a dense (n, n, w) tensor that must never be
+    # materialized at 50k — register with the COO override instead
+    ss_rel = g_ss.sparse_adjacency(semiring="trop").as_jnp()
+    db_ss = engine.Database(
+        programs.sssp(a=0, wmax=4, dmax=64).original.schema,
+        {"id": n, "w": 4, "d": 64}, {})
+    return bm_rel, db_bm, ss_rel, db_ss
+
+
+# --------------------------------------------------------------------------
+# closed loop: loop vs packed batches (the original BENCH_serve rows)
+# --------------------------------------------------------------------------
+
+
+def run_closed_loop(n, batch_sizes, seed, check):
+    g_bm, _ = _graphs(n, seed)
+    rel = g_bm.sparse_adjacency().as_jnp()
+    db = engine.Database(programs.bm(a=0).original.schema, {"id": n},
+                         {"E": rel, "V": jnp.ones((n,), bool)})
+    # warm answers off: this section measures *cold* compute throughput
     # (the warm path is benchmarks/incremental_update.py's subject)
     server = DatalogServer(max_batch=max(batch_sizes), warm_answers=0)
-    server.register("reach", lambda a: programs.bm(a=a).optimized, db)
+    server.register("reach", _mk_bm, db)
 
     single = jax.jit(lambda e, i: sparse_seminaive_fixpoint(
         e, i, mode="jit"))
@@ -66,8 +113,8 @@ def run(n: int = 50_000, batch_sizes=(1, 8, 64), seed: int = 1,
     for b in batch_sizes:
         sources = [int(s) for s in rng.integers(0, n, b)]
 
-        # per-source loop (the jit is already warm: every call shares the
-        # single (n,) input shape)
+        # per-source loop (the jit is already warm: every call shares
+        # the single (n,) input shape)
         t0 = time.perf_counter()
         loop_out = []
         for s in sources:
@@ -76,7 +123,8 @@ def run(n: int = 50_000, batch_sizes=(1, 8, 64), seed: int = 1,
         t_loop = time.perf_counter() - t0
         qps_loop = b / t_loop
 
-        # serve loop (warm the compile cache, then timed)
+        # serve loop (warm the compile cache / frontier index, then
+        # timed)
         for timed in (False, True):
             reqs = [server.submit("reach", s) for s in sources]
             t0 = time.perf_counter()
@@ -95,15 +143,140 @@ def run(n: int = 50_000, batch_sizes=(1, 8, 64), seed: int = 1,
         emit(f"serve_batch/B{b}", t_batch,
              f"qps_batched={qps_batch:.1f} qps_loop={qps_loop:.1f} "
              f"speedup={speedup:.1f}x")
+    return rows, agreement, server.stats
 
+
+# --------------------------------------------------------------------------
+# open loop: Poisson mixed traffic, FIFO vs continuous
+# --------------------------------------------------------------------------
+
+
+def _drive_open_loop(server, schedule, n):
+    """Replay a Poisson arrival schedule against a server: requests are
+    submitted when their arrival time passes (never early), the server
+    steps whenever it has work.  Returns (requests, duration,
+    latencies) — latency is measured from *intended arrival*, so time a
+    request spends waiting behind a busy server counts against it."""
+    t0 = time.perf_counter()
+    out = [None] * len(schedule)
+    i = 0
+    while i < len(schedule) or server.pending():
+        now = time.perf_counter() - t0
+        while i < len(schedule) and schedule[i][0] <= now:
+            _, fam, src = schedule[i]
+            out[i] = server.submit(fam, src)
+            i += 1
+        if server.pending():
+            server.step()
+        elif i < len(schedule):
+            time.sleep(min(schedule[i][0] - now, 1e-3))
+    server.run_until_idle()
+    duration = time.perf_counter() - t0
+    lat = np.array([r.done_s - (t0 + arr)
+                    for r, (arr, _, _) in zip(out, schedule)])
+    return out, duration, lat
+
+
+def _pctiles(lat):
+    return {"p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p95_ms": float(np.percentile(lat, 95) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3)}
+
+
+def run_open_loop(n, n_requests, offered_qps, max_batch, seed, check):
+    g_bm, g_ss = _graphs(n, seed)
+    bm_rel, db_bm, ss_rel, db_ss = _dbs(n, g_bm, g_ss)
+
+    rng = np.random.default_rng(seed + 3)
+    # exactly half/half so the FIFO baseline packs only full batches in
+    # steady state (its best case), in a random interleaving
+    fams = list(rng.permutation(["reach"] * (n_requests // 2)
+                                + ["sssp"] * (n_requests // 2)))
+    arrivals = np.cumsum(rng.exponential(1.0 / offered_qps, n_requests))
+    schedule = [(float(t), str(fam), int(rng.integers(0, n)))
+                for t, fam in zip(arrivals, fams)]
+
+    def build(server):
+        server.register("reach", _mk_bm, db_bm)
+        server.register("sssp", _mk_sssp, db_ss, edges=ss_rel)
+        # warm every B-bucket the stream can hit, so neither server
+        # pays XLA compiles inside the timed window
+        warm_rng = np.random.default_rng(seed + 4)
+        for fam in ("reach", "sssp"):
+            for b in (1, 2, 4, 8, 16, 32, 64):
+                if b > max_batch:
+                    continue
+                for s in warm_rng.integers(0, n, b):
+                    server.submit(fam, int(s))
+                server.run_until_idle()
+        return server
+
+    fifo = build(DatalogServer(max_batch=max_batch, warm_answers=0))
+    cont = build(ContinuousServer(max_batch=max_batch, warm_answers=0,
+                                  queue_limit=max(4 * n_requests, 1024)))
+
+    f_reqs, f_dur, f_lat = _drive_open_loop(fifo, schedule, n)
+    c_reqs, c_dur, c_lat = _drive_open_loop(cont, schedule, n)
+
+    agreement = True
+    if check:
+        for rf, rc in zip(f_reqs, c_reqs):
+            if rf.error or rc.error or not np.array_equal(
+                    np.asarray(rf.result), np.asarray(rc.result)):
+                agreement = False
+        # spot-check a few against plain single-source fixpoints
+        for idx in np.random.default_rng(seed + 5).integers(
+                0, n_requests, 6):
+            r = c_reqs[idx]
+            if r.family == "reach":
+                y, _ = sparse_seminaive_fixpoint(
+                    bm_rel, jnp.asarray(_one_hot(n, r.source)),
+                    mode="jit")
+            else:
+                y, _ = sparse_seminaive_fixpoint(
+                    ss_rel, jnp.asarray(_trop_init(n, r.source)),
+                    mode="jit")
+            if not np.array_equal(np.asarray(r.result), np.asarray(y)):
+                agreement = False
+
+    result = {
+        "n": n, "requests": n_requests, "offered_qps": offered_qps,
+        "max_batch": max_batch, "mix": "50% BM bool / 50% SSSP trop",
+        "fifo": {"qps": n_requests / f_dur, "duration_s": f_dur,
+                 **_pctiles(f_lat)},
+        "continuous": {"qps": n_requests / c_dur, "duration_s": c_dur,
+                       **_pctiles(c_lat)},
+        "speedup": f_dur / c_dur,
+        "continuous_stats": {
+            k: v for k, v in cont.stats().items()
+            if not isinstance(v, dict)},
+    }
+    emit("serve_batch/open_loop", c_dur,
+         f"continuous={result['continuous']['qps']:.1f}qps "
+         f"p99={result['continuous']['p99_ms']:.0f}ms  "
+         f"fifo={result['fifo']['qps']:.1f}qps "
+         f"p99={result['fifo']['p99_ms']:.0f}ms  "
+         f"speedup={result['speedup']:.1f}x")
+    return result, agreement
+
+
+def run(n: int = 50_000, batch_sizes=(1, 8, 64), seed: int = 1,
+        out: str = "BENCH_serve.json", check: bool = True,
+        n_requests: int = 512, offered_qps: float = 2000.0):
+    rows, agree_closed, fifo_stats = run_closed_loop(
+        n, batch_sizes, seed, check)
+    open_loop, agree_open = run_open_loop(
+        n, n_requests, offered_qps, max(batch_sizes), seed, check)
+
+    agreement = agree_closed and agree_open
     result = {"bench": "serve_batch", "family": "BM", "n": n,
-              "nnz": int(np.asarray(rel.nnz)), "seed": seed,
-              "max_batch": max(batch_sizes), "agreement": agreement,
-              "rows": rows, "server_stats": server.stats}
+              "seed": seed, "max_batch": max(batch_sizes),
+              "agreement": agreement, "rows": rows,
+              "open_loop": open_loop, "server_stats": fifo_stats}
     if out:
         pathlib.Path(out).write_text(json.dumps(result, indent=2) + "\n")
         print(f"wrote {out}")
-    assert agreement, "batched answers diverged from single-source runs"
+    assert agreement, "served answers diverged from single-source runs"
     return result
 
 
@@ -114,11 +287,16 @@ def main():
                     help="comma-separated batch sizes")
     ap.add_argument("--seed", type=int, default=1)
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--requests", type=int, default=512,
+                    help="open-loop request count (even)")
+    ap.add_argument("--qps", type=float, default=2000.0,
+                    help="open-loop offered load")
     ap.add_argument("--no-check", action="store_true")
     args = ap.parse_args()
     sizes = tuple(int(s) for s in args.batches.split(",") if s)
     run(n=args.n, batch_sizes=sizes, seed=args.seed, out=args.out,
-        check=not args.no_check)
+        check=not args.no_check, n_requests=args.requests,
+        offered_qps=args.qps)
 
 
 if __name__ == "__main__":

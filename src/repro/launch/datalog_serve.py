@@ -1,54 +1,30 @@
-"""Batched multi-source Datalog° query serving (DESIGN.md §3).
+"""Packed-FIFO Datalog° serving — compatibility shim over ``repro.serve``.
 
-The production shape mirrors `launch/serve.py`'s LM batcher: a request
-queue, a packer that groups up to ``max_batch`` pending (family, source)
-queries of the same program family, and a compiled batched GSN fixpoint
-that answers the whole pack in one device program.  The pieces:
+This module is the original batched serve loop (DESIGN.md §3): a shared
+FIFO of queries and updates, a packer that groups up to ``max_batch``
+same-family queries, and one compiled batched GSN fixpoint per
+(signature, B-bucket) answering each pack to *global* convergence.  The
+production serving surface is now the continuous-batching scheduler
+(:class:`repro.serve.ContinuousServer`, DESIGN.md §7), which steps
+persistent slot pools and evicts rows per-request instead of per-batch;
+``DatalogServer`` remains as the stable packed-FIFO API — and as the
+baseline the continuous scheduler is benchmarked against
+(``benchmarks/serve_batch.py``).
 
-* **Plan routing** — registered Π₂ programs (published rewrites or ones
-  freshly synthesized by :mod:`repro.core.fgh`) are planned once by the
-  cost-based planner (:func:`repro.core.planner.plan_program`,
-  ``objective="throughput"``, DESIGN.md §4), which splits them into
-  ``x = init ⊕ x ⊗ E`` and picks the batched runner; only the O(n)
-  ``init`` is evaluated per request, while the linear operator E and the
-  compiled fixpoint are shared by every source.
-* **Compile cache** — jitted batched runners are keyed on
-  ``(ExecutionPlan.signature, B-bucket)``; the plan signature already
-  folds in the linear-operator hash, n, the semiring, and the chosen
-  runner.  Batch sizes are bucketed to powers of two (padded with inert
-  all-0̄ init rows), so a steady-state server compiles each family a
-  handful of times total.
-* **Batched runners** — built by :func:`repro.core.planner.
-  compile_batched`: sparse families run the SpMM
-  ``sparse_seminaive_fixpoint`` (one ``lax.while_loop`` for all B
-  sources, per-row convergence); dense families the
-  ``fixpoint.batched_seminaive_fixpoint`` semiring-matmul step.
-* **Sharding** — with a ``("data",)`` mesh attached, the query-batch
-  axis is laid out across the "data" axis (``launch.rules`` kind
-  "datalog") and the fixpoint's internal constraints keep it there.
-  With a ``("graph",)`` mesh (``launch.mesh.make_graph_mesh``,
-  DESIGN.md §6) the *vertex* axis is partitioned instead: registration
-  plans with ``mesh=`` so the planner can pick the row-partitioned
-  ``sparse_sharded`` runner, the family's operator is kept as a
-  :class:`~repro.distributed.datalog.ShardedRelation`, compiled runners
-  are keyed ``(plan.signature, B-bucket, D)``, and ``submit_update``
-  routes delta rows to their owning destination shards
-  (:meth:`~repro.distributed.datalog.ShardedRelation.apply_delta`) so
-  capacity — and the compiled trace — survives monotone updates.
-* **Streaming updates** (DESIGN.md §5) — :meth:`DatalogServer.
-  submit_update` enqueues edge mutations *in the same FIFO queue as
-  queries*: a query packed into a batch never jumps ahead of an earlier
-  same-family update, and once an update is acknowledged every later
-  answer reflects it.  Monotone updates (⊕-merge insertions / tropical
-  weight decreases) are applied as a COO append
-  (:meth:`~repro.sparse.coo.SparseRelation.apply_delta` — capacity and
-  therefore the staged fixpoint's trace usually survive, so the compile
-  cache keeps hitting) and the family's warm answer cache is *repaired*,
-  not dropped: one batched delta-restart pass
-  (:func:`repro.incremental.delta_restart_fixpoint`) re-converges every
-  cached solution from an O(nnz(Δ)) SpMM seed.  Non-monotone updates
-  (deletions) rebuild the operator and invalidate the warm answers —
-  with the plan, signature, and compiled runners all kept.
+All family machinery is shared with the new subsystem
+(:mod:`repro.serve.family`): registration/planning, per-request init
+evaluation, and the streaming-update path (monotone ⊕-merge appends
+with batched delta-restart warm repair; non-monotone deletes) are one
+implementation under both schedulers.  Two behaviors this shim gained
+from the subsystem:
+
+* the warm-answer store and the compiled-runner cache are now
+  capacity-bounded LRUs (``warm_answers=`` / ``compiled_cache=``), with
+  evictions surfaced in ``stats["cache_evictions"]``;
+* a batch with exactly one live request routes down the planner's
+  per-source latency path (:func:`repro.serve.family.latency_serve`)
+  instead of a degenerate (1, n) batched fixpoint — the B=1 row of
+  BENCH_serve.json is no longer slower than the naive loop.
 
 FGH families: :func:`fgh_make_program` derives Π₂ from a Π₁ benchmark
 *twice* at distinct placeholder sources and diffs the results to locate
@@ -60,7 +36,6 @@ from __future__ import annotations
 
 import argparse
 import collections
-import dataclasses
 import time
 from typing import Callable
 
@@ -68,109 +43,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import engine, ir, planner, vectorize, verify
+from repro.core import engine, ir, planner, verify
 from repro.core import semiring as sr_mod
 from repro.core.program import Program
 from repro.distributed import sharding as sh
 from repro.launch import rules as rules_mod
-from repro.sparse.coo import SparseRelation
+from repro.serve import family as fam_mod
+from repro.serve.cache import LRUCache
+from repro.serve.family import (Family as _Family, QueryRequest,
+                                UpdateRequest, bucket as _bucket)
 
-
-@dataclasses.dataclass
-class QueryRequest:
-    """One (program family, source vertex) query; filled in by the server.
-
-    A request that cannot be served (e.g. its source changed the
-    family's linear operator) comes back with ``result=None`` and the
-    failure message in ``error`` — it never takes its batch down.
-    """
-
-    family: str
-    source: int
-    result: np.ndarray | None = None
-    iters: int | None = None
-    error: str | None = None
-    submitted_s: float = 0.0
-    done_s: float = 0.0
-
-    @property
-    def latency_s(self) -> float:
-        return self.done_s - self.submitted_s
-
-
-@dataclasses.dataclass
-class UpdateRequest:
-    """One batch of edge mutations against a family's linear operator.
-
-    ``op="merge"`` is the monotone ⊕-merge (edge insertion; tropical
-    weight decrease); ``op="delete"`` removes keys and is non-monotone.
-    Coordinates live in the space the family's operator was built from:
-    the stored edge relation ``E(i, j)`` when one exists (the server
-    re-orients them for the operator), else the ``edges=`` override
-    given at registration.  Once ``applied`` is set the server
-    guarantees no later-served answer predates the update.
-    """
-
-    family: str
-    coords: np.ndarray
-    values: np.ndarray | None = None
-    op: str = "merge"
-    applied: bool = False
-    repaired: int = 0           # warm answers repaired in place
-    error: str | None = None
-    submitted_s: float = 0.0
-    done_s: float = 0.0
-
-    @property
-    def latency_s(self) -> float:
-        return self.done_s - self.submitted_s
-
-
-#: per-family cap on memoized init vectors (n floats each)
-_INIT_CACHE_MAX = 4096
-
-
-@dataclasses.dataclass
-class _Family:
-    name: str
-    make_program: Callable[[int], Program]
-    db: engine.Database
-    host_db: engine.Database    # numpy twin for eager per-request init eval
-    plan: planner.ExecutionPlan
-    edges: object               # SparseRelation (jnp) or dense (n, n) array
-    hints: dict
-    n: int
-    max_iters: int
-    #: graph-sharded twin of ``edges`` (ShardedRelation) when the plan
-    #: picked the row-partitioned runner; the compiled fixpoint's operand
-    sharded: object | None = None
-    edge_rel: str | None = None  # stored relation behind E (None: override)
-    init_reads_edges: bool = False  # init term references edge_rel too
-    init_cache: dict[int, np.ndarray] = dataclasses.field(
-        default_factory=dict)
-    answers: dict[int, np.ndarray] = dataclasses.field(
-        default_factory=dict)   # warm x* per source, repaired on update
-
-    @property
-    def backend(self) -> str:
-        # derived from the plan so it can never disagree with the routing
-        return "sparse" if self.plan.strata[0].runner in (
-            "sparse_jit", "sparse_sharded") else "dense"
-
-
-def _bucket(b: int, max_batch: int) -> int:
-    """Smallest power of two ≥ b, capped at max_batch."""
-    out = 1
-    while out < b:
-        out <<= 1
-    return min(out, max_batch)
+__all__ = ["DatalogServer", "QueryRequest", "UpdateRequest",
+           "fgh_make_program", "_bucket"]
 
 
 class DatalogServer:
     """Request-queue serve loop over batched GSN fixpoints."""
 
     def __init__(self, *, max_batch: int = 64, mesh=None,
-                 max_iters: int = 10_000, warm_answers: int = 256):
+                 max_iters: int = 10_000, warm_answers: int = 256,
+                 compiled_cache: int = 32):
         self.max_batch = max_batch
         self.max_iters = max_iters
         self.mesh = mesh
@@ -186,57 +78,25 @@ class DatalogServer:
                       else None)
         self._families: dict[str, _Family] = {}
         self._queue: collections.deque = collections.deque()
-        self._compiled: dict[tuple, Callable] = {}
+        self._compiled = LRUCache(compiled_cache)
         self.stats = {"served": 0, "failed": 0, "batches": 0,
                       "padded_rows": 0, "cache_hits": 0,
-                      "cache_misses": 0, "updates": 0, "warm_hits": 0,
-                      "answers_repaired": 0, "answers_dropped": 0}
+                      "cache_misses": 0, "cache_evictions": 0,
+                      "updates": 0, "warm_hits": 0,
+                      "answers_repaired": 0, "answers_dropped": 0,
+                      "latency_routed": 0}
 
     # -- registration -------------------------------------------------------
 
     def register(self, name: str, make_program: Callable[[int], Program],
                  db: engine.Database, *, edges=None,
                  template_source: int = 0) -> _Family:
-        """Register a family of source-parameterized Π₂ programs.
-
-        ``make_program(source)`` must return the optimized program for
-        that source; all sources must share the linear operator (checked
-        per request by ``planner.source_init`` via the vector-form
-        signature).  ``edges`` overrides the
-        extracted E — e.g. a weighted COO adjacency for SSSP-style
-        families whose schema-level edge relation is a dense 3-ary
-        tensor that would not scale.
-        """
-        template = make_program(template_source)
-        hints = dict(template.sort_hints)
-        plan = planner.plan_program(
-            template, db, hints, objective="throughput", edges=edges,
-            adapt_storage=False, require_vector=True,
-            mesh=self.graph_mesh)
-        edges = planner.materialize_edges(plan, db, hints)
-        n = db.dom(plan.strata[0].vf.out_sort)
-        # numpy twin of the relations: per-request init evaluation runs
-        # eagerly on the host (the jnp dispatch overhead of an O(n) eval
-        # would dominate a packed batch otherwise).  Sparse relations go
-        # to their np lib too — an init term may read the edge relation
-        # itself (e.g. Q(y) := E(a, y) ⊕ …), which the evaluator then
-        # densifies host-side.
-        host_rels = {k: (v.as_np() if isinstance(v, SparseRelation)
-                         else np.asarray(v))
-                     for k, v in db.relations.items()}
-        host_db = engine.Database(db.schema, db.domains, host_rels)
-        fam = _Family(name, make_program, db, host_db, plan, edges, hints,
-                      n, self.max_iters)
-        if plan.strata[0].runner == "sparse_sharded":
-            from repro.distributed import datalog as dd
-            fam.sharded = dd.shard_relation(edges, self.graph_mesh)
-        if plan.strata[0].edges_override is None:
-            a = vectorize.edge_atom(plan.strata[0].vf)
-            if a is not None and isinstance(db.relations.get(a.name),
-                                            SparseRelation):
-                fam.edge_rel = a.name
-                fam.init_reads_edges = vectorize.init_reads(
-                    plan.strata[0].vf, a.name)
+        """Register a family of source-parameterized Π₂ programs
+        (:func:`repro.serve.family.build_family`)."""
+        fam = fam_mod.build_family(
+            name, make_program, db, edges=edges,
+            template_source=template_source, graph_mesh=self.graph_mesh,
+            max_iters=self.max_iters, warm_answers=self.warm_answers)
         self._families[name] = fam
         return fam
 
@@ -288,7 +148,8 @@ class DatalogServer:
                    and self._queue[0].family == lead.family
                    and self._queue[0].op == lead.op):
                 ups.append(self._queue.popleft())
-            self._apply_updates(self._families[lead.family], ups)
+            fam_mod.apply_updates(self._families[lead.family], ups,
+                                  self.stats, graph_mesh=self.graph_mesh)
             return ups
         batch = [lead]
         rest: collections.deque = collections.deque()
@@ -309,15 +170,16 @@ class DatalogServer:
     def _serve_batch(self, fam: _Family, batch: list) -> list:
         live, inits = [], []
         for r in batch:
-            if r.source in fam.answers:
-                r.result = fam.answers[r.source]
+            warm = fam.answers.get(r.source)
+            if warm is not None:
+                r.result = warm
                 r.iters = 0
                 r.done_s = time.perf_counter()
                 self.stats["warm_hits"] += 1
                 self.stats["served"] += 1
                 continue
             try:
-                inits.append(self._init_for(fam, r.source))
+                inits.append(fam_mod.family_init(fam, r.source))
                 live.append(r)
             except Exception as e:  # bad source must not strand the batch
                 r.error = f"{type(e).__name__}: {e}"
@@ -326,6 +188,19 @@ class DatalogServer:
         if not live:
             self.stats["batches"] += 1
             return batch
+        if len(live) == 1 and self.mesh is None:
+            # single-slot requests skip the (1, n) batched fixpoint for
+            # the planner's per-source latency path (B=1 regression fix)
+            out = fam_mod.latency_serve(fam, inits[0])
+            if out is not None:
+                req = live[0]
+                req.result, req.iters = out
+                req.done_s = time.perf_counter()
+                self._remember(fam, req.source, req.result)
+                self.stats["latency_routed"] += 1
+                self.stats["served"] += 1
+                self.stats["batches"] += 1
+                return batch
         bb = _bucket(len(live), self.max_batch)
         sr = sr_mod.get(fam.plan.strata[0].vf.semiring, lib="np")
         packed = np.full((bb, fam.n), sr.zero, sr.dtype)
@@ -364,194 +239,22 @@ class DatalogServer:
             done += len(self.step())
         return done
 
-    # -- streaming updates ---------------------------------------------------
-
-    def _remember(self, fam: _Family, source: int, y: np.ndarray) -> None:
-        if not self.warm_answers:
-            return
-        if len(fam.answers) >= self.warm_answers:
-            fam.answers.pop(next(iter(fam.answers)))  # FIFO evict
-        fam.answers[source] = y
-
-    def _apply_updates(self, fam: _Family, ups: list) -> None:
-        """Apply a run of same-op updates in one pass: mutate the stored
-        relation + operator, then repair (monotone) or drop (delete) the
-        warm answer cache.  The family's plan, signature, and compiled
-        runners are untouched — within operator capacity not even the
-        staged fixpoint's trace changes."""
-        now = time.perf_counter()
-        try:
-            coords = np.concatenate([u.coords for u in ups])
-            values = None
-            if any(u.values is not None for u in ups):
-                one = np.asarray(
-                    sr_mod.get(self._rel_semiring(fam), lib="np").one)
-                values = np.concatenate(
-                    [u.values if u.values is not None
-                     else np.full(len(u.coords), one) for u in ups])
-            if ups[0].op == "merge":
-                self._merge_edges(fam, coords, values)
-            else:
-                self._delete_edges(fam, coords)
-        except Exception as e:  # a bad update must not kill the queue
-            for u in ups:
-                u.error = f"{type(e).__name__}: {e}"
-                u.done_s = now
-            self.stats["failed"] += len(ups)
-            return
-        for u in ups:
-            u.applied = True
-            u.done_s = time.perf_counter()
-        self.stats["updates"] += len(ups)
-
-    def _rel_semiring(self, fam: _Family) -> str:
-        if fam.edge_rel is not None:
-            return fam.db.schema[fam.edge_rel].semiring
-        vf = fam.plan.strata[0].vf
-        return (fam.edges.semiring
-                if isinstance(fam.edges, SparseRelation) else vf.semiring)
-
-    def _operator_delta(self, fam: _Family, coords, values
-                        ) -> SparseRelation:
-        """The update batch as a sparse Δ in the operator's own space:
-        re-oriented from stored-relation order when needed, values cast
-        into the vector equation's semiring."""
-        vf = fam.plan.strata[0].vf
-        rel_sr = self._rel_semiring(fam)
-        delta = SparseRelation.from_coo(
-            coords,
-            np.ones(len(coords), sr_mod.get(rel_sr, lib="np").dtype)
-            * sr_mod.get(rel_sr, lib="np").one
-            if values is None else values,
-            (fam.n, fam.n), rel_sr)
-        if fam.edge_rel is not None:
-            a = vectorize.edge_atom(vf)
-            if tuple(a.args) != vf.edge.head:
-                delta = delta.transpose()
-        return vectorize._sparse_into_semiring(delta, vf.semiring)
-
-    def _merge_edges(self, fam: _Family, coords, values) -> None:
-        from repro.incremental import DeltaEntry, delta_restart_fixpoint
-        delta_op = self._operator_delta(fam, coords, values)
-        dh = delta_op.as_np()
-        k = int(dh.nnz)
-        if fam.edge_rel is not None:
-            ent = [DeltaEntry(fam.edge_rel, coords, values, "merge")]
-            fam.db = fam.db.apply_delta(ent)
-            fam.host_db = fam.host_db.apply_delta(ent)
-        if isinstance(fam.edges, SparseRelation):
-            fam.edges = fam.edges.apply_delta(dh.coords[:k], dh.values[:k])
-            if fam.sharded is not None:
-                # route the same rows to their owning destination shards
-                # — per-shard capacity usually holds, so the compiled
-                # sharded fixpoint's trace (and cache entry) survives
-                fam.sharded = fam.sharded.apply_delta(dh.coords[:k],
-                                                      dh.values[:k])
-        else:  # dense operator: ⊕-scatter in place
-            idx = tuple(np.asarray(dh.coords[:k]).T)
-            fam.edges = sr_mod.scatter_op(
-                delta_op.semiring,
-                jnp.asarray(fam.edges).at[idx])(jnp.asarray(dh.values[:k]),
-                                                mode="drop")
-        if fam.init_reads_edges:
-            # the merge also changed the init term: memoized init vectors
-            # are stale and a Δ-seeded repair would miss the init
-            # contribution — recompute cold (correctness over warmth)
-            fam.init_cache.clear()
-            self.stats["answers_dropped"] += len(fam.answers)
-            fam.answers.clear()
-            return
-        if not fam.answers:
-            return
-        if not isinstance(fam.edges, SparseRelation):
-            # no sparse Δ-seed path for a dense operator — recompute cold
-            self.stats["answers_dropped"] += len(fam.answers)
-            fam.answers.clear()
-            return
-        # one batched delta-restart pass repairs every warm answer:
-        # bucketed to a power of two with inert 0̄ rows, one SpMM per
-        # round (DESIGN.md §5)
-        sources = list(fam.answers)
-        sr = sr_mod.get(fam.plan.strata[0].vf.semiring, lib="np")
-        bb = _bucket(len(sources), 1 << 30)
-        prev = np.full((bb, fam.n), sr.zero, sr.dtype)
-        for i, s in enumerate(sources):
-            prev[i] = fam.answers[s]
-        if fam.sharded is not None:
-            # sharded warm repair: the O(nnz(Δ)) seed is derived on the
-            # host, then the graph-axis resume loop re-converges every
-            # row — same loop body as cold sharded serving
-            from repro.distributed import datalog as dd
-            from repro.incremental import delta_seed
-            d0 = delta_seed(delta_op, prev, backend="np")
-            y, _ = dd.sharded_resume_fixpoint(
-                fam.sharded, prev, d0, mesh=self.graph_mesh,
-                max_iters=fam.max_iters)
-        else:
-            y, _ = delta_restart_fixpoint(fam.edges, delta_op, prev,
-                                          max_iters=fam.max_iters,
-                                          mode="jit")
-        y = np.asarray(y)
-        for i, s in enumerate(sources):
-            fam.answers[s] = y[i]
-        self.stats["answers_repaired"] += len(sources)
-
-    def _delete_edges(self, fam: _Family, coords) -> None:
-        from repro.incremental import DeltaEntry
-        if fam.edge_rel is not None:
-            ent = [DeltaEntry(fam.edge_rel, coords, None, "delete")]
-            fam.db = fam.db.apply_delta(ent)
-            fam.host_db = fam.host_db.apply_delta(ent)
-            fam.edges = planner.materialize_edges(fam.plan, fam.db,
-                                                  fam.hints)
-        elif isinstance(fam.edges, SparseRelation):
-            delta_op = self._operator_delta(fam, coords, None)
-            dh = delta_op.as_np()
-            fam.edges = fam.edges.delete_keys(dh.coords[:int(dh.nnz)])
-        else:
-            vf = fam.plan.strata[0].vf
-            sr = sr_mod.get(vf.semiring)
-            idx = tuple(np.asarray(np.atleast_2d(coords)).T)
-            fam.edges = jnp.asarray(fam.edges).at[idx].set(sr.zero)
-        if fam.sharded is not None:
-            # a deletion rebuilt the operator — re-partition it (the
-            # compiled sharded runners survive unless capacity moved)
-            from repro.distributed import datalog as dd
-            fam.sharded = dd.shard_relation(fam.edges, self.graph_mesh)
-        # deletion is non-monotone: warm answers may over-derive — drop
-        # them (the plan and compiled runners survive untouched)
-        if fam.init_reads_edges:
-            fam.init_cache.clear()
-        self.stats["answers_dropped"] += len(fam.answers)
-        fam.answers.clear()
-
     # -- internals ----------------------------------------------------------
 
-    def _init_for(self, fam: _Family, source: int):
-        """The per-request O(n) host work, memoized per source: rebuild
-        the source's program, check it kept the family's linear operator
-        (vector-form signature equality, ``planner.source_init``),
-        evaluate its init terms."""
-        if source in fam.init_cache:
-            return fam.init_cache[source]
-        prog = fam.make_program(source)
-        init = planner.source_init(fam.plan, prog, fam.host_db,
-                                   hints=dict(prog.sort_hints),
-                                   backend="np")
-        if len(fam.init_cache) >= _INIT_CACHE_MAX:
-            fam.init_cache.pop(next(iter(fam.init_cache)))  # FIFO evict
-        fam.init_cache[source] = init
-        return init
+    def _remember(self, fam: _Family, source: int, y: np.ndarray) -> None:
+        fam.answers.put(source, y)
 
     def _compiled_fixpoint(self, fam: _Family, bb: int) -> Callable:
         key = (fam.plan.signature, bb, self.graph_d)
-        if key in self._compiled:
+        run = self._compiled.get(key)
+        if run is not None:
             self.stats["cache_hits"] += 1
-            return self._compiled[key]
+            return run
         self.stats["cache_misses"] += 1
-        self._compiled[key] = planner.compile_batched(
-            fam.plan, max_iters=fam.max_iters)
-        return self._compiled[key]
+        run = planner.compile_batched(fam.plan, max_iters=fam.max_iters)
+        self._compiled.put(key, run)
+        self.stats["cache_evictions"] = self._compiled.evictions
+        return run
 
 
 # --------------------------------------------------------------------------

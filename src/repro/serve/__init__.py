@@ -1,0 +1,24 @@
+"""Continuous-batching serve subsystem (DESIGN.md §7).
+
+The production serving surface: :class:`ContinuousServer` runs one
+persistent batched fixpoint per program family as a slot pool —
+admitting queued sources into freed rows, evicting rows the moment
+their convergence mask fires, fencing updates FIFO-per-family, and
+streaming tail-latency histograms.  ``launch.datalog_serve`` remains as
+a packed-FIFO compatibility shim built on the same family machinery.
+"""
+
+from repro.serve.cache import LRUCache
+from repro.serve.family import (Family, QueryRequest, UpdateRequest,
+                                build_family, bucket)
+from repro.serve.metrics import LatencyHistogram, RequestMetrics
+from repro.serve.scheduler import BackpressureError, ContinuousServer
+from repro.serve.slots import (BitsetBoolStepper, JaxChunkStepper,
+                               LevelSyncTropStepper, SlotPool)
+
+__all__ = [
+    "BackpressureError", "BitsetBoolStepper", "ContinuousServer",
+    "Family", "JaxChunkStepper", "LRUCache", "LatencyHistogram",
+    "LevelSyncTropStepper", "QueryRequest", "RequestMetrics",
+    "SlotPool", "UpdateRequest", "build_family", "bucket",
+]

@@ -1,0 +1,540 @@
+"""Program-family machinery shared by both serve loops (DESIGN.md §3, §7).
+
+A *family* is one source-parameterized Π₂ program registered with a
+server: its cost-based plan, materialized linear operator ``E``, host
+twin of the database for eager per-request ``init`` evaluation, memoized
+init vectors, and the capacity-bounded warm-answer LRU.  Everything here
+used to live inside ``launch.datalog_serve.DatalogServer``; it was
+extracted so the continuous-batching scheduler
+(:class:`repro.serve.scheduler.ContinuousServer`) and the packed-FIFO
+compatibility shim share one registration, init-evaluation, and
+streaming-update implementation — the update semantics (monotone
+⊕-merge appends with batched delta-restart warm repair, non-monotone
+deletes that rebuild the operator and drop warm answers) are identical
+under both schedulers by construction.
+
+Also here: the **single-request latency path**.  A (1, n) batched
+fixpoint pays full SpMM scatters per iteration for one live row — the
+B=1 regression in BENCH_serve.json.  :func:`latency_serve` routes a lone
+request the way a fresh ``objective="latency"`` plan would run it (the
+planner's per-source path: the host frontier worklist on CPU sparse
+families), falling back to the batched runner when the latency plan
+picks something with no cheaper single-source form.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine, planner, vectorize
+from repro.core import semiring as sr_mod
+from repro.core.program import Program
+from repro.serve.cache import LRUCache
+from repro.sparse.coo import SparseRelation
+
+
+@dataclasses.dataclass
+class QueryRequest:
+    """One (program family, source vertex) query; filled in by the server.
+
+    A request that cannot be served (e.g. its source changed the
+    family's linear operator) comes back with ``result=None`` and the
+    failure message in ``error`` — it never takes its batch down.
+    """
+
+    family: str
+    source: int
+    result: np.ndarray | None = None
+    iters: int | None = None
+    error: str | None = None
+    submitted_s: float = 0.0
+    done_s: float = 0.0
+    #: continuous scheduler stamps: admitted into a slot / mask fired
+    admitted_s: float = 0.0
+    converged_s: float = 0.0
+
+    @property
+    def latency_s(self) -> float:
+        return self.done_s - self.submitted_s
+
+
+@dataclasses.dataclass
+class UpdateRequest:
+    """One batch of edge mutations against a family's linear operator.
+
+    ``op="merge"`` is the monotone ⊕-merge (edge insertion; tropical
+    weight decrease); ``op="delete"`` removes keys and is non-monotone.
+    Coordinates live in the space the family's operator was built from:
+    the stored edge relation ``E(i, j)`` when one exists (the server
+    re-orients them for the operator), else the ``edges=`` override
+    given at registration.  Once ``applied`` is set the server
+    guarantees no later-served answer predates the update.
+    """
+
+    family: str
+    coords: np.ndarray
+    values: np.ndarray | None = None
+    op: str = "merge"
+    applied: bool = False
+    repaired: int = 0           # warm answers repaired in place
+    error: str | None = None
+    submitted_s: float = 0.0
+    done_s: float = 0.0
+
+    @property
+    def latency_s(self) -> float:
+        return self.done_s - self.submitted_s
+
+
+#: per-family cap on memoized init vectors (n floats each)
+INIT_CACHE_MAX = 4096
+
+
+@dataclasses.dataclass
+class Family:
+    name: str
+    make_program: Callable[[int], Program]
+    db: engine.Database
+    host_db: engine.Database    # numpy twin for eager per-request init eval
+    plan: planner.ExecutionPlan
+    edges: object               # SparseRelation (jnp) or dense (n, n) array
+    hints: dict
+    n: int
+    max_iters: int
+    #: graph-sharded twin of ``edges`` (ShardedRelation) when the plan
+    #: picked the row-partitioned runner; the compiled fixpoint's operand
+    sharded: object | None = None
+    edge_rel: str | None = None  # stored relation behind E (None: override)
+    init_reads_edges: bool = False  # init term references edge_rel too
+    init_cache: dict[int, np.ndarray] = dataclasses.field(
+        default_factory=dict)
+    #: warm x* per source, repaired on update (capacity-bounded LRU)
+    answers: LRUCache = dataclasses.field(
+        default_factory=lambda: LRUCache(256))
+    #: host-kernel geometry (destination-sorted edge views) reused
+    #: across pool rebuilds; invalidated whenever ``edges`` mutates
+    kernel_cache: dict = dataclasses.field(default_factory=dict)
+    #: one-hot init fast path: ``(template_prog, template_source,
+    #: background, source_value, dtype)`` when registration probed the
+    #: init as "uniform background + one value at the source" — then a
+    #: request's init is two writes instead of a host program eval
+    #: (the request's program is still structurally verified against
+    #: the template first, so an operator-changing source fails as
+    #: before).  None = probe failed / not applicable.
+    fast_init: tuple | None = None
+    #: lazily planned objective="latency" route for B=1 requests;
+    #: False = probed and unavailable (no cheap per-source form)
+    latency_plan: object = None
+
+    @property
+    def backend(self) -> str:
+        # derived from the plan so it can never disagree with the routing
+        return "sparse" if self.plan.strata[0].runner in (
+            "sparse_jit", "sparse_sharded") else "dense"
+
+    @property
+    def semiring(self) -> str:
+        return self.plan.strata[0].vf.semiring
+
+
+def bucket(b: int, max_batch: int) -> int:
+    """Smallest power of two ≥ b, capped at max_batch."""
+    out = 1
+    while out < b:
+        out <<= 1
+    return min(out, max_batch)
+
+
+def build_family(name: str, make_program: Callable[[int], Program],
+                 db: engine.Database, *, edges=None,
+                 template_source: int = 0, graph_mesh=None,
+                 max_iters: int = 10_000,
+                 warm_answers: int = 256) -> Family:
+    """Plan and materialize one family (DESIGN.md §3).
+
+    ``make_program(source)`` must return the optimized program for
+    that source; all sources must share the linear operator (checked
+    per request by ``planner.source_init`` via the vector-form
+    signature).  ``edges`` overrides the extracted E — e.g. a weighted
+    COO adjacency for SSSP-style families whose schema-level edge
+    relation is a dense 3-ary tensor that would not scale.
+    """
+    template = make_program(template_source)
+    hints = dict(template.sort_hints)
+    plan = planner.plan_program(
+        template, db, hints, objective="throughput", edges=edges,
+        adapt_storage=False, require_vector=True, mesh=graph_mesh)
+    edges = planner.materialize_edges(plan, db, hints)
+    n = db.dom(plan.strata[0].vf.out_sort)
+    # numpy twin of the relations: per-request init evaluation runs
+    # eagerly on the host (the jnp dispatch overhead of an O(n) eval
+    # would dominate a packed batch otherwise).  Sparse relations go
+    # to their np lib too — an init term may read the edge relation
+    # itself (e.g. Q(y) := E(a, y) ⊕ …), which the evaluator then
+    # densifies host-side.
+    host_rels = {k: (v.as_np() if isinstance(v, SparseRelation)
+                     else np.asarray(v))
+                 for k, v in db.relations.items()}
+    host_db = engine.Database(db.schema, db.domains, host_rels)
+    fam = Family(name, make_program, db, host_db, plan, edges, hints,
+                 n, max_iters, answers=LRUCache(warm_answers))
+    if plan.strata[0].runner == "sparse_sharded":
+        from repro.distributed import datalog as dd
+        fam.sharded = dd.shard_relation(edges, graph_mesh)
+    if plan.strata[0].edges_override is None:
+        a = vectorize.edge_atom(plan.strata[0].vf)
+        if a is not None and isinstance(db.relations.get(a.name),
+                                        SparseRelation):
+            fam.edge_rel = a.name
+            fam.init_reads_edges = vectorize.init_reads(
+                plan.strata[0].vf, a.name)
+    _probe_fast_init(fam, template, template_source)
+    return fam
+
+
+def _probe_fast_init(fam: Family, template: Program,
+                     s0: int) -> None:
+    """Enable the one-hot init fast path when two probe sources show
+    the init is "uniform background + one value at the source" and the
+    two programs differ only in that source constant.  Disabled for
+    edge-reading inits (their vectors change under updates) — those
+    keep the evaluating slow path."""
+    if fam.init_reads_edges or fam.n < 2:
+        return
+    s1 = s0 + 1 if s0 + 1 < fam.n else s0 - 1
+    try:
+        p1 = fam.make_program(s1)
+        if not _source_equiv(template, p1, s0, s1):
+            return
+        h = dict(template.sort_hints)
+        i0 = planner.source_init(fam.plan, template, fam.host_db,
+                                 hints=h, backend="np")
+        i1 = planner.source_init(fam.plan, p1, fam.host_db,
+                                 hints=dict(p1.sort_hints), backend="np")
+    except Exception:
+        return
+    i0, i1 = np.asarray(i0), np.asarray(i1)
+    bg, src_val = i0[s1], i0[s0]
+    rest = np.delete(i0, s0)
+    if (src_val != bg and i1[s1] == src_val and i1[s0] == bg
+            and np.all(rest == bg)
+            and np.array_equal(np.delete(i1, s1), rest)):
+        fam.fast_init = (template, s0, bg, src_val, i0.dtype)
+        fam.init_cache[s0] = i0
+        fam.init_cache[s1] = i1
+
+
+def _source_equiv(p0: Program, p1: Program, s0: int, s1: int) -> bool:
+    """True iff ``p1`` is exactly ``p0`` with the source constant
+    ``s0`` replaced by ``s1`` (variable names ignored) — the
+    verification half of the shim's two-placeholder substitution.  When
+    it holds, the request's program kept the family's linear operator
+    by construction."""
+    from repro.core import ir
+
+    def args_ok(a0, a1):
+        if len(a0.args) != len(a1.args):
+            return False
+        for x0, x1 in zip(a0.args, a1.args):
+            c0, c1 = isinstance(x0, ir.C), isinstance(x1, ir.C)
+            if c0 != c1:
+                return False
+            if c0 and x0.value != x1.value \
+                    and (x0.value, x1.value) != (s0, s1):
+                return False
+        return True
+
+    def atom_ok(a0, a1):
+        if type(a0) is not type(a1):
+            return False
+        if isinstance(a0, ir.RelAtom):
+            return ((a0.name, a0.cast, a0.neg)
+                    == (a1.name, a1.cast, a1.neg) and args_ok(a0, a1))
+        if isinstance(a0, ir.PredAtom):
+            return a0.pred == a1.pred and args_ok(a0, a1)
+        if isinstance(a0, ir.ValFnAtom):
+            return a0.fn == a1.fn and args_ok(a0, a1)
+        if isinstance(a0, ir.ConstAtom):
+            return a0.value == a1.value
+        return True  # ValAtom: var names may drift
+
+    def ssp_ok(e0, e1):
+        if (len(e0.terms) != len(e1.terms)
+                or len(e0.head) != len(e1.head)
+                or e0.semiring != e1.semiring):
+            return False
+        return all(
+            len(t0.atoms) == len(t1.atoms)
+            and len(t0.bound) == len(t1.bound)
+            and all(atom_ok(a0, a1)
+                    for a0, a1 in zip(t0.atoms, t1.atoms))
+            for t0, t1 in zip(e0.terms, e1.terms))
+
+    if (len(p0.strata) != len(p1.strata)
+            or len(p0.outputs) != len(p1.outputs)):
+        return False
+    for st0, st1 in zip(p0.strata, p1.strata):
+        if tuple(st0.rules) != tuple(st1.rules):
+            return False
+        if not all(ssp_ok(st0.rules[nm].body, st1.rules[nm].body)
+                   for nm in st0.rules):
+            return False
+        if (st0.init is None) != (st1.init is None):
+            return False
+        if st0.init is not None:
+            if set(st0.init) != set(st1.init):
+                return False
+            if not all(ssp_ok(st0.init[nm], st1.init[nm])
+                       for nm in st0.init):
+                return False
+    return all(r0.head == r1.head and ssp_ok(r0.body, r1.body)
+               for r0, r1 in zip(p0.outputs, p1.outputs))
+
+
+def family_init(fam: Family, source: int) -> np.ndarray:
+    """The per-request O(n) host work, memoized per source: rebuild
+    the source's program, check it kept the family's linear operator,
+    produce its init vector.  One-hot families take the probed fast
+    path (structural check + two writes); everything else evaluates
+    through ``planner.source_init`` (vector-form signature equality +
+    host init eval)."""
+    if source in fam.init_cache:
+        return fam.init_cache[source]
+    prog = fam.make_program(source)
+    init = None
+    if fam.fast_init is not None and 0 <= source < fam.n:
+        template, t0, bg, src_val, dtype = fam.fast_init
+        if _source_equiv(template, prog, t0, source):
+            init = np.full(fam.n, bg, dtype)
+            init[source] = src_val
+    if init is None:
+        init = planner.source_init(fam.plan, prog, fam.host_db,
+                                   hints=dict(prog.sort_hints),
+                                   backend="np")
+    if len(fam.init_cache) >= INIT_CACHE_MAX:
+        fam.init_cache.pop(next(iter(fam.init_cache)))  # FIFO evict
+    fam.init_cache[source] = init
+    return init
+
+
+# --------------------------------------------------------------------------
+# B=1 latency routing
+# --------------------------------------------------------------------------
+
+
+def _latency_plan(fam: Family):
+    """The family's ``objective="latency"`` plan, probed lazily once.
+
+    Reuses the registration-time template and edges override, so the
+    linear operator (and every signature-keyed cache) is unchanged —
+    only stratum 0's runner pick differs.  ``False`` caches a probe that
+    found no usable per-source route.
+    """
+    if fam.latency_plan is None:
+        try:
+            template = fam.make_program(0)
+            plan = planner.plan_program(
+                template, fam.db, dict(template.sort_hints),
+                objective="latency",
+                edges=fam.plan.strata[0].edges_override,
+                adapt_storage=False, require_vector=True)
+            fam.latency_plan = (
+                plan if plan.strata[0].runner == "sparse_frontier"
+                else False)
+        except Exception:
+            fam.latency_plan = False
+    return fam.latency_plan
+
+
+def latency_serve(fam: Family, init: np.ndarray):
+    """Serve ONE request down the planner's per-source latency path.
+
+    Returns ``(x*, iters)`` or ``None`` when the family has no cheaper
+    single-source form (dense operator, sharded operand, or a latency
+    plan that picked the same batched runner) — the caller then falls
+    back to a (1, n) batched serve.  Only worth taking for a lone
+    request: the frontier worklist's per-round work is proportional to
+    the frontier, so it beats a one-live-row SpMM whose scatters still
+    touch every edge (the BENCH_serve.json B=1 row)."""
+    if fam.sharded is not None or not isinstance(fam.edges,
+                                                 SparseRelation):
+        return None
+    if jax.default_backend() != "cpu" or _latency_plan(fam) is False:
+        return None
+    from repro.sparse.fixpoint import sparse_seminaive_fixpoint
+    y, iters = sparse_seminaive_fixpoint(
+        fam.edges, np.asarray(init), mode="frontier",
+        max_iters=fam.max_iters)
+    return np.asarray(y), int(iters)
+
+
+# --------------------------------------------------------------------------
+# Streaming updates (DESIGN.md §5): shared by both serve loops
+# --------------------------------------------------------------------------
+
+
+def apply_updates(fam: Family, ups: list, stats: dict,
+                  graph_mesh=None) -> None:
+    """Apply a run of same-op updates in one pass: mutate the stored
+    relation + operator, then repair (monotone) or drop (delete) the
+    warm answer cache.  The family's plan, signature, and compiled
+    runners are untouched — within operator capacity not even the
+    staged fixpoint's trace changes."""
+    now = time.perf_counter()
+    try:
+        coords = np.concatenate([u.coords for u in ups])
+        values = None
+        if any(u.values is not None for u in ups):
+            one = np.asarray(
+                sr_mod.get(rel_semiring(fam), lib="np").one)
+            values = np.concatenate(
+                [u.values if u.values is not None
+                 else np.full(len(u.coords), one) for u in ups])
+        if ups[0].op == "merge":
+            _merge_edges(fam, coords, values, stats, graph_mesh)
+        else:
+            _delete_edges(fam, coords, stats, graph_mesh)
+    except Exception as e:  # a bad update must not kill the queue
+        for u in ups:
+            u.error = f"{type(e).__name__}: {e}"
+            u.done_s = now
+        stats["failed"] += len(ups)
+        return
+    for u in ups:
+        u.applied = True
+        u.done_s = time.perf_counter()
+    stats["updates"] += len(ups)
+
+
+def rel_semiring(fam: Family) -> str:
+    if fam.edge_rel is not None:
+        return fam.db.schema[fam.edge_rel].semiring
+    vf = fam.plan.strata[0].vf
+    return (fam.edges.semiring
+            if isinstance(fam.edges, SparseRelation) else vf.semiring)
+
+
+def operator_delta(fam: Family, coords, values) -> SparseRelation:
+    """The update batch as a sparse Δ in the operator's own space:
+    re-oriented from stored-relation order when needed, values cast
+    into the vector equation's semiring."""
+    vf = fam.plan.strata[0].vf
+    rel_sr = rel_semiring(fam)
+    delta = SparseRelation.from_coo(
+        coords,
+        np.ones(len(coords), sr_mod.get(rel_sr, lib="np").dtype)
+        * sr_mod.get(rel_sr, lib="np").one
+        if values is None else values,
+        (fam.n, fam.n), rel_sr)
+    if fam.edge_rel is not None:
+        a = vectorize.edge_atom(vf)
+        if tuple(a.args) != vf.edge.head:
+            delta = delta.transpose()
+    return vectorize._sparse_into_semiring(delta, vf.semiring)
+
+
+def _drop_answers(fam: Family, stats: dict) -> None:
+    stats["answers_dropped"] += fam.answers.clear()
+
+
+def _merge_edges(fam: Family, coords, values, stats: dict,
+                 graph_mesh) -> None:
+    from repro.incremental import DeltaEntry, delta_restart_fixpoint
+    fam.kernel_cache.clear()
+    delta_op = operator_delta(fam, coords, values)
+    dh = delta_op.as_np()
+    k = int(dh.nnz)
+    if fam.edge_rel is not None:
+        ent = [DeltaEntry(fam.edge_rel, coords, values, "merge")]
+        fam.db = fam.db.apply_delta(ent)
+        fam.host_db = fam.host_db.apply_delta(ent)
+    if isinstance(fam.edges, SparseRelation):
+        fam.edges = fam.edges.apply_delta(dh.coords[:k], dh.values[:k])
+        if fam.sharded is not None:
+            # route the same rows to their owning destination shards
+            # — per-shard capacity usually holds, so the compiled
+            # sharded fixpoint's trace (and cache entry) survives
+            fam.sharded = fam.sharded.apply_delta(dh.coords[:k],
+                                                  dh.values[:k])
+    else:  # dense operator: ⊕-scatter in place
+        idx = tuple(np.asarray(dh.coords[:k]).T)
+        fam.edges = sr_mod.scatter_op(
+            delta_op.semiring,
+            jnp.asarray(fam.edges).at[idx])(jnp.asarray(dh.values[:k]),
+                                            mode="drop")
+    if fam.init_reads_edges:
+        # the merge also changed the init term: memoized init vectors
+        # are stale and a Δ-seeded repair would miss the init
+        # contribution — recompute cold (correctness over warmth)
+        fam.init_cache.clear()
+        _drop_answers(fam, stats)
+        return
+    if not len(fam.answers):
+        return
+    if not isinstance(fam.edges, SparseRelation):
+        # no sparse Δ-seed path for a dense operator — recompute cold
+        _drop_answers(fam, stats)
+        return
+    # one batched delta-restart pass repairs every warm answer:
+    # bucketed to a power of two with inert 0̄ rows, one SpMM per
+    # round (DESIGN.md §5)
+    sources = list(fam.answers.keys())
+    sr = sr_mod.get(fam.plan.strata[0].vf.semiring, lib="np")
+    bb = bucket(len(sources), 1 << 30)
+    prev = np.full((bb, fam.n), sr.zero, sr.dtype)
+    for i, s in enumerate(sources):
+        prev[i] = fam.answers.peek(s)
+    if fam.sharded is not None:
+        # sharded warm repair: the O(nnz(Δ)) seed is derived on the
+        # host, then the graph-axis resume loop re-converges every
+        # row — same loop body as cold sharded serving
+        from repro.distributed import datalog as dd
+        from repro.incremental import delta_seed
+        d0 = delta_seed(delta_op, prev, backend="np")
+        y, _ = dd.sharded_resume_fixpoint(
+            fam.sharded, prev, d0, mesh=graph_mesh,
+            max_iters=fam.max_iters)
+    else:
+        y, _ = delta_restart_fixpoint(fam.edges, delta_op, prev,
+                                      max_iters=fam.max_iters,
+                                      mode="jit")
+    y = np.asarray(y)
+    for i, s in enumerate(sources):
+        fam.answers.replace(s, y[i])
+    stats["answers_repaired"] += len(sources)
+
+
+def _delete_edges(fam: Family, coords, stats: dict, graph_mesh) -> None:
+    from repro.incremental import DeltaEntry
+    fam.kernel_cache.clear()
+    if fam.edge_rel is not None:
+        ent = [DeltaEntry(fam.edge_rel, coords, None, "delete")]
+        fam.db = fam.db.apply_delta(ent)
+        fam.host_db = fam.host_db.apply_delta(ent)
+        fam.edges = planner.materialize_edges(fam.plan, fam.db,
+                                              fam.hints)
+    elif isinstance(fam.edges, SparseRelation):
+        delta_op = operator_delta(fam, coords, None)
+        dh = delta_op.as_np()
+        fam.edges = fam.edges.delete_keys(dh.coords[:int(dh.nnz)])
+    else:
+        vf = fam.plan.strata[0].vf
+        sr = sr_mod.get(vf.semiring)
+        idx = tuple(np.asarray(np.atleast_2d(coords)).T)
+        fam.edges = jnp.asarray(fam.edges).at[idx].set(sr.zero)
+    if fam.sharded is not None:
+        # a deletion rebuilt the operator — re-partition it (the
+        # compiled sharded runners survive unless capacity moved)
+        from repro.distributed import datalog as dd
+        fam.sharded = dd.shard_relation(fam.edges, graph_mesh)
+    # deletion is non-monotone: warm answers may over-derive — drop
+    # them (the plan and compiled runners survive untouched)
+    if fam.init_reads_edges:
+        fam.init_cache.clear()
+    _drop_answers(fam, stats)

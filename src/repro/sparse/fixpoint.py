@@ -109,6 +109,57 @@ def resume_fixpoint(edges: SparseRelation, y0, d0, *,
                      warm=(y0, d0))[:2]
 
 
+def resume_fixpoint_chunk(edges: SparseRelation, y0, d0, it0, *,
+                          max_iters: int):
+    """One bounded slice of the batched GSN loop, carry in and carry out.
+
+    Advances the ``(B, n)`` pair ``(y0, d0)`` by **at most** ``max_iters``
+    rounds of the exact :func:`_batched_jit_fixpoint` body (one SpMM per
+    round, per-row convergence masks) and returns the full carry
+    ``(y, d, it_rows)`` instead of just the solution — so a caller can
+    chain chunks: splice new init columns into freed rows between calls,
+    extract converged rows early, and never pay for a full re-convergence.
+    This is the continuous-batching serve loop's compiled unit
+    (:mod:`repro.serve.slots`, DESIGN.md §7); jit it with ``max_iters``
+    closed over so the chunk length is static.
+
+    ``it0`` is the ``(B,)`` per-row iteration counter carried across
+    chunks; rows whose Δ-row is all-0̄ are converged (or inert padding)
+    and their counters stop.  Identical chaining invariant to
+    :func:`resume_fixpoint`: ``y0`` is a pre-fixpoint and
+    ``d0 = F(y0) ⊖ y0`` its pending delta, which the chunk preserves.
+    """
+    if edges.arity != 2 or edges.shape[0] != edges.shape[1]:
+        raise ValueError(f"recursive expansion needs a square binary edge "
+                         f"relation, got shape {edges.shape}")
+    sr = sr_mod.get(edges.semiring)
+    if sr.minus is None:
+        raise ValueError(f"semiring {sr.name} lacks ⊖; "
+                         "GSN needs an idempotent complete lattice")
+    from repro.distributed import sharding as sh
+
+    edges = edges.as_jnp()
+    y = sh.constrain(jnp.asarray(y0).T, ("vertex", "query_batch"))
+    d = sh.constrain(jnp.asarray(d0).T, ("vertex", "query_batch"))
+    it_rows = jnp.asarray(it0, jnp.int32)
+
+    def cond(carry):
+        y, d, it_rows, it = carry
+        return jnp.logical_and(jnp.any(d != sr.zero), it < max_iters)
+
+    def body(carry):
+        y, d, it_rows, it = carry
+        live = jnp.any(d != sr.zero, axis=0)
+        y_new = sh.constrain(sr.add(y, d), ("vertex", "query_batch"))
+        d_new = sr.minus(contract.spmm(edges, d, transpose=True), y_new)
+        d_new = sh.constrain(d_new, ("vertex", "query_batch"))
+        return y_new, d_new, it_rows + live, it + 1
+
+    y, d, it_rows, _ = jax.lax.while_loop(
+        cond, body, (y, d, it_rows, jnp.asarray(0)))
+    return y.T, d.T, it_rows
+
+
 def _dispatch(edges, init, *, max_iters, mode, warm=None):
     if edges.arity != 2 or edges.shape[0] != edges.shape[1]:
         raise ValueError(f"recursive expansion needs a square binary edge "

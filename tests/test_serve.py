@@ -77,7 +77,12 @@ def test_compile_cache_reuse_and_buckets():
     assert server.stats["cache_misses"] == 1
     assert server.stats["cache_hits"] == 2
     server.submit("reach", 3)
-    server.run_until_idle()          # bucket 1 → second compile
+    server.run_until_idle()          # lone query → per-source latency
+    assert server.stats["latency_routed"] == 1  # path, no batched compile
+    assert server.stats["cache_misses"] == 1
+    server.submit("reach", 3)
+    server.submit("reach", 5)
+    server.run_until_idle()          # bucket 2 → second compile
     assert server.stats["cache_misses"] == 2
 
 

@@ -1,0 +1,224 @@
+"""Randomized soak of the continuous scheduler: hundreds of interleaved
+queries, edge mutations, and backpressure bursts across two families,
+checked against independent host oracles (BFS / Bellman-Ford) and — on
+sampled requests — the offline engine itself.
+
+Invariants exercised per ISSUE 6:
+* no accepted request is lost or delivered twice;
+* per family, answers (and update acknowledgements) are delivered in
+  submission order, no matter how far out of order rows converged;
+* every answer equals the offline single-source fixpoint **against the
+  graph version in force when the request was submitted** (the update
+  fence), including warm-cache hits and delta-repaired answers;
+* shed requests (queue at bound) raise and are never partially served.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from helpers import given, settings, strategies as st
+
+from repro.core import engine
+from repro.core.program import run_program
+from repro.datalog import datasets, programs
+from repro.serve import BackpressureError, ContinuousServer
+from repro.serve.family import QueryRequest, UpdateRequest
+
+
+def _bfs(n, edge_set, source):
+    """Boolean reachability oracle over a python edge set."""
+    adj = {}
+    for u, v in edge_set:
+        adj.setdefault(u, []).append(v)
+    seen = np.zeros(n, bool)
+    seen[source] = True
+    frontier = [source]
+    while frontier:
+        nxt = []
+        for u in frontier:
+            for v in adj.get(u, ()):
+                if not seen[v]:
+                    seen[v] = True
+                    nxt.append(v)
+        frontier = nxt
+    return seen
+
+
+def _bellman_ford(n, wedges, source):
+    """Min-plus distance oracle (float32, inf = unreachable)."""
+    dist = np.full(n, np.inf, np.float32)
+    dist[source] = 0.0
+    for _ in range(n):
+        changed = False
+        for (u, v), w in wedges.items():
+            nd = dist[u] + w
+            if nd < dist[v]:
+                dist[v] = np.float32(nd)
+                changed = True
+        if not changed:
+            break
+    return dist
+
+
+@settings(max_examples=2, deadline=None)
+@given(seed=st.integers(0, 2**20), chunk_iters=st.sampled_from([1, 2, 4]),
+       host_kernels=st.booleans())
+def test_soak_continuous_scheduler(seed, chunk_iters, host_kernels):
+    rng = np.random.default_rng(seed)
+    n_bm, n_ss = 60, 50
+
+    g_bm = datasets.erdos_renyi(n_bm, 2.5, seed=seed % 97)
+    schema = programs.bm(a=0).original.schema
+    db_bm = engine.Database(
+        schema, {"id": n_bm},
+        {"E": g_bm.sparse_adjacency(), "V": jnp.ones((n_bm,), bool)})
+
+    g_ss = datasets.erdos_renyi(n_ss, 3.0, seed=(seed + 1) % 89,
+                                weighted=True, wmax=4)
+    mk_ss = lambda a: programs.sssp(a=a, wmax=4, dmax=48).optimized
+    db_ss = programs.sssp(a=0, wmax=4, dmax=48).make_db(g_ss)
+
+    cs = ContinuousServer(max_batch=8, chunk_iters=chunk_iters,
+                          queue_limit=16, warm_answers=32,
+                          host_kernels=host_kernels)
+    cs.register("reach", lambda a: programs.bm(a=a).optimized, db_bm,
+                weight=2)
+    cs.register("sssp", mk_ss, db_ss,
+                edges=g_ss.sparse_adjacency(semiring="trop"))
+
+    # graph-version bookkeeping for the reach family (updates target it
+    # exclusively); version v's edge set feeds the BFS oracle
+    eh = g_bm.sparse_adjacency().as_np()
+    edge_sets = [{(int(u), int(v))
+                  for u, v in np.asarray(eh.coords[:int(eh.nnz)])}]
+    wedges_ss = {(int(u), int(v)): float(w) for (u, v), w in
+                 zip(g_ss.edges, g_ss.weights)}
+
+    accepted = []        # (request, family, version-at-submission)
+    updates = []
+    delivered = []
+    shed = 0
+
+    def submit_reach(source):
+        nonlocal shed
+        try:
+            req = cs.submit("reach", source)
+        except BackpressureError:
+            shed += 1
+            return
+        accepted.append((req, "reach", len(edge_sets) - 1))
+
+    def submit_sssp(source):
+        nonlocal shed
+        try:
+            req = cs.submit("sssp", source)
+        except BackpressureError:
+            shed += 1
+            return
+        accepted.append((req, "sssp", 0))
+
+    n_events = 300
+    for i in range(n_events):
+        roll = rng.random()
+        if roll < 0.45:
+            submit_reach(int(rng.integers(0, n_bm)))
+        elif roll < 0.80:
+            submit_sssp(int(rng.integers(0, n_ss)))
+        elif roll < 0.88 and len(edge_sets) <= 5:
+            cur = edge_sets[-1]
+            if roll < 0.84 or not cur:       # merge a fresh random edge
+                u, v = (int(x) for x in rng.integers(0, n_bm, 2))
+                if u == v:
+                    v = (v + 1) % n_bm
+                updates.append(cs.submit_update("reach", [[u, v]]))
+                edge_sets.append(cur | {(u, v)})
+            else:                            # delete an existing edge
+                u, v = list(cur)[int(rng.integers(0, len(cur)))]
+                updates.append(
+                    cs.submit_update("reach", [[u, v]], op="delete"))
+                edge_sets.append(cur - {(u, v)})
+            accepted.append((updates[-1], "reach", len(edge_sets) - 1))
+        elif roll < 0.93:
+            # burst: slam the queue past its bound to force shedding
+            for _ in range(25):
+                submit_reach(int(rng.integers(0, n_bm)))
+        else:
+            delivered.extend(cs.step())
+        if rng.random() < 0.3:
+            delivered.extend(cs.step())
+    while cs.pending():
+        delivered.extend(cs.step())
+
+    st_ = cs.stats()
+    assert shed == st_["shed"] and shed > 0, \
+        "bursts must force backpressure for this soak to mean anything"
+
+    # --- no loss, no duplication -------------------------------------------
+    ids = [id(r) for r in delivered]
+    assert len(ids) == len(set(ids)), "a request was delivered twice"
+    assert len(delivered) == len(accepted), \
+        f"{len(accepted)} accepted but {len(delivered)} delivered"
+    for req, _, _ in accepted:
+        assert req.done_s > 0.0, "an accepted request was never finished"
+
+    # --- FIFO-per-family delivery ------------------------------------------
+    for fam_name in ("reach", "sssp"):
+        sub_order = [r for r, f, _ in accepted if f == fam_name]
+        del_order = [r for r in delivered
+                     if (r.family if isinstance(r, QueryRequest)
+                         else r.family) == fam_name]
+        assert del_order == sub_order, \
+            f"{fam_name}: delivery order diverged from submission order"
+
+    # --- every update applied ----------------------------------------------
+    for u in updates:
+        assert u.applied and u.error is None, u.error
+
+    # --- exactness against the version in force at submission --------------
+    reach_oracle = {}
+    for req, fam_name, version in accepted:
+        if isinstance(req, UpdateRequest):
+            continue
+        assert req.error is None, req.error
+        got = np.asarray(req.result)
+        if fam_name == "reach":
+            key = (version, req.source)
+            if key not in reach_oracle:
+                reach_oracle[key] = _bfs(n_bm, edge_sets[version],
+                                         req.source)
+            assert np.array_equal(got, reach_oracle[key]), \
+                (req.source, version)
+        else:
+            assert np.array_equal(
+                got, _bellman_ford(n_ss, wedges_ss, req.source)), \
+                req.source
+
+    # --- the host oracles agree with the offline engine (sampled) ----------
+    final_db = engine.Database(
+        schema, {"id": n_bm},
+        {"E": _edges_rel(n_bm, edge_sets[-1]),
+         "V": jnp.ones((n_bm,), bool)})
+    for s in rng.integers(0, n_bm, 3):
+        ans, _ = run_program(programs.bm(a=int(s)).optimized, final_db,
+                             mode="seminaive")
+        assert np.array_equal(np.asarray(ans),
+                              _bfs(n_bm, edge_sets[-1], int(s)))
+    for s in rng.integers(0, n_ss, 2):
+        ans, _ = run_program(mk_ss(int(s)), db_ss, mode="seminaive")
+        assert np.array_equal(np.asarray(ans),
+                              _bellman_ford(n_ss, wedges_ss, int(s)))
+
+
+def _edges_rel(n, edge_set):
+    from repro.sparse import SparseRelation
+    if not edge_set:
+        coords = np.zeros((0, 2), np.int64)
+    else:
+        coords = np.asarray(sorted(edge_set), np.int64)
+    return SparseRelation.from_coo(
+        coords, np.ones(len(coords), bool), (n, n), "bool")
