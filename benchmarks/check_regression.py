@@ -49,7 +49,7 @@ import sys
 #: key fragments → metric direction
 LOWER_BETTER = ("latency", "p50", "p95", "p99")
 LOWER_SUFFIXES = ("_s", "_ms")
-HIGHER_BETTER = ("qps", "speedup", "throughput")
+HIGHER_BETTER = ("qps", "speedup", "throughput", "reduction")
 
 #: per-fragment default thresholds (overridable via --metric-threshold);
 #: tail percentiles are order statistics over a few hundred requests —

@@ -170,6 +170,43 @@ class CostEstimate:
 
 
 @dataclasses.dataclass
+class ShardedCostModel:
+    """Measured constants behind the ``sparse_sharded`` candidate
+    (DESIGN.md §8, calibrated against ``BENCH_sharded.json``).
+
+    Sharding pays a fixed per-iteration toll — D synchronizing
+    collectives plus the exchanged frontier bytes — so it only wins
+    once per-device work dwarfs that toll.  ``min_work_per_device`` is
+    the measured crossover: below it the partition is *rejected*
+    outright (the PR-5 model picked sharding where one device was
+    30–50× faster).  Above it, the candidate is priced with its sync
+    and byte terms so close calls still compare honestly.  The
+    BENCH_sharded.json sweep with the Δ-sparse exchange measures D=8
+    already winning ~1.4× at 1.1e5 work/device/iter, so the floor sits
+    well under that; toy graphs (≲1e4 work/device) stay single-device.
+    Tests monkeypatch the fields to pin either side of the crossover.
+    """
+
+    #: (nnz + n)/D per iteration below which sharding cannot recoup its
+    #: collective overhead — from the BENCH_sharded.json crossover sweep
+    min_work_per_device: float = 2.0e4
+    #: flop-equivalent cost of one synchronizing collective per device
+    sync_flops_per_device: float = 1.0e4
+    #: flop-equivalent cost per exchanged byte
+    byte_flops: float = 0.05
+
+    def sync_flops(self, d: int, backend: str) -> float:
+        # host-simulated devices share cores: collectives serialize,
+        # so the toll grows ~D per participant instead of staying flat
+        scale = d if backend == "cpu" else 1
+        return self.sync_flops_per_device * d * scale
+
+
+#: module-level so tests and calibration sweeps can patch it in place
+SHARDED_COST = ShardedCostModel()
+
+
+@dataclasses.dataclass
 class StratumPlan:
     """The physical choice for one fixpoint stratum."""
 
@@ -518,15 +555,16 @@ def _plan_stratum(prog, stratum, si, db, hints, *, objective, forced,
             rejected["sparse_jit"] = why
             rejected["sparse_frontier"] = why
 
-    # -- graph-axis sharded candidate (DESIGN.md §6) -----------------------
-    # row-partitioned SpMM under shard_map: per-iteration critical-path
-    # work is the worst shard's O(nnz/D) contraction plus its O(n/D)
-    # carry update.  The frontier exchange (one all-gather of n values
-    # to D-1 peers) is *reported* in bytes_per_iter; selection — like
-    # every candidate here — compares flops only, so attaching a D ≥ 2
-    # graph mesh routes every feasible vector stratum through the
-    # partition (the mesh is an instruction with pricing, not a hint
-    # the model may overrule on communication grounds)
+    # -- graph-axis sharded candidate (DESIGN.md §6/§8) --------------------
+    # row-partitioned SpMM under shard_map with the Δ-sparse frontier
+    # exchange: per-iteration critical-path work is the balanced shard's
+    # frontier-proportional expansion (amortized e_nnz/trips, like the
+    # host worklist) plus its O(n/D) carry update — but every iteration
+    # also pays D synchronizing collectives and the exchanged bytes.
+    # The mesh is an *offer*, not an instruction: below the measured
+    # crossover the candidate is rejected so the single-device runners
+    # keep regimes they win (the old always-shard policy was the
+    # BENCH_sharded.json 30–50× mispick).
     partition = None
     if mesh is not None:
         if vf is None:
@@ -544,15 +582,33 @@ def _plan_stratum(prog, stratum, si, db, hints, *, objective, forced,
                     "linear operator materializes dense (no sparse "
                     "binary EDB fast path)")
             else:
-                considered["sparse_sharded"] = CostEstimate(
-                    (e_nnz + n_vec) / d_ax,
-                    12.0 * e_nnz / d_ax + 4.0 * n_vec * (d_ax - 1),
-                    trips)
-                partition = (
-                    f"graph axis D={d_ax} × {nb} dst rows/shard; "
-                    f"nnz(E)={int(e_nnz)} "
-                    f"(≈{-(-int(e_nnz) // d_ax)}/shard); "
-                    f"frontier all-gather {4 * n_vec * (d_ax - 1)} B/iter")
+                cm = SHARDED_COST
+                work_dev = (e_nnz + n_vec) / d_ax
+                if work_dev < cm.min_work_per_device:
+                    rejected["sparse_sharded"] = (
+                        f"below the sharding crossover: "
+                        f"≈{work_dev:.3g} work/device/iter < "
+                        f"{cm.min_work_per_device:g} measured minimum "
+                        f"(BENCH_sharded.json) — one device wins")
+                else:
+                    itemsize = np.dtype(
+                        sr_mod.get(vf.semiring).dtype).itemsize
+                    dense_b = float(itemsize) * n_vec * (d_ax - 1)
+                    delta_b = ((4.0 + itemsize) * (n_vec / trips)
+                               * (d_ax - 1))
+                    xbytes = min(dense_b, delta_b)
+                    sync = cm.sync_flops(d_ax, jax.default_backend())
+                    considered["sparse_sharded"] = CostEstimate(
+                        e_nnz / trips + n_vec / d_ax + sync
+                        + cm.byte_flops * xbytes,
+                        12.0 * e_nnz / (trips * d_ax) + xbytes,
+                        trips)
+                    partition = (
+                        f"graph axis D={d_ax} × {nb} dst rows/shard; "
+                        f"nnz(E)={int(e_nnz)} "
+                        f"(≈{-(-int(e_nnz) // d_ax)}/shard); "
+                        f"Δ-exchange ≈{int(xbytes)} B/iter "
+                        f"(dense all-gather {int(dense_b)} B)")
 
     # the host worklist only pays off for single-shot latency on a CPU
     # host; batched serving and accelerators want the staged SpMM loop

@@ -440,3 +440,44 @@ def test_hlo_cost_model_prices_candidates():
     got, _ = run_program(programs.bm(a=0).optimized, db, plan=plan)
     ref, _ = run_program(programs.bm(a=0).optimized, db, mode="naive")
     assert np.array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_sharded_crossover_pins_pick_to_empirical_winner():
+    """Regression for the BENCH_sharded.json mispick: offered an
+    8-device mesh, the planner must keep the single-device runner below
+    the measured crossover (toy graphs, where BENCH_sharded.json
+    records D=8 losing ~0.8×) and take the partition above it — which
+    with the Δ-sparse exchange already happens at 100k vertices
+    (measured ~1.4×), not just at multi-million-edge packs.  All sides
+    use the planning-only nnz/shape metadata — no big buffers
+    materialize."""
+    import dataclasses
+
+    b = programs.sssp(a=0, wmax=4, dmax=40)
+    g = datasets.erdos_renyi(64, 2.5, seed=4, weighted=True, wmax=4)
+    seed_rel = g.sparse_adjacency(semiring="trop")
+
+    def plan_at(n, nnz, objective):
+        edges = dataclasses.replace(seed_rel, nnz=np.asarray(nnz),
+                                    shape=(n, n))
+        db = engine.Database(b.original.schema,
+                             {"id": n, "w": 4, "d": 40}, {})
+        return planner.plan_program(b.optimized, db, edges=edges,
+                                    mesh=8, objective=objective)
+
+    # below the crossover: 20k vertices / 80k edges ≈ 12.5k work/device
+    # per iteration — the bench's small size measures one device winning
+    for objective in ("latency", "throughput"):
+        sp = plan_at(20_000, 80_000, objective).strata[0]
+        assert sp.runner != "sparse_sharded", objective
+        assert "crossover" in sp.rejected["sparse_sharded"]
+        assert sp.partition is None
+
+    # above the crossover: both the 100k regime (where the PR-5 dense
+    # exchange lost 30–50× but the Δ-sparse exchange wins ~1.4×) and
+    # the multi-million-edge packs — the pick follows the measurement
+    for n, nnz in ((100_000, 800_000), (2_000_000, 16_000_000)):
+        sp = plan_at(n, nnz, "throughput").strata[0]
+        assert sp.runner == "sparse_sharded", n
+        assert "Δ-exchange" in sp.partition
+        assert "sparse_sharded" in sp.considered

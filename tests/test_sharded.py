@@ -76,12 +76,17 @@ def test_shard_roundtrip_property(data):
     sh = dd.shard_relation(rel, d)
     assert sh.d == d
     assert sh.row_block * d >= n
-    # every shard's live tuples carry block-local destinations
+    # every shard's live tuples carry block-local destinations and
+    # sources that invert to real vertices under the balance relabeling
     host = sh.as_np()
     for s in range(d):
         k = int(host.nnz[s])
         assert (host.coords[s, :k, 1] < sh.row_block).all()
-        assert (host.coords[s, :k, 0] < n).all()
+        src = host.coords[s, :k, 0]
+        assert (src < sh.n_pad).all()
+        if host.inv is not None:
+            src = host.inv[src]
+        assert (src < n).all()
     # live counts partition the coalesced nnz exactly
     assert int(np.asarray(host.nnz).sum()) == int(np.asarray(
         rel.as_np().nnz))
@@ -89,17 +94,44 @@ def test_shard_roundtrip_property(data):
 
 
 def test_shard_ragged_capacity_is_worst_shard():
-    """All edges landing in one destination block: one hot shard sets
-    the uniform capacity, the rest stay all-padding."""
+    """All edges landing on one destination vertex: with ``balance=False``
+    one hot shard sets the uniform capacity and the rest stay
+    all-padding; the default balance relabeling cannot split a single
+    hot *vertex* either, but must still round-trip exactly."""
     n, d = 24, 4
     coords = np.stack([np.arange(12) % n, np.full(12, 1)], axis=1)
     rel = SparseRelation.from_coo(coords, np.ones(12, bool), (n, n),
                                   "bool", lib="np")
-    sh = dd.shard_relation(rel, d)
+    sh = dd.shard_relation(rel, d, balance=False)
     nnz = np.asarray(sh.as_np().nnz)
     assert nnz.tolist() == [12, 0, 0, 0]
     assert sh.capacity == 12
+    assert sh.perm is None
     assert np.array_equal(_dense(dd.unshard(sh)), _dense(rel))
+    bal = dd.shard_relation(rel, d)
+    assert bal.capacity == 12  # one vertex owns every edge: no split
+    assert np.array_equal(_dense(dd.unshard(bal)), _dense(rel))
+
+
+def test_balance_permutation_evens_edge_counts():
+    """The snake-deal relabeling bounds the worst shard near the mean on
+    a skewed graph, while a contiguous split concentrates the hubs."""
+    rng = np.random.default_rng(0)
+    n, d = 1024, 8
+    # hub-heavy destinations: low vertex ids get most edges
+    dst = (rng.pareto(1.0, 6000) * 8).astype(np.int64) % n
+    src = rng.integers(0, n, 6000)
+    rel = SparseRelation.from_coo(np.stack([src, dst], axis=1),
+                                  np.ones(6000, bool), (n, n), "bool",
+                                  lib="np")
+    plain = dd.shard_relation(rel, d, balance=False)
+    bal = dd.shard_relation(rel, d)
+    total = bal.total_nnz()
+    assert bal.total_nnz() == plain.total_nnz()
+    mean = total / d
+    assert bal.capacity <= 1.25 * mean
+    assert bal.capacity < plain.capacity
+    assert np.array_equal(_dense(dd.unshard(bal)), _dense(rel))
 
 
 def test_shard_requires_binary():
@@ -184,24 +216,41 @@ def _sssp_plan(mesh, n=60, seed=4):
 
 @pytest.mark.skipif(not CPU, reason="golden plans assume the CPU backend")
 def test_explain_golden_sharded_sssp():
-    """Full golden for a sharded SSSP plan: the partition line, the
-    priced candidates, and the device-dimension pick (mesh as a plain
-    int D, so this runs on any host)."""
+    """Full golden for a mesh-priced SSSP plan below the sharding
+    crossover: the mesh is offered, the crossover rejection is shown,
+    and the single-device frontier runner keeps the regime it wins
+    (the old model's 30–50× mispick, BENCH_sharded.json)."""
     import re
     plan, _ = _sssp_plan(mesh=8)
     text = re.sub(r"signature=[0-9a-f]{16}", "signature=<sig>",
                   planner.explain(plan))
     assert text == """\
 plan SSSP_opt  mode=auto  objective=latency  signature=<sig>
-  stratum 0  runner=sparse_sharded  idbs=SP
-    reason      min est. total flops among 3 feasible candidates
-    partition   graph axis D=8 × 8 dst rows/shard; nnz(E)=152 (≈19/shard); frontier all-gather 1680 B/iter
-    cost        26.5 flops/iter × 5 iters  [analytic]
-    considered  sparse_sharded=132  sparse_frontier=452  sparse_jit=1.06e+03
+  stratum 0  runner=sparse_frontier  idbs=SP
+    reason      min est. total flops among 2 feasible candidates (cpu host ⇒ frontier worklist)
+    cost        90.4 flops/iter × 5 iters  [analytic]
+    considered  sparse_frontier=452  sparse_jit=1.06e+03
     rejected    dense_gsn: edges override requires a vector runner (the engine paths read the stored relations, not the override)
     rejected    dense_naive: edges override requires a vector runner (the engine paths read the stored relations, not the override)
+    rejected    sparse_sharded: below the sharding crossover: ≈26.5 work/device/iter < 20000 measured minimum (BENCH_sharded.json) — one device wins
     rejected    vector_dense: linear operator is sparse — the SpMV/SpMM runners cover it
   outputs    SPans"""
+
+
+@pytest.mark.skipif(not CPU, reason="golden plans assume the CPU backend")
+def test_explain_partition_line_above_crossover(monkeypatch):
+    """Same program with the crossover floor patched away: the partition
+    line reports the Δ-exchange byte pricing next to the dense
+    all-gather it displaces."""
+    monkeypatch.setattr(planner.SHARDED_COST, "min_work_per_device", 0.0)
+    monkeypatch.setattr(planner.SHARDED_COST, "sync_flops_per_device", 0.0)
+    plan, _ = _sssp_plan(mesh=8)
+    sp = plan.strata[0]
+    assert sp.runner == "sparse_sharded"
+    assert sp.partition == ("graph axis D=8 × 8 dst rows/shard; "
+                            "nnz(E)=152 (≈19/shard); "
+                            "Δ-exchange ≈672 B/iter "
+                            "(dense all-gather 1680 B)")
 
 
 def test_planner_rejects_single_device_mesh():
@@ -397,12 +446,16 @@ def test_sharded_rejects_mismatched_d():
 
 
 @needs_devices(2)
-def test_serve_graph_mesh_parity():
+def test_serve_graph_mesh_parity(monkeypatch):
     """A graph-mesh server answers queries and applies warm-repaired
     updates identically to a plain single-device server, with compiled
-    runners keyed (signature, B-bucket, D)."""
+    runners keyed (signature, B-bucket, D).  The crossover floor is
+    patched away so the 150-vertex toy graph still exercises the
+    sharded serve path (real planning would keep it single-device)."""
     from repro.launch.datalog_serve import DatalogServer
 
+    monkeypatch.setattr(planner.SHARDED_COST, "min_work_per_device", 0.0)
+    monkeypatch.setattr(planner.SHARDED_COST, "sync_flops_per_device", 0.0)
     g = datasets.powerlaw(150, 3, seed=2)
     b0 = programs.bm(a=0)
     db = engine.Database(b0.original.schema, {"id": g.n},
@@ -435,3 +488,169 @@ def test_serve_graph_mesh_parity():
     assert up.applied and up0.applied
     assert np.array_equal(r.result, r0.result)
     assert srv.stats["answers_repaired"] == 3
+
+
+# --------------------------------------------------------------------------
+# Δ-sparse exchange ≡ dense all-gather reference (DESIGN.md §8)
+# --------------------------------------------------------------------------
+
+
+def _both_exchanges(rel, init, mesh, **kw):
+    ya, ia = dd.sharded_seminaive_fixpoint(rel, init, mesh=mesh,
+                                           exchange="auto", **kw)
+    yd, id_ = dd.sharded_seminaive_fixpoint(rel, init, mesh=mesh,
+                                            exchange="dense", **kw)
+    assert np.array_equal(np.asarray(ya), np.asarray(yd))
+    assert np.array_equal(np.asarray(ia), np.asarray(id_))
+    return np.asarray(ya), np.asarray(ia)
+
+
+@needs_devices(2)
+@settings(max_examples=8, deadline=None)
+@given(data=st.data())
+def test_exchange_matches_dense_property(data):
+    """Δ-sparse exchange ≡ the dense all-gather reference bit-for-bit:
+    random graphs (ragged per-shard nnz, duplicate edges), bool/trop,
+    single and batched (B, n) inits, D ∈ {2, NDEV}."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31 - 1)))
+    semiring = data.draw(st.sampled_from(("bool", "trop")))
+    n = data.draw(st.integers(8, 60))
+    nnz = data.draw(st.integers(0, 150))
+    d = data.draw(st.sampled_from((2, min(8, NDEV))))
+    b = data.draw(st.sampled_from((0, 1, 3)))  # 0 = unbatched
+    rel = _random_rel(rng, n, semiring, nnz)
+    if b == 0:
+        init = _init_for(semiring, n, source=int(rng.integers(0, n)))
+    else:
+        init = np.stack([
+            _init_for(semiring, n, source=int(rng.integers(0, n)))
+            for _ in range(b)])
+    mesh = make_graph_mesh(d)
+    y, it = _both_exchanges(rel, init, mesh)
+    y1, it1 = sparse_seminaive_fixpoint(rel, init, mode="jit")
+    assert np.array_equal(y, np.asarray(y1))
+    assert np.array_equal(np.asarray(it), np.asarray(it1))
+
+
+@needs_devices(2)
+def test_exchange_matches_dense_maxplus_dag():
+    """The third lattice semiring (longest path on a DAG), both packed
+    and unbatched, across the exchange modes."""
+    rel = _graph_rel("maxplus")
+    n = rel.shape[0]
+    mesh = make_graph_mesh(min(8, NDEV))
+    _both_exchanges(rel, _init_for("maxplus", n), mesh)
+    init = np.stack([_init_for("maxplus", n, source=s) for s in (0, 3)])
+    y, _ = _both_exchanges(rel, init, mesh)
+    y1, _ = sparse_seminaive_fixpoint(rel, init, mode="jit")
+    assert np.array_equal(y, np.asarray(y1))
+
+
+@needs_devices(2)
+def test_exchange_fallback_boundary_rounds():
+    """The density-threshold fallback boundary: tiny expansion caps
+    force dense rounds, roomy caps keep every round sparse, and the
+    round counters account for every derive — all bit-exact."""
+    rel = _graph_rel("bool")
+    n = rel.shape[0]
+    init = _init_for("bool", n)
+    mesh = make_graph_mesh(min(8, NDEV))
+    sh = dd.shard_relation(rel, mesh)
+    yd, itd = dd.sharded_seminaive_fixpoint(sh, init, mesh=mesh,
+                                            exchange="dense")
+
+    # expansion cap 1: any nonempty frontier overflows → dense fallback
+    y, it, rounds = dd.sharded_seminaive_fixpoint_stats(
+        sh, init, mesh=mesh, exchange_caps=((1, 1),))
+    assert np.array_equal(np.asarray(y), np.asarray(yd))
+    assert int(it) == int(itd)
+    rounds = np.asarray(rounds)
+    assert rounds.sum() == int(it) + 1  # cold derive + one per iteration
+    assert rounds[-1] >= 1
+
+    # roomy caps: every round stays on the sparse tier
+    y2, it2, rounds2 = dd.sharded_seminaive_fixpoint_stats(
+        sh, init, mesh=mesh,
+        exchange_caps=((sh.row_block, sh.capacity),))
+    assert np.array_equal(np.asarray(y2), np.asarray(yd))
+    rounds2 = np.asarray(rounds2)
+    assert rounds2[-1] == 0
+    assert rounds2.sum() == int(it2) + 1
+
+    report = dd.exchange_byte_report(sh, rounds2,
+                                     exchange_caps=((sh.row_block,
+                                                     sh.capacity),))
+    assert report["rounds"] == rounds2.tolist()
+    assert report["bytes_total"] > 0
+    assert report["dense_bytes_per_iter"] == sh.n_pad * \
+        dd.payload_row_bytes("bool", 1)
+
+
+@needs_devices(2)
+@pytest.mark.parametrize("d", [2, 8])
+def test_exchange_warm_resume_matches_dense(d):
+    """Warm resumes after apply_delta (which rebuilds the exchange
+    geometry) agree across exchange modes and with a cold recompute."""
+    if NDEV < d:
+        pytest.skip(f"needs {d} devices")
+    rel = _graph_rel("trop", n=72, seed=3)
+    n = rel.shape[0]
+    init = _init_for("trop", n)
+    mesh = make_graph_mesh(d)
+    sh = dd.shard_relation(rel, mesh)
+    y0, _ = dd.sharded_seminaive_fixpoint(sh, init, mesh=mesh)
+    coords = np.array([[0, n - 1], [n - 1, 5]])
+    vals = np.ones(2, np.float32)
+    sh2 = sh.apply_delta(coords, vals)
+    delta = SparseRelation.from_coo(coords, vals, rel.shape, "trop",
+                                    lib="np")
+    d0 = delta_seed(delta, np.asarray(y0), backend="np")
+    ya, ia = dd.sharded_resume_fixpoint(sh2, np.asarray(y0), d0,
+                                        mesh=mesh, exchange="auto")
+    yd, idn = dd.sharded_resume_fixpoint(sh2, np.asarray(y0), d0,
+                                         mesh=mesh, exchange="dense")
+    assert np.array_equal(np.asarray(ya), np.asarray(yd))
+    assert int(ia) == int(idn)
+    yf, _ = dd.sharded_seminaive_fixpoint(sh2, init, mesh=mesh)
+    assert np.array_equal(np.asarray(ya), np.asarray(yf))
+
+
+@needs_devices(2)
+def test_exchange_without_geometry_falls_back_dense():
+    """Relations lacking the cached exchange geometry (older pytrees,
+    hand-built shards) silently run the dense reference path."""
+    import dataclasses as dc
+
+    rel = _graph_rel("bool")
+    n = rel.shape[0]
+    init = _init_for("bool", n)
+    mesh = make_graph_mesh(min(8, NDEV))
+    sh = dd.shard_relation(rel, mesh)
+    bare = dc.replace(sh, ssrc=None, sdst=None, sval=None, usrc=None,
+                      ustart=None)
+    assert not bare.has_exchange_geometry
+    y, it, rounds = dd.sharded_seminaive_fixpoint_stats(
+        bare, init, mesh=mesh)
+    yd, itd = dd.sharded_seminaive_fixpoint(sh, init, mesh=mesh,
+                                            exchange="dense")
+    assert np.array_equal(np.asarray(y), np.asarray(yd))
+    assert int(it) == int(itd)
+    assert np.asarray(rounds).tolist() == [int(it) + 1]
+
+    plain = dd.shard_relation(rel, mesh, balance=False)
+    y2, _ = dd.sharded_seminaive_fixpoint(plain, init, mesh=mesh)
+    assert np.array_equal(np.asarray(y2), np.asarray(yd))
+
+
+@needs_devices(2)
+def test_exchange_contract_nat_with_balance():
+    """ℕ∞ has no ⊖, so it only reaches the one-shot contract — which
+    keeps the dense exchange but must invert the balance relabeling."""
+    rng = np.random.default_rng(11)
+    rel = _random_rel(rng, 50, "nat", 180)
+    x = rng.random(50).astype(np.float32)
+    mesh = make_graph_mesh(min(8, NDEV))
+    got = dd.sharded_contract(rel, x, mesh=mesh)
+    want = contract.vspm(jnp.asarray(x), rel.as_jnp())
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5)
