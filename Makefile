@@ -26,6 +26,16 @@
 #                      committed baselines (exits 1 on >25% regression;
 #                      the unitless sharded speedup gets a tighter 20%
 #                      gate so the crossover claim cannot quietly rot)
+#   make bench-kernel — fused SpMM vs jnp sweep (semiring × B × density;
+#                      CI gate: exits 1 below the 1.5× bool B=64 serve-
+#                      shape floor or on kernel/oracle divergence;
+#                      BENCH_kernels.json) + the measured roofline
+#                      (results/roofline.json).  REPRO_PALLAS_INTERPRET
+#                      routes dispatch-level ops through the Pallas
+#                      kernels in interpret mode; the perf sweep always
+#                      times the hardware backend.
+#   make test-kernel — fast fused-kernel parity suite in Pallas
+#                      interpret mode (CI test matrix step)
 
 PY      ?= python
 PYPATH  := src
@@ -81,5 +91,13 @@ bench-check:
 	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.check_regression \
 		--metric-threshold speedup=0.2
 
+bench-kernel:
+	REPRO_PALLAS_INTERPRET=1 PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.kernel_bench
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.roofline
+
+test-kernel:
+	REPRO_PALLAS_INTERPRET=1 PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q tests/test_coo_spmm.py
+
 .PHONY: test test-all test-dist lint bench-smoke bench-sparse \
-	bench-serve bench-plan bench-incremental bench-sharded bench-check
+	bench-serve bench-plan bench-incremental bench-sharded bench-check \
+	bench-kernel test-kernel

@@ -4,14 +4,14 @@
   fig13  — synthesis/invariant-inference time + search-space size
   fig11  — FGH speedups, rule-based group (BM/CC/SSSP + GSN)
   fig12  — FGH speedups, CEGIS group (WS/BC/R/MLM) vs data size
-  kernel — semiring matmul engine throughput
+  kernel — semiring matmul + fused SpMM throughput (BENCH_kernels.json)
   sparse — dense-vs-sparse scaling (BM/TC family)
   serve  — batched multi-source serving throughput (BENCH_serve.json)
   plan   — planner-vs-empirical crossover checks
   incremental — streaming-update maintenance (BENCH_incremental.json)
   sharded — graph-axis sharded fixpoints (BENCH_sharded.json)
-  (roofline runs separately on dry-run output: benchmarks/roofline.py;
-  regression gating against committed BENCH_*.json baselines:
+  roofline — measured peaks + achieved bytes/s of the SpMM hot loop
+  (regression gating against committed BENCH_*.json baselines:
   benchmarks/check_regression.py)
 
 Suites are discovered lazily: one suite failing to import (a missing
@@ -37,7 +37,10 @@ SUITES: dict[str, tuple[str, str, dict, dict]] = {
     "fig12": ("benchmarks.fgh_scaling", "run",
               {"sizes": (48, 96)}, {"sizes": (32,)}),
     "kernel": ("benchmarks.kernel_bench", "run", {},
-               {"sizes": (128,), "semirings": ("bool", "trop")}),
+               {"sizes": (128,), "semirings": ("bool", "trop"),
+                "n": 2000, "batches": (1, 8), "avg_degs": (4,),
+                "spmm_semirings": ("bool", "trop"), "out": None,
+                "gate": False}),
     "sparse": ("benchmarks.sparse_scaling", "run",
                {}, {"sizes": (256,), "big": 2000}),
     "serve": ("benchmarks.serve_batch", "run",
@@ -51,6 +54,9 @@ SUITES: dict[str, tuple[str, str, dict, dict]] = {
     # devices (CI: XLA_FLAGS=--xla_force_host_platform_device_count=8)
     "sharded": ("benchmarks.sharded_scaling", "run", {},
                 {"n": 2000, "out": None}),
+    # measured-peak roofline of the SpMM hot loop (fused vs jnp)
+    "roofline": ("benchmarks.roofline", "run", {},
+                 {"n": 2000, "batches": (8,), "out": None}),
 }
 
 

@@ -58,13 +58,18 @@ from repro.sparse.coo import SparseRelation
 #: is only ever *considered* under ``objective="incremental"`` and is
 #: executed by :func:`repro.incremental.refresh_program`, never by
 #: :func:`execute_plan` (which has no previous solution to restart from).
-RUNNERS = ("delta_restart", "sparse_sharded", "sparse_jit",
-           "sparse_frontier", "vector_dense", "dense_gsn", "dense_naive",
-           "dense_host")
+RUNNERS = ("delta_restart", "sparse_sharded", "sparse_frontier_pallas",
+           "sparse_jit", "sparse_frontier", "vector_dense", "dense_gsn",
+           "dense_naive", "dense_host")
 
 #: single-device runners that execute the vector equation
-#: ``x = init ⊕ x ⊗ E``
-VECTOR_RUNNERS = ("sparse_jit", "sparse_frontier", "vector_dense")
+#: ``x = init ⊕ x ⊗ E``.  "sparse_frontier_pallas" is the fused-kernel
+#: SpMM backend (kernels/coo_spmm.py, DESIGN.md §9): the same staged GSN
+#: loop as "sparse_jit" with the gather→⊗→segment-⊕ advance fused into
+#: one pass — a Pallas kernel on TPU, bit-packed host rounds for 𝔹 on
+#: CPU (see :func:`spmm_exec_backend`).
+VECTOR_RUNNERS = ("sparse_jit", "sparse_frontier", "sparse_frontier_pallas",
+                  "vector_dense")
 
 #: every vector-equation runner the serve loop can batch — the
 #: single-device three plus the graph-axis sharded SpMM loop
@@ -204,6 +209,65 @@ class ShardedCostModel:
 
 #: module-level so tests and calibration sweeps can patch it in place
 SHARDED_COST = ShardedCostModel()
+
+
+@dataclasses.dataclass
+class SpmmKernelModel:
+    """Measured constants behind the ``sparse_frontier_pallas`` candidate
+    (DESIGN.md §9, calibrated against ``BENCH_kernels.json``).
+
+    The fused SpMM's win is per-iteration memory traffic, so it is
+    priced as the jnp step scaled by the measured per-iteration speedup
+    — ``hlo_cost.staged_cost`` prices the jnp step under
+    ``cost_model="hlo"`` and the analytic model otherwise; this model
+    supplies the scale and the crossover floor on top (the
+    ``SHARDED_COST`` pattern).  On CPU the backend is the bit-packed
+    host loop, measured 27× per-iteration for 𝔹 at the 50k-vertex
+    B=64 serve shape (the 8× default leaves headroom for shallow
+    fixpoints, where geometry planning amortizes over fewer rounds);
+    f32 lattices (trop/maxplus) measured *slower* fused than the jnp
+    scatter loop on CPU, so they get no win and stay on jnp — that IS
+    the measured crossover, not a gap.  Tests monkeypatch the fields to
+    pin both sides.
+    """
+
+    #: nnz(E) below which geometry planning + packing outweigh the
+    #: per-iteration win (small graphs converge in ~ms either way)
+    min_nnz: float = 4096.0
+    #: measured per-iteration speedup of the host fused backend, per
+    #: semiring; absent semirings measured no win on CPU
+    host_speedup: dict = dataclasses.field(
+        default_factory=lambda: {"bool": 8.0})
+    #: per-iteration speedup credited to the fused Pallas kernel on TPU
+    #: (one HBM pass instead of three for gather/⊗/scatter)
+    tpu_speedup: float = 2.0
+
+    def speedup(self, semiring: str, backend: str) -> float:
+        """Measured per-iteration win on this platform; ≤ 1 ⇒ no win."""
+        if backend == "tpu":
+            return self.tpu_speedup
+        return float(self.host_speedup.get(semiring, 0.0))
+
+
+#: module-level so tests and calibration sweeps can patch it in place
+SPMM_COST = SpmmKernelModel()
+
+
+def spmm_exec_backend(runner: str = "sparse_frontier_pallas") -> str:
+    """Resolve a runner's SpMM execution backend on this host.
+
+    The ``sparse_frontier_pallas`` runner compiles the fused Pallas
+    kernel on TPU (and under interpret forcing, so CI exercises the
+    kernel path) and falls back to the fused host loop elsewhere; every
+    other runner keeps the traceable jnp composition.  Serve-side
+    kernel caches key on this value.
+    """
+    if runner != "sparse_frontier_pallas":
+        return "jnp"
+    from repro.kernels import ops as kops
+    if jax.default_backend() == "tpu" or kops._FORCE_INTERPRET:
+        return "pallas"
+    return "fused"
 
 
 @dataclasses.dataclass
@@ -610,6 +674,49 @@ def _plan_stratum(prog, stratum, si, db, hints, *, objective, forced,
                         f"Δ-exchange ≈{int(xbytes)} B/iter "
                         f"(dense all-gather {int(dense_b)} B)")
 
+    # -- fused-kernel SpMM candidate (DESIGN.md §9) ------------------------
+    # the staged GSN loop with the gather→⊗→segment-⊕ advance fused into
+    # one pass over edge tiles (kernels/coo_spmm.py).  Offered for
+    # batched serving only: the kernel's measured win is amortized
+    # across B query lanes, while single-shot latency already belongs to
+    # the frontier worklist.  When an offered mesh clears the sharding
+    # crossover the partition wins outright — the fused kernel is a
+    # single-device backend and has no measured number against D
+    # devices.
+    if vf is not None:
+        if objective != "throughput":
+            rejected["sparse_frontier_pallas"] = (
+                "fused-kernel SpMM is a batched-serving backend "
+                "(objective='throughput') — single-shot latency keeps "
+                "the worklist/staged runners")
+        elif e_nnz is None:
+            rejected["sparse_frontier_pallas"] = (
+                "linear operator materializes dense (no sparse binary "
+                "EDB fast path)")
+        elif "sparse_sharded" in considered:
+            rejected["sparse_frontier_pallas"] = (
+                "graph-axis sharding clears its crossover — the fused "
+                "kernel is single-device and is not priced against a "
+                "D-device mesh")
+        else:
+            cm_k = SPMM_COST
+            sp_up = cm_k.speedup(vf.semiring, jax.default_backend())
+            if sp_up <= 1.0:
+                rejected["sparse_frontier_pallas"] = (
+                    f"no measured fused-kernel win for {vf.semiring} on "
+                    f"{jax.default_backend()} — the jnp scatter loop is "
+                    f"already bandwidth-bound (BENCH_kernels.json)")
+            elif e_nnz < cm_k.min_nnz:
+                rejected["sparse_frontier_pallas"] = (
+                    f"below the fused-kernel crossover: "
+                    f"nnz(E)={int(e_nnz)} < {cm_k.min_nnz:g} measured "
+                    f"minimum (BENCH_kernels.json) — geometry planning "
+                    f"outweighs the per-iteration win")
+            else:
+                considered["sparse_frontier_pallas"] = CostEstimate(
+                    (e_nnz + n_vec) / sp_up + n_vec,
+                    (12.0 * e_nnz + 4.0 * n_vec) / sp_up, trips)
+
     # the host worklist only pays off for single-shot latency on a CPU
     # host; batched serving and accelerators want the staged SpMM loop
     frontier_ok = (objective in ("latency", "incremental")
@@ -759,14 +866,28 @@ def _hlo_costs(considered, prog, stratum, db, hints, vf, edges, trips,
         return CostEstimate(max(c.flops, 1.0), c.bytes, trips, "hlo")
 
     for runner in list(out):
-        if runner in ("delta_restart", "sparse_sharded"):
-            # neither has a single-device staged step to walk (the
-            # sharded per-iteration HLO is per-shard) — analytic stands
+        if runner in ("delta_restart", "sparse_sharded",
+                      "sparse_frontier_pallas"):
+            # none has a single-device staged step to walk (the sharded
+            # per-iteration HLO is per-shard; the fused kernel's
+            # geometry is host-planned) — analytic stands, except the
+            # fused kernel which re-derives from the walked jnp step
             continue
         try:
             out[runner] = price(runner)
         except Exception:  # noqa: BLE001 — keep the analytic estimate
             pass
+    if "sparse_frontier_pallas" in out:
+        # price the fused kernel as the hlo-walked jnp step scaled by
+        # its measured per-iteration win (SPMM_COST), keeping the two
+        # candidates on the same footing under cost_model="hlo"
+        base = out.get("sparse_jit")
+        if base is not None and base.source == "hlo":
+            s = max(SPMM_COST.speedup(vf.semiring,
+                                      jax.default_backend()), 1.0)
+            out["sparse_frontier_pallas"] = CostEstimate(
+                base.flops_per_iter / s, base.bytes_per_iter / s,
+                trips, "hlo")
     return out
 
 
@@ -966,6 +1087,16 @@ def _run_stratum(sp, stratum, prog, cur_db, hints, cache, max_iters,
                 from repro.sparse.fixpoint import sparse_seminaive_fixpoint
                 fn = jax.jit(lambda e, i: sparse_seminaive_fixpoint(
                     e, i, mode="jit", max_iters=max_iters))
+            elif sp.runner == "sparse_frontier_pallas":
+                # no outer jax.jit: the fused backend plans its edge-tile
+                # geometry on the host (needs concrete buffers) and
+                # memoizes its own compiled closures per operator
+                from repro.sparse.fixpoint import sparse_seminaive_fixpoint
+                be = spmm_exec_backend(sp.runner)
+
+                def fn(e, i, be=be):
+                    return sparse_seminaive_fixpoint(
+                        e, i, mode="jit", backend=be, max_iters=max_iters)
             elif sp.runner == "sparse_sharded":
                 from repro.distributed.datalog import (
                     shard_relation, sharded_seminaive_fixpoint)
@@ -1082,6 +1213,20 @@ def compile_batched(plan: ExecutionPlan, *,
                 sharded_seminaive_fixpoint
             return sharded_seminaive_fixpoint(edges, init, mesh=mesh,
                                               max_iters=max_iters)
+    elif sp.runner == "sparse_frontier_pallas":
+        # returned un-jitted: the fused backend needs concrete edge
+        # buffers for host geometry planning and carries its own
+        # per-operator compiled closures (plan.jit_cache), so the serve
+        # loop still re-enters compiled code on every call
+        be = spmm_exec_backend(sp.runner)
+
+        def run(edges, init):
+            from repro.sparse.fixpoint import sparse_seminaive_fixpoint
+            return sparse_seminaive_fixpoint(edges, init, mode="jit",
+                                             backend=be,
+                                             max_iters=max_iters)
+
+        return run
     elif sp.runner in ("sparse_jit", "sparse_frontier"):
         def run(edges, init):
             from repro.sparse.fixpoint import sparse_seminaive_fixpoint

@@ -2,10 +2,14 @@
 
 On TPU the Pallas kernels run compiled; elsewhere (this CPU container) the
 ``ref.py`` oracles execute.  ``force_pallas_interpret()`` lets tests route
-through the kernels in interpret mode regardless of platform.
+through the kernels in interpret mode regardless of platform; setting the
+``REPRO_PALLAS_INTERPRET`` environment variable does the same for whole
+processes (the CI kernel-parity step and ``make bench-kernel``).
 """
 
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +19,7 @@ from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.semiring_matmul import semiring_matmul_pallas
 from repro.kernels.ssm_scan import ssm_scan_pallas
 
-_FORCE_INTERPRET = False
+_FORCE_INTERPRET = bool(os.environ.get("REPRO_PALLAS_INTERPRET"))
 
 
 def force_pallas_interpret(on: bool = True) -> None:
@@ -51,6 +55,21 @@ def semiring_segment_reduce(sr, vals: jnp.ndarray,
                                      sr_name=sr.name,
                                      interpret=_FORCE_INTERPRET)
     return ref.segment_reduce_ref(sr, vals, segment_ids, num_segments)
+
+
+def coo_spmm(rel, x, *, transpose: bool = False):
+    """Fused batched COO semiring SpMM with platform dispatch.
+
+    On TPU (or under interpret forcing) the fused Pallas kernel runs;
+    elsewhere the host-numpy fused executor does — both via the cached
+    geometry of :mod:`repro.kernels.coo_spmm`.  Needs a concrete
+    operator; traceable callers use ``sparse.contract.spmm`` directly.
+    """
+    from repro.kernels import coo_spmm as fused
+    plan = fused.plan_geometry(rel, transpose=transpose)
+    if _use_pallas():
+        return fused.spmm_pallas(plan, x, interpret=_FORCE_INTERPRET)
+    return fused.spmm_host(plan, x)
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, chunk=None,

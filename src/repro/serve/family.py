@@ -136,7 +136,8 @@ class Family:
     def backend(self) -> str:
         # derived from the plan so it can never disagree with the routing
         return "sparse" if self.plan.strata[0].runner in (
-            "sparse_jit", "sparse_sharded") else "dense"
+            "sparse_jit", "sparse_sharded",
+            "sparse_frontier_pallas") else "dense"
 
     @property
     def semiring(self) -> str:

@@ -321,14 +321,25 @@ class ContinuousServer:
         fam = fs.fam
 
         def chunk_fn_factory(b=want):
-            key = (fam.plan.signature, b, 1)
+            # keyed on the resolved SpMM backend too: a pallas-runner
+            # plan steps through the fused kernel's chunk (which plans
+            # host geometry and memoizes its own per-operator compile),
+            # while jnp plans keep the jitted traceable chunk
+            be = planner.spmm_exec_backend(fam.plan.strata[0].runner)
+            key = (fam.plan.signature, be, b, 1)
             fn = self._compiled.get(key)
             if fn is None:
                 from repro.sparse.fixpoint import resume_fixpoint_chunk
                 k = self.chunk_iters
-                fn = jax.jit(lambda e, y, d, it:
-                             resume_fixpoint_chunk(e, y, d, it,
-                                                   max_iters=k))
+                if be == "jnp":
+                    fn = jax.jit(lambda e, y, d, it:
+                                 resume_fixpoint_chunk(e, y, d, it,
+                                                       max_iters=k))
+                else:
+                    def fn(e, y, d, it, be=be, k=k):
+                        return resume_fixpoint_chunk(e, y, d, it,
+                                                     max_iters=k,
+                                                     backend=be)
                 self._compiled.put(key, fn)
             return fn
 
@@ -402,7 +413,8 @@ class ContinuousServer:
             self._finish(fs, req, delivered)
 
     def _packed_run(self, fam: Family, packed: np.ndarray):
-        key = ("packed", fam.plan.signature, packed.shape[0], 1)
+        be = planner.spmm_exec_backend(fam.plan.strata[0].runner)
+        key = ("packed", fam.plan.signature, be, packed.shape[0], 1)
         run = self._compiled.get(key)
         if run is None:
             run = planner.compile_batched(fam.plan,

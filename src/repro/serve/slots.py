@@ -21,9 +21,11 @@ Three interchangeable chunk steppers implement the same GSN body:
   D)`` exactly like the packed server's runners.
 * :class:`BitsetBoolStepper` — boolean semiring on CPU: the B query
   lanes live as bits of ``⌈B/64⌉`` uint64 words per vertex, and a round
-  is ``np.bitwise_or.reduceat`` over destination-sorted edges — 64
-  frontier advances per word-op, no XLA scatter.  ~25× the (B, n)
-  SpMM's round throughput at B=64 on the 50k power-law serving graph.
+  is the fused kernel's packed-𝔹 advance
+  (:func:`repro.kernels.coo_spmm.bool_round_packed` — one
+  ``bitwise_or.reduceat`` over dst-sorted edges) — 64 frontier advances
+  per word-op, no XLA scatter.  ~25× the (B, n) SpMM's round
+  throughput at B=64 on the 50k power-law serving graph.
 * :class:`LevelSyncTropStepper` — tropical semiring with small positive
   *integer* weights on CPU: min-plus distances are computed as
   level-synchronous BFS over the weight-expanded graph (an edge of
@@ -85,19 +87,30 @@ def _lane_bits(words: np.ndarray, b: int) -> np.ndarray:
 
 
 class BitsetBoolStepper:
-    """Boolean GSN rounds over lane-bitset state (CPU host kernel)."""
+    """Boolean GSN rounds over lane-bitset state (CPU host kernel).
+
+    Geometry and the per-round advance both delegate to
+    :mod:`repro.kernels.coo_spmm`: the pool's rounds are exactly the
+    fused kernel's packed-𝔹 path (``bool_round_packed`` over the shared
+    dst-sorted :class:`~repro.kernels.coo_spmm.SpmmPlan`), so the serve
+    hot loop and the planner-priced backend cannot drift apart.
+    """
 
     def __init__(self, edges: SparseRelation, n: int, b: int,
                  geom_cache: dict | None = None):
         if edges.semiring != "bool":
             raise ValueError("bitset stepper is boolean-only")
+        from repro.kernels import coo_spmm
         self.n, self.b = n, b
         self.w = (b + 63) // 64
         cache = geom_cache if geom_cache is not None else {}
-        geom = cache.get("bool_geom")
-        if geom is None:
-            geom = cache["bool_geom"] = _dst_sorted(edges)[:3]
-        self._src, self._udst, self._seg = geom
+        key = ("spmm_plan", "fused")
+        plan = cache.get(key)
+        if plan is None:
+            plan = cache[key] = coo_spmm.plan_geometry(edges,
+                                                       transpose=True)
+        self._plan = plan
+        self._round = coo_spmm.bool_round_packed
         self.y = np.zeros((n, self.w), np.uint64)
         self.d = np.zeros((n, self.w), np.uint64)
         self.it = np.zeros(b, np.int64)
@@ -120,11 +133,7 @@ class BitsetBoolStepper:
                 return
             self.it += live
             self.y |= self.d
-            derived = np.zeros_like(self.d)
-            if len(self._src):
-                derived[self._udst] = np.bitwise_or.reduceat(
-                    self.d[self._src], self._seg, axis=0)
-            self.d = derived & ~self.y
+            self.d = self._round(self._plan, self.d) & ~self.y
 
     def extract(self, j: int) -> tuple[np.ndarray, int]:
         wj, bit = divmod(j, 64)

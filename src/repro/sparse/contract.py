@@ -23,6 +23,7 @@ so padding rows contribute 0̄ ⊗ 1̄ = 0̄ to every reduction; scatters use
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -32,6 +33,24 @@ from repro.sparse.coo import SparseRelation
 
 def _gather(x, idx, fill):
     return jnp.take(x, idx, axis=0, mode="fill", fill_value=fill)
+
+
+def _fused_spmm(rel: SparseRelation, b, *, transpose: bool, backend: str):
+    """Route an SpMM through :mod:`repro.kernels.coo_spmm`.
+
+    ``backend="pallas"`` runs the fused Pallas kernel (interpreted off-TPU
+    so CI's CPU job exercises the kernel path); ``backend="fused"`` runs
+    the host-numpy fused executor.  Both need a *concrete* operator —
+    their edge-tile geometry is host-planned and weakref-cached.
+    """
+    from repro.kernels import coo_spmm, ops as kops
+    plan = coo_spmm.plan_geometry(rel, transpose=transpose)
+    if backend == "pallas":
+        interpret = kops._FORCE_INTERPRET or jax.default_backend() != "tpu"
+        return coo_spmm.spmm_pallas(plan, b, interpret=interpret)
+    if backend == "fused":
+        return coo_spmm.spmm_host(plan, b)
+    raise ValueError(f"unknown SpMM backend {backend!r}")
 
 
 def spmv(rel: SparseRelation, x, *, transpose: bool = False):
@@ -52,15 +71,23 @@ def vspm(x, rel: SparseRelation):
     return spmv(rel, x, transpose=True)
 
 
-def spmm(rel: SparseRelation, b, *, transpose: bool = False):
+def spmm(rel: SparseRelation, b, *, transpose: bool = False,
+         backend: str = "jnp"):
     """Sparse (n, k) × dense (k, d) → dense (n, d) over the semiring.
 
     Per edge the gathered payload is a whole row of ``b`` and the
     ⊕-reduction scatters contiguous rows — so with d = B query lanes the
     per-edge index overhead of SpMV is amortized across the batch (the
     mechanism behind the batched multi-source fixpoint, DESIGN.md §3).
+
+    ``backend`` selects the execution: ``"jnp"`` (default, traceable) is
+    the gather/⊗/segment-⊕ composition below; ``"pallas"``/``"fused"``
+    route through the fused single-pass kernel (DESIGN.md §9) and need a
+    concrete operator.
     """
     assert rel.arity == 2 and b.ndim == 2, (rel, b.shape)
+    if backend != "jnp":
+        return _fused_spmm(rel, b, transpose=transpose, backend=backend)
     sr = sr_mod.get(rel.semiring)
     from repro.kernels import ops as kops
     contract_ax, out_ax = (0, 1) if transpose else (1, 0)
@@ -71,7 +98,7 @@ def spmm(rel: SparseRelation, b, *, transpose: bool = False):
         sr, prod, rel.coords[:, out_ax], rel.shape[out_ax])
 
 
-def mspm(x, rel: SparseRelation):
+def mspm(x, rel: SparseRelation, *, backend: str = "jnp"):
     """Dense (B, n) × sparse (n, m) → dense (B, m): batched vspm.
 
     ``out[b, j] = ⊕_i x[b, i] ⊗ rel[i, j]`` — the multi-source frontier
@@ -79,10 +106,11 @@ def mspm(x, rel: SparseRelation):
     transposed orientation) so gathers and scatters move contiguous
     B-wide rows; the transposes at the boundary are free under jit when
     the caller keeps the (n, B) layout (as the batched fixpoint does).
+    ``backend`` as in :func:`spmm`.
     """
-    x = jnp.asarray(x)
+    x = jnp.asarray(x) if backend != "fused" else np.asarray(x)
     assert x.ndim == 2, x.shape
-    return spmm(rel, x.T, transpose=True).T
+    return spmm(rel, x.T, transpose=True, backend=backend).T
 
 
 def spmspm(a: SparseRelation, b: SparseRelation, *,

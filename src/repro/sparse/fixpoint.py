@@ -64,7 +64,8 @@ class FrontierStats:
 
 def sparse_seminaive_fixpoint(edges: SparseRelation, init, *,
                               max_iters: int = 10_000,
-                              mode: str = "auto"):
+                              mode: str = "auto",
+                              backend: str = "jnp"):
     """Least fixpoint of ``x = init ⊕ vspm(x, edges)``.
 
     Returns ``(x*, iters)`` like the dense runners; frontier mode
@@ -75,8 +76,15 @@ def sparse_seminaive_fixpoint(edges: SparseRelation, init, *,
     A 2-D ``(B, n)`` init runs the batched multi-source path (module
     docstring): the result is ``(B, n)`` and ``iters`` is a ``(B,)``
     per-source iteration-count vector.
+
+    ``backend`` selects the SpMM execution of the GSN loop (DESIGN.md
+    §9): ``"jnp"`` is the traceable gather/scatter composition,
+    ``"pallas"`` the fused TPU kernel (per-operator compiled closures),
+    ``"fused"`` the host-numpy fused loop (bit-packed 𝔹 lanes on CPU).
+    The non-jnp backends need a concrete ``edges``.
     """
-    y, iters, _ = _dispatch(edges, init, max_iters=max_iters, mode=mode)
+    y, iters, _ = _dispatch(edges, init, max_iters=max_iters, mode=mode,
+                            backend=backend)
     return y, iters
 
 
@@ -110,7 +118,7 @@ def resume_fixpoint(edges: SparseRelation, y0, d0, *,
 
 
 def resume_fixpoint_chunk(edges: SparseRelation, y0, d0, it0, *,
-                          max_iters: int):
+                          max_iters: int, backend: str = "jnp"):
     """One bounded slice of the batched GSN loop, carry in and carry out.
 
     Advances the ``(B, n)`` pair ``(y0, d0)`` by **at most** ``max_iters``
@@ -128,6 +136,10 @@ def resume_fixpoint_chunk(edges: SparseRelation, y0, d0, it0, *,
     and their counters stop.  Identical chaining invariant to
     :func:`resume_fixpoint`: ``y0`` is a pre-fixpoint and
     ``d0 = F(y0) ⊖ y0`` its pending delta, which the chunk preserves.
+
+    ``backend`` as in :func:`sparse_seminaive_fixpoint`; the non-jnp
+    chunks memoize their compiled/host closures on the operator's cached
+    SpMM plan, so callers need not (and must not) wrap them in ``jit``.
     """
     if edges.arity != 2 or edges.shape[0] != edges.shape[1]:
         raise ValueError(f"recursive expansion needs a square binary edge "
@@ -136,31 +148,12 @@ def resume_fixpoint_chunk(edges: SparseRelation, y0, d0, it0, *,
     if sr.minus is None:
         raise ValueError(f"semiring {sr.name} lacks ⊖; "
                          "GSN needs an idempotent complete lattice")
-    from repro.distributed import sharding as sh
-
-    edges = edges.as_jnp()
-    y = sh.constrain(jnp.asarray(y0).T, ("vertex", "query_batch"))
-    d = sh.constrain(jnp.asarray(d0).T, ("vertex", "query_batch"))
-    it_rows = jnp.asarray(it0, jnp.int32)
-
-    def cond(carry):
-        y, d, it_rows, it = carry
-        return jnp.logical_and(jnp.any(d != sr.zero), it < max_iters)
-
-    def body(carry):
-        y, d, it_rows, it = carry
-        live = jnp.any(d != sr.zero, axis=0)
-        y_new = sh.constrain(sr.add(y, d), ("vertex", "query_batch"))
-        d_new = sr.minus(contract.spmm(edges, d, transpose=True), y_new)
-        d_new = sh.constrain(d_new, ("vertex", "query_batch"))
-        return y_new, d_new, it_rows + live, it + 1
-
-    y, d, it_rows, _ = jax.lax.while_loop(
-        cond, body, (y, d, it_rows, jnp.asarray(0)))
-    return y.T, d.T, it_rows
+    if backend != "jnp":
+        return _fused_resume_chunk(edges, y0, d0, it0, max_iters, backend)
+    return _chunk_loop(edges.as_jnp(), y0, d0, it0, sr, max_iters)
 
 
-def _dispatch(edges, init, *, max_iters, mode, warm=None):
+def _dispatch(edges, init, *, max_iters, mode, warm=None, backend="jnp"):
     if edges.arity != 2 or edges.shape[0] != edges.shape[1]:
         raise ValueError(f"recursive expansion needs a square binary edge "
                          f"relation, got shape {edges.shape}")
@@ -168,6 +161,12 @@ def _dispatch(edges, init, *, max_iters, mode, warm=None):
     if sr.minus is None:
         raise ValueError(f"semiring {sr.name} lacks ⊖; "
                          "GSN needs an idempotent complete lattice")
+    if backend == "fused":
+        return _fused_host_fixpoint(edges, init, max_iters, warm=warm)
+    if backend == "pallas":
+        return _pallas_fixpoint(edges, init, sr, max_iters, warm=warm)
+    if backend != "jnp":
+        raise ValueError(f"unknown fixpoint backend {backend!r}")
     if mode == "auto":
         mode = "frontier" if jax.default_backend() == "cpu" else "jit"
     batched = np.ndim(init if warm is None else warm[0]) == 2
@@ -199,10 +198,11 @@ def _dispatch(edges, init, *, max_iters, mode, warm=None):
 
 
 def _jit_fixpoint(edges: SparseRelation, init, sr, max_iters: int, *,
-                  warm=None):
+                  warm=None, advance=None):
+    adv = advance or (lambda d: contract.vspm(d, edges))
     if warm is None:
         x0 = jnp.full_like(init, sr.zero)
-        d0 = sr.minus(sr.add(init, contract.vspm(x0, edges)), x0)
+        d0 = sr.minus(sr.add(init, adv(x0)), x0)
     else:
         x0, d0 = warm
 
@@ -215,7 +215,7 @@ def _jit_fixpoint(edges: SparseRelation, init, sr, max_iters: int, *,
     def body(carry):
         y, d, _, it = carry
         y_new = sr.add(y, d)
-        d_new = sr.minus(contract.vspm(d, edges), y_new)
+        d_new = sr.minus(adv(d), y_new)
         return y_new, d_new, jnp.any(d_new != sr.zero), it + 1
 
     y, _, _, iters = jax.lax.while_loop(
@@ -224,7 +224,7 @@ def _jit_fixpoint(edges: SparseRelation, init, sr, max_iters: int, *,
 
 
 def _batched_jit_fixpoint(edges: SparseRelation, init, sr, max_iters: int,
-                          *, warm=None):
+                          *, warm=None, advance=None):
     """All B sources in one ``lax.while_loop``: SpMM frontier advance,
     per-row convergence masks, per-row iteration counts.
 
@@ -233,17 +233,18 @@ def _batched_jit_fixpoint(edges: SparseRelation, init, sr, max_iters: int,
     annotated with the ``query_batch`` logical axis so an active mesh
     shards it across devices (no-op otherwise).  ``warm`` is an optional
     ``(y0, d0)`` pair of (B, n) arrays for delta-restart repair.
+    ``advance`` overrides the (n, B) → (n, B) frontier-advance SpMM —
+    the fused-kernel backends inject their closure here.
     """
     from repro.distributed import sharding as sh
 
+    adv = advance or (lambda d: contract.spmm(edges, d, transpose=True))
     if warm is None:
         b = init.shape[0]
         x0 = jnp.full(init.shape[::-1], sr.zero, sr.dtype)    # (n, B)
         i_nb = sh.constrain(jnp.asarray(init).T,
                             ("vertex", "query_batch"))
-        d0 = sr.minus(sr.add(i_nb,
-                             contract.spmm(edges, x0, transpose=True)),
-                      x0)
+        d0 = sr.minus(sr.add(i_nb, adv(x0)), x0)
     else:
         b = warm[0].shape[0]
         x0 = sh.constrain(warm[0].T, ("vertex", "query_batch"))
@@ -258,7 +259,7 @@ def _batched_jit_fixpoint(edges: SparseRelation, init, sr, max_iters: int,
     def body(carry):
         y, d, live, it_rows, it = carry
         y_new = sh.constrain(sr.add(y, d), ("vertex", "query_batch"))
-        d_new = sr.minus(contract.spmm(edges, d, transpose=True), y_new)
+        d_new = sr.minus(adv(d), y_new)
         d_new = sh.constrain(d_new, ("vertex", "query_batch"))
         # a source's row of Δ going all-0̄ is its convergence: from then on
         # the row re-derives 0̄ forever (δF(0̄) ⊖ Y = 0̄), so masking is
@@ -270,6 +271,186 @@ def _batched_jit_fixpoint(edges: SparseRelation, init, sr, max_iters: int,
         cond, body, (x0, d0, live0, jnp.zeros((b,), jnp.int32),
                      jnp.asarray(0)))
     return y.T, it_rows
+
+
+# --------------------------------------------------------------------------
+# Fused-kernel backends: same GSN loop, SpMM via kernels/coo_spmm
+# --------------------------------------------------------------------------
+
+
+def _pallas_fixpoint(edges, init, sr, max_iters, *, warm=None):
+    """The jit GSN loop with the fused Pallas SpMM as frontier advance.
+
+    The operator's edge-tile geometry is host-planned, so the whole
+    while-loop is compiled *per operator*: a jitted closure over the
+    concrete edges, memoized on the cached :class:`SpmmPlan` — repeat
+    calls (the serving loop) re-enter compiled code directly.
+    """
+    from repro.kernels import coo_spmm, ops as kops
+
+    interp = kops._FORCE_INTERPRET or jax.default_backend() != "tpu"
+    plan = coo_spmm.plan_geometry(edges, transpose=True)
+    batched = np.ndim(init if warm is None else warm[0]) == 2
+    key = ("fixpoint", batched, warm is None, max_iters, interp)
+    fn = plan.jit_cache.get(key)
+    if fn is None:
+        ej = edges.as_jnp()
+
+        def adv(d):
+            return coo_spmm.spmm_pallas(plan, d, interpret=interp)
+
+        inner = _batched_jit_fixpoint if batched else _jit_fixpoint
+        if warm is None:
+            fn = jax.jit(lambda i: inner(ej, i, sr, max_iters, advance=adv))
+        else:
+            fn = jax.jit(lambda y0, d0: inner(ej, None, sr, max_iters,
+                                              warm=(y0, d0), advance=adv))
+        plan.jit_cache[key] = fn
+    if warm is None:
+        y, iters = fn(jnp.asarray(init))
+    else:
+        y, iters = fn(jnp.asarray(warm[0]), jnp.asarray(warm[1]))
+    return y, iters, None
+
+
+def _fused_host_fixpoint(edges, init, max_iters, *, warm=None):
+    """Host-numpy fused GSN loop — the CPU serving backend (DESIGN.md §9).
+
+    For 𝔹 the whole carry lives bit-packed: ``y``/``Δ`` are (n, W)
+    uint64 words and one round is a single ``bitwise_or.reduceat`` sweep
+    (:func:`coo_spmm.bool_round_packed`) plus word-wise ``y |= Δ``,
+    ``Δ &= ~y`` — ~64× fewer bytes per iteration than the (n, B) boolean
+    gather/scatter.  Other lattices run :func:`coo_spmm.spmm_host`.
+    Round structure, convergence masks, and per-row iteration counts
+    mirror :func:`_batched_jit_fixpoint` exactly.
+    """
+    from repro.kernels import coo_spmm
+
+    srn = sr_mod.get(edges.semiring, lib="np")
+    plan = coo_spmm.plan_geometry(edges, transpose=True)
+    batched = np.ndim(init if warm is None else warm[0]) == 2
+    if warm is None:
+        i2 = np.asarray(init)
+        i2 = i2 if batched else i2[None]
+        b = i2.shape[0]
+        y0 = np.full((plan.n_in, b), srn.zero, srn.dtype)      # (n, B)
+        d0 = srn.minus(srn.add(i2.T.astype(srn.dtype),
+                               coo_spmm.spmm_host(plan, y0)), y0)
+        live = np.ones(b, bool)
+    else:
+        y0w, d0w = np.asarray(warm[0]), np.asarray(warm[1])
+        if not batched:
+            y0w, d0w = y0w[None], d0w[None]
+        b = y0w.shape[0]
+        y0 = np.ascontiguousarray(y0w.T.astype(srn.dtype))
+        d0 = np.ascontiguousarray(d0w.T.astype(srn.dtype))
+        live = (d0 != srn.zero).any(axis=0)
+    it_rows = np.zeros(b, np.int32)
+    it = 0
+    if edges.semiring == "bool":
+        yw = coo_spmm.pack_lanes(y0.T)
+        dw = coo_spmm.pack_lanes(d0.T)
+        while live.any() and it < max_iters:
+            it_rows += live
+            np.bitwise_or(yw, dw, out=yw)
+            dw = coo_spmm.bool_round_packed(plan, dw) & ~yw
+            live = _packed_live(dw, b)
+            it += 1
+        y = coo_spmm.unpack_lanes(yw, b)                       # (B, n)
+    else:
+        y, d = y0, d0
+        while live.any() and it < max_iters:
+            it_rows += live
+            y = srn.add(y, d)
+            d = srn.minus(coo_spmm.spmm_host(plan, d), y)
+            live = (d != srn.zero).any(axis=0)
+            it += 1
+        y = y.T
+    if batched:
+        return jnp.asarray(y), jnp.asarray(it_rows), None
+    return jnp.asarray(y[0]), int(it_rows[0]), None
+
+
+def _packed_live(words: np.ndarray, b: int) -> np.ndarray:
+    """Per-lane liveness of a packed (n, W) Δ: lane has any bit set."""
+    agg = np.bitwise_or.reduce(words, axis=0)                  # (W,)
+    return np.unpackbits(agg.view(np.uint8),
+                         bitorder="little")[:b].astype(bool)
+
+
+def _fused_resume_chunk(edges, y0, d0, it0, max_iters, backend):
+    """The non-jnp body of :func:`resume_fixpoint_chunk`.
+
+    ``"pallas"`` memoizes a per-operator jitted chunk on the cached SpMM
+    plan; ``"fused"`` runs the bounded host loop (packed 𝔹 rounds).
+    """
+    from repro.kernels import coo_spmm, ops as kops
+
+    sr = sr_mod.get(edges.semiring)
+    plan = coo_spmm.plan_geometry(edges, transpose=True)
+    if backend == "pallas":
+        interp = kops._FORCE_INTERPRET or jax.default_backend() != "tpu"
+        key = ("chunk", max_iters, interp)
+        fn = plan.jit_cache.get(key)
+        if fn is None:
+            ej = edges.as_jnp()
+            fn = jax.jit(lambda y, d, it: _chunk_loop(
+                ej, y, d, it, sr, max_iters,
+                advance=lambda dd: coo_spmm.spmm_pallas(
+                    plan, dd, interpret=interp)))
+            plan.jit_cache[key] = fn
+        return fn(jnp.asarray(y0), jnp.asarray(d0), jnp.asarray(it0))
+    if backend != "fused":
+        raise ValueError(f"unknown fixpoint backend {backend!r}")
+    srn = sr_mod.get(edges.semiring, lib="np")
+    b = np.asarray(y0).shape[0]
+    it_rows = np.asarray(it0, np.int32).copy()
+    it = 0
+    if edges.semiring == "bool":
+        yw = coo_spmm.pack_lanes(np.asarray(y0))
+        dw = coo_spmm.pack_lanes(np.asarray(d0))
+        while it < max_iters and dw.any():
+            it_rows += _packed_live(dw, b)
+            np.bitwise_or(yw, dw, out=yw)
+            dw = coo_spmm.bool_round_packed(plan, dw) & ~yw
+            it += 1
+        y, d = coo_spmm.unpack_lanes(yw, b), coo_spmm.unpack_lanes(dw, b)
+    else:
+        y = np.ascontiguousarray(np.asarray(y0).T.astype(srn.dtype))
+        d = np.ascontiguousarray(np.asarray(d0).T.astype(srn.dtype))
+        while it < max_iters and (d != srn.zero).any():
+            it_rows += (d != srn.zero).any(axis=0)
+            y = srn.add(y, d)
+            d = srn.minus(coo_spmm.spmm_host(plan, d), y)
+            it += 1
+        y, d = y.T, d.T
+    return jnp.asarray(y), jnp.asarray(d), jnp.asarray(it_rows)
+
+
+def _chunk_loop(edges, y0, d0, it0, sr, max_iters, *, advance=None):
+    """The traceable chunk body shared by the jnp and pallas chunks."""
+    from repro.distributed import sharding as sh
+
+    adv = advance or (lambda d: contract.spmm(edges, d, transpose=True))
+    y = sh.constrain(jnp.asarray(y0).T, ("vertex", "query_batch"))
+    d = sh.constrain(jnp.asarray(d0).T, ("vertex", "query_batch"))
+    it_rows = jnp.asarray(it0, jnp.int32)
+
+    def cond(carry):
+        y, d, it_rows, it = carry
+        return jnp.logical_and(jnp.any(d != sr.zero), it < max_iters)
+
+    def body(carry):
+        y, d, it_rows, it = carry
+        live = jnp.any(d != sr.zero, axis=0)
+        y_new = sh.constrain(sr.add(y, d), ("vertex", "query_batch"))
+        d_new = sr.minus(adv(d), y_new)
+        d_new = sh.constrain(d_new, ("vertex", "query_batch"))
+        return y_new, d_new, it_rows + live, it + 1
+
+    y, d, it_rows, _ = jax.lax.while_loop(
+        cond, body, (y, d, it_rows, jnp.asarray(0)))
+    return y.T, d.T, it_rows
 
 
 # --------------------------------------------------------------------------

@@ -50,6 +50,7 @@ plan BM_opt  mode=auto  objective=latency  signature=<sig>
     storage     E: dense→sparse (density 0.0257 < 0.05)
     cost        194 flops/iter × 5 iters  [analytic]
     considered  sparse_frontier=970  dense_gsn=2.45e+03  sparse_jit=2.45e+03  dense_naive=3.05e+03
+    rejected    sparse_frontier_pallas: fused-kernel SpMM is a batched-serving backend (objective='throughput') — single-shot latency keeps the worklist/staged runners
     rejected    vector_dense: linear operator is sparse — the SpMV/SpMM runners cover it
   outputs    Qans"""
 
@@ -66,6 +67,7 @@ plan CC_opt  mode=auto  objective=latency  signature=<sig>
     cost        1.64e+03 flops/iter × 3 iters  [analytic]
     considered  dense_gsn=4.92e+03  vector_dense=4.92e+03  dense_naive=5.04e+03
     rejected    sparse_frontier: linear operator materializes dense (no sparse binary EDB fast path)
+    rejected    sparse_frontier_pallas: fused-kernel SpMM is a batched-serving backend (objective='throughput') — single-shot latency keeps the worklist/staged runners
     rejected    sparse_jit: linear operator materializes dense (no sparse binary EDB fast path)
   outputs    CCans"""
 

@@ -232,6 +232,7 @@ plan SSSP_opt  mode=auto  objective=latency  signature=<sig>
     considered  sparse_frontier=452  sparse_jit=1.06e+03
     rejected    dense_gsn: edges override requires a vector runner (the engine paths read the stored relations, not the override)
     rejected    dense_naive: edges override requires a vector runner (the engine paths read the stored relations, not the override)
+    rejected    sparse_frontier_pallas: fused-kernel SpMM is a batched-serving backend (objective='throughput') — single-shot latency keeps the worklist/staged runners
     rejected    sparse_sharded: below the sharding crossover: ≈26.5 work/device/iter < 20000 measured minimum (BENCH_sharded.json) — one device wins
     rejected    vector_dense: linear operator is sparse — the SpMV/SpMM runners cover it
   outputs    SPans"""
