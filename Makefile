@@ -70,7 +70,7 @@ lint:
 	fi
 
 bench-smoke:
-	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --quick --only sparse,serve,kernel,plan,incremental,sharded
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --quick --only sparse,serve,kernel,plan,incremental,sharded,replan
 
 bench-sparse:
 	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.sparse_scaling
@@ -87,6 +87,9 @@ bench-incremental:
 bench-sharded:
 	XLA_FLAGS=$(DIST_FLAGS) PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.sharded_scaling
 
+bench-replan:
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.replan_adaptive
+
 bench-check:
 	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.check_regression \
 		--metric-threshold speedup=0.2
@@ -99,5 +102,5 @@ test-kernel:
 	REPRO_PALLAS_INTERPRET=1 PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q tests/test_coo_spmm.py
 
 .PHONY: test test-all test-dist lint bench-smoke bench-sparse \
-	bench-serve bench-plan bench-incremental bench-sharded bench-check \
-	bench-kernel test-kernel
+	bench-serve bench-plan bench-incremental bench-sharded bench-replan \
+	bench-check bench-kernel test-kernel

@@ -1,0 +1,206 @@
+"""Mid-fixpoint adaptive re-planning vs static plans (DESIGN.md §10).
+
+The drifting workload is the serve shape that motivates the adaptive
+executor: a (B, n) batch of reachability queries over a hub-and-chain
+graph where most rows are short hub explorations and a few are deep
+chain walks.  Early rounds have every row live with wide frontiers —
+the nnz-bound fused backend (``sparse_frontier_pallas``) wins because
+the host worklist pays per-row expansion of the whole hub.  Once the
+hub rows converge, the surviving chain rows have one-vertex frontiers
+for hundreds of rounds — the worklist wins because the staged runners
+keep paying O(nnz(E)) per round for a handful of live rows.  Neither
+static plan is right for the whole fixpoint; the adaptive executor
+starts on the fused backend and hands the carry to the frontier runner
+at the chunk boundary where the live-row collapse shows up in
+:class:`~repro.sparse.fixpoint.FrontierStats`.
+
+The control workload (every source in the hub) has no drift: the
+fixpoint converges inside the first chunk and the adaptive path must
+price-out to the static choice with no switch and negligible overhead.
+
+Gates (BENCH_replan.json, checked by benchmarks/check_regression.py):
+
+* ``speedup_adaptive``  — adaptive vs the *best* static plan on the
+  drifting workload, must be ≥ 1.0 (measured ~2.5-3×);
+* ``speedup_control``   — adaptive vs the best static plan on the
+  static-friendly control, must be ≥ 0.95 (no-drift overhead bound);
+* exactness — the adaptive answer is bit-identical to every static
+  runner's answer on both workloads;
+* the drifting run must actually switch runners (the trace is the
+  ``explain(plan)`` switch history).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import runners as runners_mod
+from repro.sparse import fixpoint as fx
+from repro.sparse.adaptive import ReplanPolicy
+from repro.sparse.coo import SparseRelation
+
+#: static rivals timed against the adaptive executor.  ``sparse_jit``
+#: is priced as a candidate but not timed end-to-end: its XLA scatter
+#: rounds are ~60× slower than the fused backend on CPU at these sizes
+#: (BENCH_kernels.json), which would dominate the suite's runtime
+#: without changing the best-static baseline.
+STATICS = (("sparse_frontier", dict(mode="frontier")),
+           ("sparse_frontier_pallas", dict(mode="jit", backend="fused")))
+
+
+def hub_chain(n_hub: int, deg: int, n_chain: int, seed: int = 0):
+    """A random hub (n_hub vertices, ~deg out-edges each) plus a
+    disjoint chain of n_chain vertices: hub queries converge in
+    O(diameter) wide rounds, chain queries walk one vertex per round."""
+    rng = np.random.default_rng(seed)
+    n = n_hub + n_chain
+    m = n_hub * deg
+    src = np.concatenate([rng.integers(0, n_hub, m),
+                          np.arange(n_hub, n - 1)])
+    dst = np.concatenate([rng.integers(0, n_hub, m),
+                          np.arange(n_hub + 1, n)])
+    coords = np.stack([src, dst], 1)
+    rel = SparseRelation.from_coo(coords, np.ones(len(coords), bool),
+                                  (n, n), "bool")
+    return rel.as_jnp(), n
+
+
+def _sources(n_hub: int, n: int, batch: int, deep: int, seed: int = 1):
+    """(B, n) one-hot init: ``batch - deep`` hub sources plus ``deep``
+    chain-head sources (the long-tail rows that drive the drift)."""
+    rng = np.random.default_rng(seed)
+    init = np.zeros((batch, n), bool)
+    init[np.arange(batch - deep), rng.integers(0, n_hub, batch - deep)] = True
+    init[np.arange(batch - deep, batch), n_hub] = True
+    return jnp.asarray(init)
+
+
+def _measure(rel, init, *, chunk_iters: int, trials: int):
+    """Time the static runners and the adaptive executor on one init
+    pack; returns (times, answers, trace)."""
+    times, answers = {}, {}
+    for name, kw in STATICS:
+        fn = lambda kw=kw: np.asarray(fx.fixpoint(rel, init, **kw)[0])
+        times[name] = timeit(fn, iters=trials)
+        answers[name] = fn()
+
+    policy = ReplanPolicy(chunk_iters=chunk_iters)
+    ctx = runners_mod.make_context(rel, init, "bool", 10_000)
+    trace_box = []
+
+    def adaptive():
+        y, _, tr = runners_mod.adaptive_fixpoint(
+            ctx, start="sparse_frontier_pallas",
+            candidates=("sparse_frontier", "sparse_jit"), policy=policy)
+        trace_box.append(tr)
+        return np.asarray(y)
+
+    times["adaptive"] = timeit(adaptive, iters=trials)
+    answers["adaptive"] = adaptive()
+    return times, answers, trace_box[-1]
+
+
+def run(n_hub: int = 50_000, deg: int = 18, chain: int = 260,
+        batch: int = 64, deep: int = 4, chunk_iters: int = 32,
+        trials: int = 3, out: str | None = "BENCH_replan.json",
+        gate: bool = True):
+    rel, n = hub_chain(n_hub, deg, chain)
+    problems: list[str] = []
+    rows = []
+
+    # -- drifting workload: hub explosion → long live-row tail -------------
+    init = _sources(n_hub, n, batch, deep)
+    times, answers, trace = _measure(rel, init, chunk_iters=chunk_iters,
+                                     trials=trials)
+    best_static = min(t for k, t in times.items() if k != "adaptive")
+    speedup = best_static / times["adaptive"]
+    for name, t in sorted(times.items()):
+        emit(f"replan/drift/{name}", t, f"B={batch} n={n}")
+    emit("replan/drift/speedup_adaptive", times["adaptive"],
+         f"{speedup:.2f}x_vs_best_static")
+    exact = all(np.array_equal(answers["adaptive"], v)
+                for v in answers.values())
+    if not exact:
+        problems.append("drift: adaptive answer differs from a static "
+                        "runner's")
+    if not trace.switches:
+        problems.append("drift: adaptive executor never switched runners")
+    if gate and speedup < 1.0:
+        problems.append(f"drift: adaptive {speedup:.2f}x vs best static "
+                        f"(gate ≥ 1.0)")
+    rows.append({
+        "name": "replan/drift", "batch": batch, "n": n,
+        "nnz": int(rel.nnz), "deep_rows": deep,
+        "adaptive_s": times["adaptive"], "best_static_s": best_static,
+        "static_s": {k: v for k, v in times.items() if k != "adaptive"},
+        "speedup_adaptive": speedup, "exact": exact,
+        "n_switches": len(trace.switches),
+        "final_runner": trace.final_runner,
+        "switches": [{"chunk": e.chunk, "iteration": e.iteration,
+                      "from": e.from_runner, "to": e.to_runner}
+                     for e in trace.switches],
+    })
+
+    # -- control: all-hub sources, no drift --------------------------------
+    init2 = _sources(n_hub, n, batch, deep=0, seed=2)
+    times2, answers2, trace2 = _measure(rel, init2,
+                                        chunk_iters=chunk_iters,
+                                        trials=trials)
+    best2 = min(t for k, t in times2.items() if k != "adaptive")
+    ratio = best2 / times2["adaptive"]
+    for name, t in sorted(times2.items()):
+        emit(f"replan/control/{name}", t, f"B={batch} n={n}")
+    emit("replan/control/speedup_control", times2["adaptive"],
+         f"{ratio:.2f}x_vs_best_static")
+    exact2 = all(np.array_equal(answers2["adaptive"], v)
+                 for v in answers2.values())
+    if not exact2:
+        problems.append("control: adaptive answer differs from a static "
+                        "runner's")
+    if gate and ratio < 0.95:
+        problems.append(f"control: adaptive {ratio:.2f}x vs best static "
+                        f"(gate ≥ 0.95)")
+    rows.append({
+        "name": "replan/control", "batch": batch, "n": n,
+        "nnz": int(rel.nnz),
+        "adaptive_s": times2["adaptive"], "best_static_s": best2,
+        "speedup_control": ratio, "exact": exact2,
+        "n_switches": len(trace2.switches),
+    })
+
+    if out:
+        path = pathlib.Path(__file__).resolve().parent.parent / out
+        path.write_text(json.dumps(rows, indent=2, sort_keys=True) + "\n")
+        print(f"wrote {path}", flush=True)
+    if problems:
+        raise RuntimeError("replan_adaptive gate failed:\n  "
+                           + "\n  ".join(problems))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-hub", type=int, default=50_000)
+    ap.add_argument("--chain", type=int, default=260)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--trials", type=int, default=3)
+    ap.add_argument("--no-gate", action="store_true")
+    ap.add_argument("--out", default="BENCH_replan.json")
+    args = ap.parse_args()
+    try:
+        run(n_hub=args.n_hub, chain=args.chain, batch=args.batch,
+            trials=args.trials, out=args.out, gate=not args.no_gate)
+    except RuntimeError as e:
+        print(e, file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

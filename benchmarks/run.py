@@ -11,6 +11,7 @@
   incremental — streaming-update maintenance (BENCH_incremental.json)
   sharded — graph-axis sharded fixpoints (BENCH_sharded.json)
   roofline — measured peaks + achieved bytes/s of the SpMM hot loop
+  replan — mid-fixpoint adaptive re-planning (BENCH_replan.json)
   (regression gating against committed BENCH_*.json baselines:
   benchmarks/check_regression.py)
 
@@ -57,6 +58,13 @@ SUITES: dict[str, tuple[str, str, dict, dict]] = {
     # measured-peak roofline of the SpMM hot loop (fused vs jnp)
     "roofline": ("benchmarks.roofline", "run", {},
                  {"n": 2000, "batches": (8,), "out": None}),
+    # mid-fixpoint adaptive re-planning vs static plans; quick mode
+    # keeps the exactness + switch assertions but waives the speedup
+    # gates (toy sizes put both paths inside chunk-overhead noise)
+    "replan": ("benchmarks.replan_adaptive", "run", {},
+               {"n_hub": 3000, "deg": 10, "chain": 60, "batch": 16,
+                "deep": 2, "chunk_iters": 8, "trials": 1, "out": None,
+                "gate": False}),
 }
 
 

@@ -40,6 +40,7 @@ import dataclasses
 import hashlib
 import itertools
 import math
+import warnings
 import weakref
 from typing import Callable, Mapping
 
@@ -158,6 +159,60 @@ def db_fingerprint(db: engine.Database, names=None) -> tuple:
 # --------------------------------------------------------------------------
 # Plan data model
 # --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanHints:
+    """Typed planning hints — the one structured object threaded through
+    :func:`plan_program` / :func:`plan_for` / :func:`execute_plan`
+    (DESIGN.md §10).
+
+    ``sorts`` maps variable names to sort names, overriding
+    ``Program.sort_hints`` (this is what the old loose ``hints`` dicts
+    carried; a plain mapping is still accepted everywhere with a
+    ``DeprecationWarning``).  ``adaptive=True`` turns on mid-fixpoint
+    re-planning in :func:`execute_plan`: chunkable vector strata run
+    under :func:`repro.core.runners.adaptive_fixpoint` and may switch
+    runners at chunk boundaries.  ``replan`` overrides the default
+    :class:`repro.sparse.adaptive.ReplanPolicy` (hysteresis, chunk
+    size, switch bounds).
+    """
+
+    sorts: Mapping[str, str] = dataclasses.field(default_factory=dict)
+    adaptive: bool = False
+    replan: object | None = None
+
+    def __post_init__(self):
+        for k, v in dict(self.sorts).items():
+            if not isinstance(k, str) or not isinstance(v, str):
+                raise TypeError(f"PlanHints.sorts maps variable names to "
+                                f"sort names, got {k!r}: {v!r}")
+        if self.replan is not None and \
+                not isinstance(self.replan, adaptive.ReplanPolicy):
+            raise TypeError(f"PlanHints.replan must be a ReplanPolicy, "
+                            f"got {type(self.replan).__name__}")
+
+    @classmethod
+    def of(cls, hints, *, defaults=None) -> "PlanHints":
+        """Normalize a caller-supplied ``hints``: ``None`` falls back to
+        ``defaults`` (the program's ``sort_hints``), a :class:`PlanHints`
+        passes through, and a legacy mapping is wrapped with a
+        deprecation warning."""
+        if hints is None:
+            return cls(sorts=dict(defaults or {}))
+        if isinstance(hints, cls):
+            return hints
+        if isinstance(hints, Mapping):
+            warnings.warn("loose hints dicts are deprecated; pass "
+                          "planner.PlanHints(sorts={...})",
+                          DeprecationWarning, stacklevel=3)
+            return cls(sorts=dict(hints))
+        raise TypeError(f"hints must be a PlanHints or a mapping, got "
+                        f"{type(hints).__name__}")
+
+    def cache_key(self) -> tuple:
+        return (tuple(sorted(dict(self.sorts).items())), self.adaptive,
+                self.replan)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -287,6 +342,12 @@ class StratumPlan:
     vf: vectorize.VectorForm | None = None
     edges_override: object | None = None
     partition: str | None = None   # sparse_sharded: the graph-axis split
+    #: trace of the last *adaptive* execution of this stratum (a
+    #: :class:`repro.core.runners.AdaptiveRun`) — populated by
+    #: :func:`execute_plan` under ``PlanHints(adaptive=True)`` and
+    #: rendered by :func:`explain`; ``None`` until then, so static
+    #: plans render byte-identically to the pre-§10 planner
+    switch_log: object | None = None
 
 
 @dataclasses.dataclass
@@ -306,6 +367,10 @@ class ExecutionPlan:
     #: only; execution resolves a local mesh of that size).  ``None``
     #: plans are single-device and identical to the pre-§6 planner.
     mesh: object | None = None
+    #: execute with mid-fixpoint re-planning (from PlanHints.adaptive)
+    adaptive: bool = False
+    #: the ReplanPolicy to execute under (from PlanHints.replan)
+    replan: object | None = None
 
 
 # --------------------------------------------------------------------------
@@ -343,10 +408,16 @@ def plan_program(prog, db: engine.Database, hints=None, *,
     per-shard nnz work plus the per-iteration frontier all-gather, and
     rejected with a recorded reason on single-device meshes or dense
     operators.  ``mesh=None`` plans are byte-identical to before.
+
+    ``hints`` is a :class:`PlanHints` (legacy mappings of sort overrides
+    are accepted with a ``DeprecationWarning``); ``PlanHints(
+    adaptive=True)`` marks the plan for mid-fixpoint re-planning at
+    execution (DESIGN.md §10).
     """
     if objective not in ("latency", "throughput", "incremental"):
         raise ValueError(f"unknown objective {objective!r}")
-    hints = dict(prog.sort_hints) if hints is None else dict(hints)
+    ph = PlanHints.of(hints, defaults=prog.sort_hints)
+    hints = dict(ph.sorts)
     if mesh is not None:
         from repro.distributed.datalog import mesh_size
         mesh_size(mesh)  # validate early: needs a "graph" axis / D ≥ 1
@@ -376,7 +447,8 @@ def plan_program(prog, db: engine.Database, hints=None, *,
     plan = ExecutionPlan(
         prog.name, objective, mode, plans,
         tuple(r.head for r in prog.outputs), prog.post is not None,
-        _plan_signature(prog, db, plans), mesh=mesh)
+        _plan_signature(prog, db, plans), mesh=mesh,
+        adaptive=ph.adaptive, replan=ph.replan)
     if require_vector:
         sp = plan.strata[0] if plan.strata else None
         if sp is None or sp.runner not in BATCHED_RUNNERS:
@@ -395,20 +467,22 @@ def _vector_rejection(rejected: Mapping[str, str]) -> str:
 
 
 def plan_for(prog, db: engine.Database, *, mode: str = "auto",
-             max_iters: int = 10_000,
-             objective: str = "latency") -> ExecutionPlan:
+             max_iters: int = 10_000, objective: str = "latency",
+             hints=None) -> ExecutionPlan:
     """Memoized :func:`plan_program` for repeated ``run_program`` calls:
     plans are cached on the Program object, keyed by the database
-    fingerprint (stable across GC — see :func:`db_fingerprint`)."""
+    fingerprint (stable across GC — see :func:`db_fingerprint`) and the
+    normalized :class:`PlanHints`."""
+    ph = PlanHints.of(hints, defaults=prog.sort_hints)
     cache = prog.__dict__.setdefault("_plan_cache", {})
     reads: set[str] = set()
     for stratum in prog.strata:
         reads |= _referenced(stratum)
     key = ("plan", mode, objective, max_iters, jax.default_backend(),
-           db_fingerprint(db, reads & set(db.relations)))
+           ph.cache_key(), db_fingerprint(db, reads & set(db.relations)))
     plan = _cache_get(cache, key)
     if plan is None:
-        plan = cache[key] = plan_program(prog, db, mode=mode,
+        plan = cache[key] = plan_program(prog, db, ph, mode=mode,
                                          objective=objective,
                                          max_iters=max_iters)
     return plan
@@ -943,6 +1017,22 @@ def explain(plan: ExecutionPlan) -> str:
             lines.append(f"    considered  {body}")
         for k in sorted(sp.rejected):
             lines.append(f"    rejected    {k}: {sp.rejected[k]}")
+        if sp.switch_log is not None:
+            # only present after an adaptive execution (DESIGN.md §10);
+            # plans that never executed adaptively render byte-
+            # identically to the static planner (golden tests)
+            t = sp.switch_log
+            lines.append(
+                f"    adaptive    {len(t.chunks)} chunks × "
+                f"{t.policy.chunk_iters} iters, {len(t.switches)} "
+                f"switches, finished on {t.final_runner}")
+            for ev in t.switches:
+                lines.append(
+                    f"    switch      chunk {ev.chunk} @ iter "
+                    f"{ev.iteration}: {ev.from_runner} → {ev.to_runner}"
+                    f"  (frontier nnz={ev.frontier_nnz}, density="
+                    f"{ev.density:.3g}, est {ev.est_from:.3g} → "
+                    f"{ev.est_to:.3g} ns/iter)")
     outs = " ← ".join(plan.outputs) if plan.outputs else "(fixpoint state)"
     post = "  + host post-epilogue" if plan.has_post else ""
     lines.append(f"  outputs    {outs}{post}")
@@ -955,16 +1045,26 @@ def explain(plan: ExecutionPlan) -> str:
 
 
 def execute_plan(plan: ExecutionPlan, prog, db: engine.Database, *,
-                 max_iters: int = 10_000):
+                 max_iters: int = 10_000, hints=None):
     """Run ``prog`` under ``plan``; returns ``(answer, RunStats)``.
 
     Staged executables, initial states, storage conversions, and
     materialized linear operators are cached on the Program object keyed
     by stable database fingerprints, so a cache hit skips `make_ico` /
     `init_state` / `edge_operator` construction entirely.
+
+    ``hints`` (a :class:`PlanHints`; legacy mappings warn) defaults to
+    the program's own sort hints.  Adaptive re-planning runs when either
+    the plan or the hints asks for it: chunkable vector strata execute
+    via :func:`repro.core.runners.adaptive_fixpoint`, their switch
+    history lands on ``StratumPlan.switch_log``, and ``explain(plan)``
+    renders it afterwards.
     """
     from repro.core import program as prog_mod
-    hints = dict(prog.sort_hints)
+    ph = PlanHints.of(hints, defaults=prog.sort_hints)
+    hints = dict(ph.sorts)
+    adaptive_exec = bool(plan.adaptive or ph.adaptive)
+    replan = ph.replan if ph.replan is not None else plan.replan
     cache = prog.__dict__.setdefault("_plan_cache", {})
     iters_log: list[int] = []
     # one fingerprint of the *input* database anchors every stratum's
@@ -981,7 +1081,9 @@ def execute_plan(plan: ExecutionPlan, prog, db: engine.Database, *,
         cur_db = _apply_storage(sp, cur_db, cache)
         state, iters = _run_stratum(sp, stratum, prog, cur_db, hints,
                                     cache, max_iters, base_fp,
-                                    mesh=plan.mesh)
+                                    mesh=plan.mesh,
+                                    adaptive_exec=adaptive_exec,
+                                    replan=replan)
         iters_log.append(int(iters))
         cur_db = cur_db.with_relations(state)
     out = None
@@ -1048,16 +1150,35 @@ def exec_mesh(plan: ExecutionPlan):
     return make_graph_mesh(int(plan.mesh))
 
 
+def _resolve_mesh(mesh, *, required: bool):
+    """Concrete Mesh for execution: pass a Mesh through, resolve a plain
+    int D against the local devices.  ``required=False`` (the adaptive
+    candidate set on a non-sharded plan) tolerates unresolvable meshes —
+    the sharded candidate just drops out."""
+    if mesh is None:
+        return None
+    from jax.sharding import Mesh
+    if isinstance(mesh, Mesh):
+        return mesh
+    from repro.launch.mesh import make_graph_mesh
+    try:
+        return make_graph_mesh(int(mesh))
+    except Exception:
+        if required:
+            raise
+        return None
+
+
 def _run_stratum(sp, stratum, prog, cur_db, hints, cache, max_iters,
-                 base_fp, *, mesh=None):
-    from repro.core import fixpoint
-    from repro.core import program as prog_mod
+                 base_fp, *, mesh=None, adaptive_exec=False, replan=None):
+    from repro.core import runners as runners_mod
 
     if sp.runner == "delta_restart":
         raise ValueError(
             f"{prog.name}: delta_restart plans carry no previous "
             f"solution to restart from — execute them via "
             f"repro.incremental.refresh_program")
+    runner = runners_mod.get(sp.runner)
     key = (sp.index, sp.runner, max_iters, base_fp,
            tuple(sorted(sp.storage.items())),
            None if sp.edges_override is None
@@ -1076,92 +1197,28 @@ def _run_stratum(sp, stratum, prog, cur_db, hints, cache, max_iters,
                 edges = SparseRelation.from_dense(
                     np.asarray(edges), vf.semiring).as_jnp()
             init = vectorize.init_vector(vf, cur_db, hints)
-            sr = sr_mod.get(vf.semiring)
-            if sp.runner == "sparse_frontier":
-                from repro.sparse.fixpoint import sparse_seminaive_fixpoint
-
-                def fn(e, i):
-                    return sparse_seminaive_fixpoint(
-                        e, i, mode="frontier", max_iters=max_iters)
-            elif sp.runner == "sparse_jit":
-                from repro.sparse.fixpoint import sparse_seminaive_fixpoint
-                fn = jax.jit(lambda e, i: sparse_seminaive_fixpoint(
-                    e, i, mode="jit", max_iters=max_iters))
-            elif sp.runner == "sparse_frontier_pallas":
-                # no outer jax.jit: the fused backend plans its edge-tile
-                # geometry on the host (needs concrete buffers) and
-                # memoizes its own compiled closures per operator
-                from repro.sparse.fixpoint import sparse_seminaive_fixpoint
-                be = spmm_exec_backend(sp.runner)
-
-                def fn(e, i, be=be):
-                    return sparse_seminaive_fixpoint(
-                        e, i, mode="jit", backend=be, max_iters=max_iters)
-            elif sp.runner == "sparse_sharded":
-                from repro.distributed.datalog import (
-                    shard_relation, sharded_seminaive_fixpoint)
-                from repro.launch.mesh import make_graph_mesh
-                from jax.sharding import Mesh
-                m = mesh if isinstance(mesh, Mesh) else \
-                    make_graph_mesh(int(mesh))
-                edges = shard_relation(edges, m)
-                fn = jax.jit(lambda e, i: sharded_seminaive_fixpoint(
-                    e, i, mesh=m, max_iters=max_iters))
-            else:
-                fn = jax.jit(lambda e, i: _dense_vector_fixpoint(
-                    e, i, sr, max_iters))
-            ent = (fn, edges, init)
+            m = _resolve_mesh(mesh,
+                              required=sp.runner == "sparse_sharded")
+            ctx = runners_mod.make_context(edges, init, vf.semiring,
+                                           max_iters, mesh=m)
+            ent = (runner.full_fn(ctx), runner.operand(ctx), ctx)
             cache[key] = ent
-        fn, edges, init = ent
-        x, iters = fn(edges, init)
+        fn, operand, ctx = ent
+        if adaptive_exec and runner.chunkable:
+            x, iters, trace = runners_mod.adaptive_fixpoint(
+                ctx, start=sp.runner, candidates=tuple(sp.considered),
+                policy=replan)
+            sp.switch_log = trace
+        else:
+            x, iters = fn(operand, ctx.init)
         return {sp.idbs[0]: x}, int(np.asarray(iters))
 
     if ent is None:
-        ico = prog_mod.make_ico(stratum, cur_db, hints)
-        x0 = prog_mod.init_state(stratum, cur_db, hints)
-        if sp.runner == "dense_gsn":
-            srs = {n: sr_mod.get(cur_db.schema[n].semiring)
-                   for n in stratum.idbs}
-            dico = prog_mod.make_delta_ico(stratum, cur_db, hints)
-            fn = jax.jit(lambda x0: fixpoint.seminaive_fixpoint(
-                ico, dico, x0, srs, max_iters=max_iters))
-        elif sp.runner == "dense_naive":
-            fn = jax.jit(lambda x0: fixpoint.naive_fixpoint(
-                ico, x0, max_iters=max_iters))
-        else:  # dense_host: python loop, per-iteration visibility
-            def fn(x0, ico=ico):
-                return fixpoint.host_fixpoint(ico, x0,
-                                              max_iters=max_iters)
-        ent = (fn, x0)
+        ent = runner.stratum_fn(stratum, cur_db, hints, max_iters)
         cache[key] = ent
     fn, x0 = ent
     x, iters = fn(x0)
     return x, int(np.asarray(iters))
-
-
-def _batched_dense_vector_fixpoint(edge, init, sr, max_iters):
-    """The vectorized ``x = init ⊕ x ⊗ E`` GSN step over a dense E for a
-    ``(B, n)`` init pack — the one dense vector runner shared by
-    :func:`execute_plan` (B = 1) and :func:`compile_batched`."""
-    from repro.core import fixpoint
-    from repro.kernels import ops as kops
-
-    def ico(s):
-        return {"x": sr.add(init, kops.semiring_matmul(sr, s["x"], edge))}
-
-    def dico(s):
-        return {"x": kops.semiring_matmul(sr, s["x"], edge)}
-
-    x0 = {"x": sr.zeros(init.shape)}
-    y, iters = fixpoint.batched_seminaive_fixpoint(
-        ico, dico, x0, {"x": sr}, max_iters=max_iters)
-    return y["x"], iters
-
-
-def _dense_vector_fixpoint(edge, init, sr, max_iters):
-    y, iters = _batched_dense_vector_fixpoint(edge, init.reshape(1, -1),
-                                              sr, max_iters)
-    return y[0], iters[0]
 
 
 # --------------------------------------------------------------------------
@@ -1200,41 +1257,10 @@ def compile_batched(plan: ExecutionPlan, *,
     """A jitted ``run(edges, init)`` over a ``(B, n)`` init pack for
     stratum 0's runner — the serve loop's compiled unit, cached by the
     caller under ``(plan.signature, B-bucket)``."""
+    from repro.core import runners as runners_mod
+
     sp = plan.strata[0]
     if sp.runner not in BATCHED_RUNNERS:
         raise ValueError(f"{plan.program}: runner {sp.runner!r} has no "
                          f"batched form")
-    sr = sr_mod.get(sp.vf.semiring)
-    if sp.runner == "sparse_sharded":
-        mesh = exec_mesh(plan)
-
-        def run(edges, init):
-            from repro.distributed.datalog import \
-                sharded_seminaive_fixpoint
-            return sharded_seminaive_fixpoint(edges, init, mesh=mesh,
-                                              max_iters=max_iters)
-    elif sp.runner == "sparse_frontier_pallas":
-        # returned un-jitted: the fused backend needs concrete edge
-        # buffers for host geometry planning and carries its own
-        # per-operator compiled closures (plan.jit_cache), so the serve
-        # loop still re-enters compiled code on every call
-        be = spmm_exec_backend(sp.runner)
-
-        def run(edges, init):
-            from repro.sparse.fixpoint import sparse_seminaive_fixpoint
-            return sparse_seminaive_fixpoint(edges, init, mode="jit",
-                                             backend=be,
-                                             max_iters=max_iters)
-
-        return run
-    elif sp.runner in ("sparse_jit", "sparse_frontier"):
-        def run(edges, init):
-            from repro.sparse.fixpoint import sparse_seminaive_fixpoint
-            return sparse_seminaive_fixpoint(edges, init, mode="jit",
-                                             max_iters=max_iters)
-    else:
-        def run(edges, init):
-            return _batched_dense_vector_fixpoint(edges, init, sr,
-                                                  max_iters)
-
-    return jax.jit(run)
+    return runners_mod.get(sp.runner).batched_fn(plan, max_iters)

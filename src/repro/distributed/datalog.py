@@ -625,6 +625,28 @@ def sharded_resume_fixpoint(edges, y0, d0, *, mesh: Mesh,
     return y, iters
 
 
+def sharded_resume_chunk(edges, y0, d0, it0, *, mesh: Mesh,
+                         max_iters: int, exchange: str = "auto",
+                         exchange_caps=None):
+    """One bounded slice of the sharded batched GSN loop — the graph-axis
+    twin of :func:`repro.sparse.fixpoint.resume_fixpoint_chunk` and the
+    ``sparse_sharded`` runner's ``run_chunk`` body (DESIGN.md §10).
+
+    Advances the ``(B, n)`` carry ``(y0, d0)`` by at most ``max_iters``
+    rounds (Δ-sparse exchange and all) and returns the full carry
+    ``(y, d, it_rows)`` in global vertex coordinates, so the adaptive
+    executor can hand it to any single-device runner — the round body is
+    shared, so the hand-off is bit-exact.  ``it0`` is the ``(B,)``
+    per-row iteration counter carried across chunks.
+    """
+    if np.ndim(y0) != 2:
+        raise ValueError("sharded_resume_chunk needs a batched (B, n) "
+                         "carry — add a leading batch axis")
+    return _dispatch(edges, mesh, warm=(y0, d0), it0=it0, chunk=True,
+                     max_iters=max_iters, exchange=exchange,
+                     exchange_caps=exchange_caps)
+
+
 def exchange_byte_report(es: ShardedRelation, rounds, *, batch: int = 1,
                          exchange_caps=None) -> dict:
     """Exchanged-byte accounting for one fixpoint run: ``rounds`` is the
@@ -708,7 +730,7 @@ def _as_sharded(edges, mesh) -> ShardedRelation:
 
 
 def _dispatch(edges, mesh, *, init=None, warm=None, max_iters=10_000,
-              exchange="auto", exchange_caps=None):
+              exchange="auto", exchange_caps=None, it0=None, chunk=False):
     if exchange not in ("auto", "dense"):
         raise ValueError(f"exchange must be 'auto' or 'dense', "
                          f"got {exchange!r}")
@@ -744,6 +766,12 @@ def _dispatch(edges, mesh, *, init=None, warm=None, max_iters=10_000,
     else:
         carry_in = (seed(warm[0]), seed(warm[1]))
         wspecs = (vspec, vspec)
+    if chunk:
+        # the (B,) iteration counter rides along replicated; the chunk
+        # path is batched-warm only (the resumable-carry contract)
+        assert warm is not None and batched
+        carry_in = carry_in + (jnp.asarray(it0, jnp.int32),)
+        wspecs = wspecs + (P(None),)
     geo_in = (es.ssrc, es.sdst, es.sval, es.usrc, es.ustart) \
         if use_sparse else ()
 
@@ -778,6 +806,7 @@ def _dispatch(edges, mesh, *, init=None, warm=None, max_iters=10_000,
             return out, rc.at[tier].add(1)
 
         rc0 = jnp.zeros((n_tiers + 1,), jnp.int32)
+        it_start = None
         if warm is None:
             (i_loc,) = carry
             x0 = jnp.full_like(i_loc, sr.zero)
@@ -792,11 +821,15 @@ def _dispatch(edges, mesh, *, init=None, warm=None, max_iters=10_000,
             else:
                 live0 = jnp.asarray(True)
         else:
-            x0, d_loc = carry
+            if chunk:
+                x0, d_loc, it_start = carry
+            else:
+                x0, d_loc = carry
             live0 = changed_of(d_loc)
         if batched:
             b = d_loc.shape[1]
-            it0 = jnp.zeros((b,), jnp.int32)
+            if it_start is None:
+                it_start = jnp.zeros((b,), jnp.int32)
 
             def cond(c):
                 y, d, live, it_rows, it, rc = c
@@ -810,10 +843,13 @@ def _dispatch(edges, mesh, *, init=None, warm=None, max_iters=10_000,
                 live_new = changed_of(d_new)
                 return y_new, d_new, live_new, it_rows + live, it + 1, rc
 
-            y, _, _, it_rows, _, rc = jax.lax.while_loop(
-                cond, step, (x0, d_loc, live0, it0, jnp.asarray(0), rc0))
+            y, d, _, it_rows, _, rc = jax.lax.while_loop(
+                cond, step, (x0, d_loc, live0, it_start, jnp.asarray(0),
+                             rc0))
             # per-source counts are psum-derived, identical on every
             # device — tile to (1, B) so the out spec stays sharded
+            if chunk:
+                return y, d, it_rows[None, :]
             return y, it_rows[None, :], rc[None, :]
 
         def cond(c):
@@ -832,14 +868,21 @@ def _dispatch(edges, mesh, *, init=None, warm=None, max_iters=10_000,
         return y, jnp.broadcast_to(iters, (1,)), rc[None, :]
 
     ispec = P(GRAPH_AXIS, None) if batched else P(GRAPH_AXIS)
-    y, iters, rounds = shard_map(
+    out_specs = (vspec, vspec, ispec) if chunk \
+        else (vspec, ispec, P(GRAPH_AXIS, None))
+    y, second, third = shard_map(
         body, mesh=mesh,
         in_specs=(P(GRAPH_AXIS), P(GRAPH_AXIS))
         + (P(GRAPH_AXIS),) * len(geo_in) + wspecs,
-        out_specs=(vspec, ispec, P(GRAPH_AXIS, None)),
+        out_specs=out_specs,
         check_rep=False)(
         es.coords, es.values, *geo_in, *carry_in)
     y = jnp.take(y, es.perm, axis=0) if es.perm is not None else y[:n]
+    if chunk:
+        d = jnp.take(second, es.perm, axis=0) if es.perm is not None \
+            else second[:n]
+        return y.T, d.T, third[0]
+    iters, rounds = second, third
     if batched:
         return y.T, iters[0], rounds[0]
     return y, iters[0], rounds[0]

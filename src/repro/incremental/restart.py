@@ -32,7 +32,7 @@ from repro.core import semiring as sr_mod
 from repro.incremental.delta import DeltaLog
 from repro.sparse import contract
 from repro.sparse.coo import SparseRelation
-from repro.sparse.fixpoint import resume_fixpoint
+from repro.sparse.fixpoint import FixpointState, fixpoint
 
 
 def delta_seed(delta: SparseRelation, prev, *, backend: str = "np"):
@@ -96,7 +96,12 @@ def delta_restart_fixpoint(edges: SparseRelation, delta: SparseRelation,
         mode = "jit"
     backend = "np" if mode == "frontier" else "jnp"
     d0 = delta_seed(delta, prev, backend=backend)
-    return resume_fixpoint(edges, prev, d0, max_iters=max_iters, mode=mode)
+    batched = np.ndim(prev) == 2
+    y0 = prev if batched else np.asarray(prev)[None]
+    d0 = d0 if batched else np.asarray(d0)[None]
+    st = FixpointState(y0, d0, np.zeros(np.shape(y0)[0], np.int32),
+                       edges.semiring, batched)
+    return fixpoint(edges, state=st, max_iters=max_iters, mode=mode)
 
 
 # --------------------------------------------------------------------------
@@ -130,7 +135,8 @@ def refresh_program(prog, db, prev, log: DeltaLog, *, hints=None,
     with an explicit reason.
     """
     db2 = db.apply_delta(log)
-    hints = dict(prog.sort_hints) if hints is None else dict(hints)
+    ph = planner.PlanHints.of(hints, defaults=prog.sort_hints)
+    hints = dict(ph.sorts)
 
     ok, why = log.monotone()
     if not ok:
@@ -139,7 +145,7 @@ def refresh_program(prog, db, prev, log: DeltaLog, *, hints=None,
         return _full(prog, db2, log, "no previous solution to restart "
                      "from", max_iters)
 
-    plan = planner.plan_program(prog, db2, hints,
+    plan = planner.plan_program(prog, db2, ph,
                                 objective="incremental",
                                 delta_nnz=log.nnz(), max_iters=max_iters)
     sp = plan.strata[0] if plan.strata else None

@@ -169,7 +169,8 @@ def build_family(name: str, make_program: Callable[[int], Program],
     template = make_program(template_source)
     hints = dict(template.sort_hints)
     plan = planner.plan_program(
-        template, db, hints, objective="throughput", edges=edges,
+        template, db, planner.PlanHints(sorts=hints),
+        objective="throughput", edges=edges,
         adapt_storage=False, require_vector=True, mesh=graph_mesh)
     edges = planner.materialize_edges(plan, db, hints)
     n = db.dom(plan.strata[0].vf.out_sort)
@@ -341,7 +342,8 @@ def _latency_plan(fam: Family):
         try:
             template = fam.make_program(0)
             plan = planner.plan_program(
-                template, fam.db, dict(template.sort_hints),
+                template, fam.db,
+                planner.PlanHints(sorts=dict(template.sort_hints)),
                 objective="latency",
                 edges=fam.plan.strata[0].edges_override,
                 adapt_storage=False, require_vector=True)
@@ -368,10 +370,9 @@ def latency_serve(fam: Family, init: np.ndarray):
         return None
     if jax.default_backend() != "cpu" or _latency_plan(fam) is False:
         return None
-    from repro.sparse.fixpoint import sparse_seminaive_fixpoint
-    y, iters = sparse_seminaive_fixpoint(
-        fam.edges, np.asarray(init), mode="frontier",
-        max_iters=fam.max_iters)
+    from repro.sparse.fixpoint import fixpoint
+    y, iters = fixpoint(fam.edges, np.asarray(init), mode="frontier",
+                        max_iters=fam.max_iters)
     return np.asarray(y), int(iters)
 
 

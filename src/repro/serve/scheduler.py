@@ -49,7 +49,6 @@ import collections
 import dataclasses
 import time
 
-import jax
 import numpy as np
 
 from repro.core import engine, planner
@@ -58,7 +57,7 @@ from repro.serve import family as fam_mod
 from repro.serve.cache import LRUCache
 from repro.serve.family import (Family, QueryRequest, UpdateRequest,
                                 bucket)
-from repro.serve.metrics import RequestMetrics
+from repro.serve.metrics import FrontierMetrics, RequestMetrics
 from repro.serve.slots import SlotPool
 from repro.sparse.coo import SparseRelation
 
@@ -86,6 +85,8 @@ class _FamilyState:
     next_deliver: int = 0        # FIFO delivery cursor
     done: dict = dataclasses.field(default_factory=dict)
     served: int = 0
+    frontier: FrontierMetrics = dataclasses.field(
+        default_factory=FrontierMetrics)
 
 
 class ContinuousServer:
@@ -189,6 +190,8 @@ class ContinuousServer:
                     break
                 fs.pool.step(self.chunk_iters)
                 self._counters["chunks"] += 1
+                fs.frontier.record(fs.pool.frontier_nnz(),
+                                   fs.pool.frontier_density())
                 self._harvest(fs, delivered)
         return delivered
 
@@ -321,25 +324,20 @@ class ContinuousServer:
         fam = fs.fam
 
         def chunk_fn_factory(b=want):
-            # keyed on the resolved SpMM backend too: a pallas-runner
-            # plan steps through the fused kernel's chunk (which plans
-            # host geometry and memoizes its own per-operator compile),
-            # while jnp plans keep the jitted traceable chunk
-            be = planner.spmm_exec_backend(fam.plan.strata[0].runner)
+            # the chunk is the plan runner's serve_chunk_fn (Runner
+            # protocol, DESIGN.md §10) — a jitted traceable chunk for
+            # jnp runners, the fused kernel's un-jitted chunk (which
+            # plans host geometry and memoizes its own per-operator
+            # compile) for a pallas-runner plan; keyed on the resolved
+            # SpMM backend so backend overrides recompile
+            runner = fam.plan.strata[0].runner
+            be = planner.spmm_exec_backend(runner)
             key = (fam.plan.signature, be, b, 1)
             fn = self._compiled.get(key)
             if fn is None:
-                from repro.sparse.fixpoint import resume_fixpoint_chunk
-                k = self.chunk_iters
-                if be == "jnp":
-                    fn = jax.jit(lambda e, y, d, it:
-                                 resume_fixpoint_chunk(e, y, d, it,
-                                                       max_iters=k))
-                else:
-                    def fn(e, y, d, it, be=be, k=k):
-                        return resume_fixpoint_chunk(e, y, d, it,
-                                                     max_iters=k,
-                                                     backend=be)
+                from repro.core import runners as runners_mod
+                fn = runners_mod.get(runner).serve_chunk_fn(
+                    self.chunk_iters)
                 self._compiled.put(key, fn)
             return fn
 
@@ -469,6 +467,7 @@ class ContinuousServer:
                    "served": fs.served,
                    "weight": fs.weight,
                    "warm_answers": len(fs.fam.answers),
-                   "warm_evictions": fs.fam.answers.evictions}
+                   "warm_evictions": fs.fam.answers.evictions,
+                   "frontier": fs.frontier.summary()}
             for name, fs in self._families.items()}
         return out

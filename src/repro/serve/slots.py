@@ -126,6 +126,9 @@ class BitsetBoolStepper:
     def live_lanes(self) -> np.ndarray:
         return _lane_bits(np.bitwise_or.reduce(self.d, axis=0), self.b)
 
+    def frontier_nnz(self) -> int:
+        return int(np.unpackbits(self.d.view(np.uint8)).sum())
+
     def step(self, k: int) -> None:
         for _ in range(k):
             live = self.live_lanes()
@@ -208,6 +211,10 @@ class LevelSyncTropStepper:
             np.bitwise_or.reduce(self.ring, axis=0), axis=0)
         return _lane_bits(any_front, self.b)
 
+    def frontier_nnz(self) -> int:
+        front = np.bitwise_or.reduce(self.ring, axis=0)
+        return int(np.unpackbits(front.view(np.uint8)).sum())
+
     def step(self, k: int) -> None:
         r = self.wmax + 1
         for _ in range(k):
@@ -279,6 +286,10 @@ class JaxChunkStepper:
         return np.asarray(
             (self.d != np.asarray(self._sr.zero,
                                   self._sr.dtype)).any(axis=1))
+
+    def frontier_nnz(self) -> int:
+        return int((self.d != np.asarray(self._sr.zero,
+                                         self._sr.dtype)).sum())
 
     def step(self, k: int) -> None:
         if not self.live_lanes().any():
@@ -365,6 +376,15 @@ class SlotPool:
 
     def step(self, k: int) -> None:
         self.stepper.step(k)
+
+    def frontier_nnz(self) -> int:
+        """Live Δ entries across all lanes — the chunk-boundary frontier
+        observation the scheduler streams into its per-family
+        :class:`~repro.serve.metrics.FrontierMetrics`."""
+        return self.stepper.frontier_nnz()
+
+    def frontier_density(self) -> float:
+        return self.frontier_nnz() / float(self.b * self.fam.n or 1)
 
     def harvest(self) -> list[tuple[QueryRequest, np.ndarray, int]]:
         """Evict every occupied slot whose convergence mask fired:

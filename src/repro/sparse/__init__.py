@@ -8,13 +8,20 @@ tuples rather than a dense masked tensor.
 """
 
 from repro.sparse.adaptive import (DENSIFY_ABOVE, SPARSIFY_BELOW,
-                                   adapt_value, density)
+                                   ReplanPolicy, adapt_value, density)
 from repro.sparse.contract import mspm, spmm, spmspm, spmv, vspm
 from repro.sparse.coo import SparseRelation
-from repro.sparse.fixpoint import resume_fixpoint, sparse_seminaive_fixpoint
+# NOTE: the unified fixpoint() *function* is deliberately not re-exported
+# here — binding that name at package level would shadow the
+# ``repro.sparse.fixpoint`` submodule.  Import it from the submodule:
+# ``from repro.sparse.fixpoint import fixpoint``.
+from repro.sparse.fixpoint import (FixpointState, FrontierStats,
+                                   resume_fixpoint,
+                                   sparse_seminaive_fixpoint)
 
 __all__ = [
     "SparseRelation", "spmv", "vspm", "spmm", "mspm", "spmspm",
+    "FixpointState", "FrontierStats", "ReplanPolicy",
     "sparse_seminaive_fixpoint", "resume_fixpoint", "density",
     "adapt_value", "SPARSIFY_BELOW", "DENSIFY_ABOVE",
 ]

@@ -1,4 +1,5 @@
-"""Adaptive density-based densify/sparsify switch (DESIGN.md §2).
+"""Adaptive switching policies: storage density (DESIGN.md §2) and
+mid-fixpoint runner re-planning (DESIGN.md §10).
 
 Real recursive workloads drift: an EDB adjacency is ~10⁻⁴ dense on a
 SNAP-scale graph, while a transitive closure on a small dense block
@@ -17,6 +18,8 @@ per-stratum storage decisions of :func:`repro.core.planner.plan_program`.
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
@@ -76,3 +79,124 @@ def adapt_value(arr, semiring: str, *,
         return arr
     cap = max(1, int(d * np.asarray(arr).size * CAPACITY_SLACK) + 1)
     return SparseRelation.from_dense(arr, semiring, capacity=cap)
+
+
+# --------------------------------------------------------------------------
+# Mid-fixpoint re-planning (DESIGN.md §10)
+# --------------------------------------------------------------------------
+#
+# The storage hysteresis above flips a *representation* between strata;
+# the pieces below flip the *runner* between chunks of one fixpoint.
+# Same design split as the planner's SHARDED_COST/SPMM_COST: a frozen
+# policy (when a switch is allowed) and a patchable measured-constant
+# model (what each runner's next round costs), so tests and calibration
+# sweeps can pin either side.
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanPolicy:
+    """When the adaptive executor may switch runners mid-fixpoint.
+
+    Every guard bounds the regression an adversarial (oscillating-
+    density) workload can extract versus the best static plan: a switch
+    only fires when the challenger prices at least ``hysteresis``×
+    cheaper per round, at most once per ``min_chunks_between`` chunks,
+    never before ``warmup_chunks`` chunks have been observed, and never
+    more than ``max_switches`` times in one fixpoint — so the total
+    hand-off overhead is ≤ ``max_switches`` chunk boundaries and the
+    time spent in a mispriced runner is ≤ one chunk per switch.
+    """
+
+    #: rounds per chunk — the re-planning granularity (and the serve
+    #: loop's chunk_iters twin)
+    chunk_iters: int = 8
+    #: challenger must price this many × under the incumbent's next-round
+    #: estimate before a switch fires
+    hysteresis: float = 2.0
+    #: chunks that must elapse after a switch before the next one
+    min_chunks_between: int = 2
+    #: hard cap on switches per fixpoint
+    max_switches: int = 4
+    #: chunks to observe before the first switch is allowed
+    warmup_chunks: int = 1
+
+    def should_switch(self, incumbent_cost: float, challenger_cost: float,
+                      *, chunk_index: int, chunks_since_switch: int,
+                      switches: int) -> bool:
+        if switches >= self.max_switches:
+            return False
+        if chunk_index + 1 <= self.warmup_chunks:
+            return False
+        if chunks_since_switch < self.min_chunks_between:
+            return False
+        return challenger_cost * self.hysteresis <= incumbent_cost
+
+
+@dataclasses.dataclass
+class AdaptiveCostModel:
+    """Per-round ns estimates for re-pricing the *remaining* fixpoint at
+    a chunk boundary, from the observed :class:`~repro.sparse.fixpoint.
+    FrontierStats` (DESIGN.md §10, calibrated against
+    ``BENCH_replan.json``).
+
+    Unlike the planner's static models these price one *round*, not a
+    whole run — remaining trip counts cancel across candidates sharing
+    the same GSN round structure, so the comparison needs only the
+    per-round term.  The frontier worklist is the only candidate whose
+    round cost tracks the live frontier (O(Σ deg(frontier)) host work);
+    the staged runners pay O(nnz(E)·B) regardless of density — that gap
+    is exactly the drifting-workload win the adaptive executor captures.
+    Module-level instance :data:`ADAPTIVE_COST` is patchable in place.
+    """
+
+    #: host worklist: per expanded edge (gather + ⊗ + combine-at)
+    host_edge_ns: float = 60.0
+    #: host worklist: per vertex per live row per round (the O(n) scans)
+    host_vertex_ns: float = 4.0
+    #: host worklist: fixed per-round python overhead per live row
+    host_round_ns: float = 5_000.0
+    #: staged jnp loop: per stored edge per lane per round
+    staged_edge_ns: float = 1.5
+    #: staged jnp loop: per vertex per lane per round (⊕/⊖/mask sweeps)
+    staged_vertex_ns: float = 1.0
+    #: staged loop: fixed per-round dispatch/loop overhead
+    staged_round_ns: float = 20_000.0
+    #: dense matmul runner: per n² cell per lane per round
+    dense_cell_ns: float = 0.6
+    #: sharded loop: per-round synchronizing-collective toll per device
+    sharded_sync_ns: float = 50_000.0
+
+    def round_ns(self, runner: str, *, n: int, e_nnz: int, batch: int,
+                 frontier_nnz: int, live_rows: int, semiring: str,
+                 fused_speedup: float = 1.0, mesh_d: int = 1) -> float:
+        """Estimated cost of the *next* round for ``runner`` given the
+        chunk-boundary frontier observation."""
+        if runner == "sparse_frontier":
+            deg = e_nnz / max(1, n)
+            return (frontier_nnz * deg * self.host_edge_ns
+                    + live_rows * (n * self.host_vertex_ns
+                                   + self.host_round_ns))
+        if runner == "sparse_jit":
+            return (e_nnz * batch * self.staged_edge_ns
+                    + n * batch * self.staged_vertex_ns
+                    + self.staged_round_ns)
+        if runner == "sparse_frontier_pallas":
+            base = self.round_ns("sparse_jit", n=n, e_nnz=e_nnz,
+                                 batch=batch, frontier_nnz=frontier_nnz,
+                                 live_rows=live_rows, semiring=semiring)
+            return base / max(fused_speedup, 1.0)
+        if runner == "vector_dense":
+            return (n * n * batch * self.dense_cell_ns
+                    + n * batch * self.staged_vertex_ns
+                    + self.staged_round_ns)
+        if runner == "sparse_sharded":
+            work = (e_nnz * batch * self.staged_edge_ns
+                    + n * batch * self.staged_vertex_ns)
+            return (work / max(1, mesh_d)
+                    + mesh_d * self.sharded_sync_ns
+                    + self.staged_round_ns)
+        raise ValueError(f"no adaptive cost model for runner {runner!r}")
+
+
+#: module-level so tests and calibration sweeps can patch it in place
+ADAPTIVE_COST = AdaptiveCostModel()

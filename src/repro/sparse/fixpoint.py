@@ -39,6 +39,7 @@ inert — the serve loop uses them as batch padding.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 import weakref
 
 import jax
@@ -52,37 +53,179 @@ from repro.sparse.coo import SparseRelation
 
 @dataclasses.dataclass
 class FrontierStats:
-    """Per-round worklist sizes and expanded-edge counts (frontier mode)."""
+    """Frontier observations from one fixpoint run or one bounded chunk.
+
+    Frontier mode fills the per-round lists (worklist sizes and expanded
+    edge counts).  Chunked execution (:func:`fixpoint` with ``budget=``,
+    the adaptive executor, the serve steppers) instead reports the
+    *carry* observed at the chunk boundary: ``nnz`` live Δ entries,
+    their ``density`` over the ``(B, n)`` carry, at global iteration
+    ``iteration`` — the re-planning signal of DESIGN.md §10.
+    """
 
     frontier_sizes: list[int]
     edges_expanded: list[int]
+    nnz: int = 0
+    density: float = 0.0
+    iteration: int = 0
 
     @property
     def total_edges(self) -> int:
         return int(sum(self.edges_expanded))
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FixpointState:
+    """The resumable carry of a GSN fixpoint — what every runner consumes
+    and produces (DESIGN.md §10).
+
+    Invariant (the warm-restart contract of :func:`resume_fixpoint`):
+    ``y`` is a pre-fixpoint (``y ≤ F(y)``) and ``delta = F(y) ⊖ y`` its
+    pending frontier, so any runner sharing the GSN round body can pick
+    the pair up mid-stream and converge to the identical answer.  The
+    arrays live in the canonical batched ``(B, n)`` layout (``B = 1``
+    for a single source — ``batched`` remembers whether the caller's
+    init had a batch axis); ``iters`` is the per-row ``(B,)`` iteration
+    counter carried across chunks.  Registered as a jax pytree so
+    compiled chunk bodies can take it apart for free; the observation
+    helpers (``frontier_nnz``/``density``/``converged``) pull the Δ to
+    host, so call them at chunk boundaries, not inside traced code.
+    """
+
+    y: object
+    delta: object
+    iters: object
+    semiring: str = "bool"
+    batched: bool = True
+
+    def tree_flatten(self):
+        return (self.y, self.delta, self.iters), (self.semiring,
+                                                  self.batched)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        y, delta, iters = children
+        return cls(y, delta, iters, *aux)
+
+    @classmethod
+    def cold(cls, edges: SparseRelation, init) -> "FixpointState":
+        """Seed a cold start: ``y = 0̄``, ``delta = init ⊖ 0̄`` — exactly
+        the first carry of the staged runners (``0̄ ⊗ E = 0̄``, so the
+        cold Δ is just the init's live entries)."""
+        srn = sr_mod.get(edges.semiring, lib="np")
+        i2 = np.asarray(init, srn.dtype)
+        batched = i2.ndim == 2
+        if not batched:
+            i2 = i2[None]
+        y0 = np.full(i2.shape, srn.zero, srn.dtype)
+        d0 = srn.minus(i2, y0)
+        return cls(y0, d0, np.zeros(i2.shape[0], np.int32),
+                   edges.semiring, batched)
+
+    @property
+    def batch(self) -> int:
+        return int(np.shape(self.y)[0])
+
+    @property
+    def n(self) -> int:
+        return int(np.shape(self.y)[1])
+
+    def frontier_nnz(self) -> int:
+        """Live (non-0̄) Δ entries across all rows (host reduction)."""
+        zero = sr_mod.get(self.semiring, lib="np").zero
+        return int((np.asarray(self.delta) != zero).sum())
+
+    def density(self) -> float:
+        return self.frontier_nnz() / max(1, self.batch * self.n)
+
+    def live_rows(self) -> int:
+        zero = sr_mod.get(self.semiring, lib="np").zero
+        return int((np.asarray(self.delta) != zero).any(axis=1).sum())
+
+    @property
+    def converged(self) -> bool:
+        return self.frontier_nnz() == 0
+
+    def stats(self) -> FrontierStats:
+        """Chunk-boundary observation: the re-planning signal."""
+        nnz = self.frontier_nnz()
+        return FrontierStats([], [], nnz=nnz,
+                             density=nnz / max(1, self.batch * self.n),
+                             iteration=int(np.max(np.asarray(self.iters),
+                                                  initial=0)))
+
+    def solution(self):
+        """``(x*, iters)`` in the caller's original shape — drops the
+        synthetic batch axis when the seeding init was 1-D."""
+        if self.batched:
+            return self.y, np.asarray(self.iters, np.int32)
+        return (jnp.asarray(self.y)[0] if not isinstance(self.y, np.ndarray)
+                else self.y[0]), int(np.asarray(self.iters)[0])
+
+
+def fixpoint(edges: SparseRelation, init=None, *, state=None,
+             budget=None, max_iters: int = 10_000, mode: str = "auto",
+             backend: str = "jnp"):
+    """Least fixpoint of ``x = init ⊕ vspm(x, edges)`` — the one sparse
+    entrypoint (cold, warm, and chunked; DESIGN.md §10).
+
+    Pass exactly one of ``init`` (cold start) or ``state`` (a
+    :class:`FixpointState` carry to resume).  With ``budget=None`` the
+    run converges and returns ``(x*, iters)`` — a 2-D ``(B, n)`` init
+    runs the batched multi-source path (module docstring) with a
+    ``(B,)`` iters vector, and a resumed run's iters *include* the
+    rounds already in the carry.  With ``budget=k`` the loop advances
+    **at most k rounds** and returns the updated :class:`FixpointState`
+    instead — chain calls to interleave work, observe the frontier, or
+    hand the carry to a different runner (the adaptive executor's unit,
+    :mod:`repro.core.runners`).
+
+    ``mode`` is ``"auto"`` (frontier worklist on CPU hosts, staged jit
+    on accelerators; budgeted calls default to the staged chunk body),
+    ``"jit"`` or ``"frontier"``.  ``backend`` selects the SpMM execution
+    of the staged loop (DESIGN.md §9): ``"jnp"`` is the traceable
+    gather/scatter composition, ``"pallas"`` the fused TPU kernel
+    (per-operator compiled closures), ``"fused"`` the host-numpy fused
+    loop (bit-packed 𝔹 lanes on CPU).  The non-jnp backends need a
+    concrete ``edges``.
+    """
+    if (init is None) == (state is None):
+        raise ValueError("fixpoint() takes exactly one of init= or state=")
+    if budget is None:
+        if state is None:
+            y, iters, _ = _dispatch(edges, init, max_iters=max_iters,
+                                    mode=mode, backend=backend)
+            return y, iters
+        y, iters, _ = _dispatch(edges, None, max_iters=max_iters,
+                                mode=mode, backend=backend,
+                                warm=(state.y, state.delta))
+        iters = np.asarray(state.iters, np.int32) \
+            + np.asarray(iters, np.int32)
+        if not state.batched:
+            return jnp.asarray(y)[0], int(iters[0])
+        return y, iters
+    st = state if state is not None else FixpointState.cold(edges, init)
+    budget = int(min(budget, max_iters))
+    if mode == "frontier":
+        y, d, it = _frontier_chunk(edges, st.y, st.delta, st.iters, budget)
+    else:
+        # the staged chunk body is the carry-exact unit shared with the
+        # serve loop; "auto" means it here — a budgeted frontier pass
+        # must be asked for explicitly
+        y, d, it = _resume_chunk(edges, st.y, st.delta, st.iters,
+                                 max_iters=budget, backend=backend)
+    return FixpointState(y, d, it, st.semiring, st.batched)
+
+
 def sparse_seminaive_fixpoint(edges: SparseRelation, init, *,
                               max_iters: int = 10_000,
                               mode: str = "auto",
                               backend: str = "jnp"):
-    """Least fixpoint of ``x = init ⊕ vspm(x, edges)``.
-
-    Returns ``(x*, iters)`` like the dense runners; frontier mode
-    additionally attaches a :class:`FrontierStats` as ``iters_stats`` on
-    the returned stats tuple — use :func:`sparse_seminaive_fixpoint_stats`
-    for the instrumented variant.
-
-    A 2-D ``(B, n)`` init runs the batched multi-source path (module
-    docstring): the result is ``(B, n)`` and ``iters`` is a ``(B,)``
-    per-source iteration-count vector.
-
-    ``backend`` selects the SpMM execution of the GSN loop (DESIGN.md
-    §9): ``"jnp"`` is the traceable gather/scatter composition,
-    ``"pallas"`` the fused TPU kernel (per-operator compiled closures),
-    ``"fused"`` the host-numpy fused loop (bit-packed 𝔹 lanes on CPU).
-    The non-jnp backends need a concrete ``edges``.
-    """
+    """Deprecated alias of :func:`fixpoint` (cold start)."""
+    warnings.warn("sparse_seminaive_fixpoint is deprecated; use "
+                  "fixpoint(edges, init, ...)", DeprecationWarning,
+                  stacklevel=2)
     y, iters, _ = _dispatch(edges, init, max_iters=max_iters, mode=mode,
                             backend=backend)
     return y, iters
@@ -112,7 +255,13 @@ def resume_fixpoint(edges: SparseRelation, y0, d0, *,
     per round, per-row convergence).
 
     Returns ``(x*, iters)``; ``iters`` counts only the *resumed* rounds.
+
+    Deprecated: build a :class:`FixpointState` and call
+    ``fixpoint(edges, state=state)`` (whose iters *include* the carry's).
     """
+    warnings.warn("resume_fixpoint is deprecated; use fixpoint(edges, "
+                  "state=FixpointState(y0, d0, ...))", DeprecationWarning,
+                  stacklevel=2)
     return _dispatch(edges, None, max_iters=max_iters, mode=mode,
                      warm=(y0, d0))[:2]
 
@@ -137,10 +286,23 @@ def resume_fixpoint_chunk(edges: SparseRelation, y0, d0, it0, *,
     :func:`resume_fixpoint`: ``y0`` is a pre-fixpoint and
     ``d0 = F(y0) ⊖ y0`` its pending delta, which the chunk preserves.
 
-    ``backend`` as in :func:`sparse_seminaive_fixpoint`; the non-jnp
-    chunks memoize their compiled/host closures on the operator's cached
-    SpMM plan, so callers need not (and must not) wrap them in ``jit``.
+    ``backend`` as in :func:`fixpoint`; the non-jnp chunks memoize their
+    compiled/host closures on the operator's cached SpMM plan, so
+    callers need not (and must not) wrap them in ``jit``.
+
+    Deprecated: use ``fixpoint(edges, state=state, budget=k)``.
     """
+    warnings.warn("resume_fixpoint_chunk is deprecated; use "
+                  "fixpoint(edges, state=state, budget=max_iters)",
+                  DeprecationWarning, stacklevel=2)
+    return _resume_chunk(edges, y0, d0, it0, max_iters=max_iters,
+                         backend=backend)
+
+
+def _resume_chunk(edges: SparseRelation, y0, d0, it0, *,
+                  max_iters: int, backend: str = "jnp"):
+    """The chunk body behind :func:`fixpoint`'s ``budget=`` path and the
+    (deprecated) :func:`resume_fixpoint_chunk` shim."""
     if edges.arity != 2 or edges.shape[0] != edges.shape[1]:
         raise ValueError(f"recursive expansion needs a square binary edge "
                          f"relation, got shape {edges.shape}")
@@ -188,7 +350,9 @@ def _dispatch(edges, init, *, max_iters, mode, warm=None, backend="jnp"):
         if batched:
             return _batched_frontier_fixpoint(edges, init, max_iters,
                                               warm=warm)
-        return _frontier_fixpoint(edges, init, max_iters, warm=warm)
+        y, _, iters, stats = _frontier_fixpoint(edges, init, max_iters,
+                                                warm=warm)
+        return y, iters, stats
     raise ValueError(f"unknown mode {mode!r}")
 
 
@@ -559,13 +723,32 @@ def _batched_frontier_fixpoint(edges, init, max_iters, *, warm=None):
     rows = (np.asarray(init) if warm is None
             else zip(np.asarray(warm[0]), np.asarray(warm[1])))
     for row in rows:
-        y, it, st = _frontier_fixpoint(
+        y, _, it, st = _frontier_fixpoint(
             edges, None if warm is not None else row, max_iters,
             warm=row if warm is not None else None)
         ys.append(y)
         iters.append(it)
         stats.append(st)
     return jnp.stack(ys), np.asarray(iters, np.int32), stats
+
+
+def _frontier_chunk(edges, y0, d0, it0, budget: int):
+    """Budgeted worklist rounds over a ``(B, n)`` carry — the frontier
+    runner's ``run_chunk`` body.  One worklist per row (the frontier
+    representation is inherently per-source); per-row iteration counting
+    matches the staged chunk exactly (a row only counts rounds in which
+    its Δ was live)."""
+    y0 = np.asarray(y0)
+    d0 = np.asarray(d0)
+    it0 = np.asarray(it0, np.int32)
+    ys, ds, its = [], [], []
+    for j in range(y0.shape[0]):
+        y, d, it, _ = _frontier_fixpoint(edges, None, budget,
+                                         warm=(y0[j], d0[j]))
+        ys.append(np.asarray(y))
+        ds.append(np.asarray(d))
+        its.append(int(it0[j]) + it)
+    return np.stack(ys), np.stack(ds), np.asarray(its, np.int32)
 
 
 def _frontier_fixpoint(edges: SparseRelation, init, max_iters: int, *,
@@ -616,7 +799,9 @@ def _frontier_fixpoint(edges: SparseRelation, init, max_iters: int, *,
         stats.edges_expanded.append(expanded)
         live = d != zero if sr.name != "bool" else d
         iters += 1
-    return jnp.asarray(y), iters, stats
+    # (y, d) at loop exit is an exact resumable carry: y is the updated
+    # pre-fixpoint and d its still-pending delta — zero when converged
+    return jnp.asarray(y), d, iters, stats
 
 
 def _combine_at(sr_name: str, out: np.ndarray, idx, vals) -> None:

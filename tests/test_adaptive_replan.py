@@ -1,0 +1,376 @@
+"""Mid-fixpoint adaptive re-planning (DESIGN.md §10): the unified
+``fixpoint`` entrypoint, the Runner protocol's warm hand-offs, the
+ReplanPolicy thrash guards, and the planner's adaptive execution path.
+
+The load-bearing property is *bit-exactness*: every chunkable runner
+shares the GSN round body, so a fixpoint chunked across any runner
+sequence must return byte-identical values AND per-row iteration counts
+to the static single-runner run.  Sharded hand-offs need ≥ 2 devices —
+run via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import planner
+from repro.core import runners as runners_mod
+from repro.core import engine
+from repro.core.program import run_program
+from repro.datalog import datasets, programs
+from repro.sparse import adaptive
+from repro.sparse import fixpoint as fx
+from repro.sparse.coo import SparseRelation
+
+CPU = jax.default_backend() == "cpu"
+NDEV = len(jax.devices())
+
+
+def _chain_hub(n_chain=30, hub=12, seed=0):
+    """A drifting-density graph: a long chain whose tail feeds a dense
+    hub clique — the frontier collapses to one vertex along the chain,
+    then re-explodes inside the hub."""
+    rng = np.random.default_rng(seed)
+    edges = [(i, i + 1) for i in range(n_chain - 1)]
+    base = n_chain
+    for i in range(hub):
+        for j in range(hub):
+            if i != j and rng.random() < 0.6:
+                edges.append((base + i, base + j))
+    edges.append((n_chain - 1, base))
+    n = n_chain + hub
+    coords = np.asarray(edges, np.int64)
+    rel = SparseRelation.from_coo(coords, np.ones(len(coords), bool),
+                                  (n, n), "bool")
+    return rel.as_jnp(), n
+
+
+def _one_hot(n, src=0):
+    init = np.zeros(n, bool)
+    init[src] = True
+    return init
+
+
+# --------------------------------------------------------------------------
+# The unified fixpoint() entrypoint (satellite: API collapse)
+# --------------------------------------------------------------------------
+
+
+def test_fixpoint_requires_exactly_one_seed():
+    edges, n = _chain_hub()
+    with pytest.raises(ValueError, match="exactly one"):
+        fx.fixpoint(edges)
+    st = fx.FixpointState.cold(edges, _one_hot(n))
+    with pytest.raises(ValueError, match="exactly one"):
+        fx.fixpoint(edges, _one_hot(n), state=st)
+
+
+def test_fixpoint_chunked_matches_static():
+    """Chained budget= calls across alternating runners converge to the
+    static answer with identical iteration counts."""
+    edges, n = _chain_hub()
+    init = _one_hot(n)
+    y_ref, it_ref = fx.fixpoint(edges, init, mode="jit")
+    st = fx.FixpointState.cold(edges, init)
+    modes = ["jit", "frontier"]
+    k = 0
+    while not st.converged:
+        st = fx.fixpoint(edges, state=st, budget=3,
+                         mode=modes[k % 2])
+        k += 1
+    y, iters = st.solution()
+    assert np.array_equal(np.asarray(y), np.asarray(y_ref))
+    assert int(iters) == int(it_ref)
+    assert k > 3  # the chain actually needed several chunks
+
+
+def test_fixpoint_resume_from_state():
+    edges, n = _chain_hub()
+    init = _one_hot(n)
+    y_ref, it_ref = fx.fixpoint(edges, init, mode="jit")
+    st = fx.fixpoint(edges, init=None if False else init, budget=4)
+    y, iters = fx.fixpoint(edges, state=st)
+    assert np.array_equal(np.asarray(y), np.asarray(y_ref))
+    assert int(iters) == int(it_ref)
+
+
+def test_deprecated_shims_warn_and_agree():
+    edges, n = _chain_hub()
+    init = _one_hot(n)
+    y_ref, it_ref = fx.fixpoint(edges, init, mode="jit")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        y1, it1 = fx.sparse_seminaive_fixpoint(edges, init, mode="jit")
+        st = fx.FixpointState.cold(edges, init)
+        y2, it2 = fx.resume_fixpoint(edges, st.y[0], st.delta[0],
+                                     mode="jit")
+        y3, d3, it3 = fx.resume_fixpoint_chunk(
+            edges, st.y, st.delta, np.zeros(1, np.int32),
+            max_iters=10_000)
+    kinds = [x.category for x in w]
+    assert kinds.count(DeprecationWarning) >= 3
+    assert np.array_equal(np.asarray(y1), np.asarray(y_ref))
+    assert int(it1) == int(it_ref)
+    assert np.array_equal(np.asarray(y2), np.asarray(y_ref))
+    assert np.array_equal(np.asarray(y3)[0], np.asarray(y_ref))
+
+
+# --------------------------------------------------------------------------
+# Runner-pair hand-off bit-exactness (the tentpole's differential test)
+# --------------------------------------------------------------------------
+
+
+class _Favor:
+    """A cost model that makes one runner permanently cheapest, so the
+    executor must switch to it at the first boundary the policy allows
+    — every other runner prices 100× dearer."""
+
+    def __init__(self, favorite):
+        self.favorite = favorite
+
+    def round_ns(self, runner, **kw):
+        return 1.0 if runner == self.favorite else 100.0
+
+
+def _adaptive_vs_static(start, target, monkeypatch, *, mesh=None,
+                        policy=None):
+    edges, n = _chain_hub()
+    init = _one_hot(n)
+    y_ref, it_ref = fx.fixpoint(edges, init, mode="jit")
+    monkeypatch.setattr(adaptive, "ADAPTIVE_COST", _Favor(target))
+    ctx = runners_mod.make_context(edges, init, "bool", 10_000,
+                                   mesh=mesh)
+    pol = policy or adaptive.ReplanPolicy(chunk_iters=3)
+    y, iters, trace = runners_mod.adaptive_fixpoint(
+        ctx, start=start, candidates=(start, target), policy=pol)
+    assert np.array_equal(np.asarray(y), np.asarray(y_ref)), \
+        (start, target)
+    assert int(np.asarray(iters)) == int(it_ref), (start, target)
+    return trace
+
+
+@pytest.mark.parametrize("start,target", [
+    ("sparse_jit", "sparse_frontier"),
+    ("sparse_frontier", "sparse_jit"),
+    ("sparse_jit", "vector_dense"),
+    ("vector_dense", "sparse_frontier"),
+    ("sparse_jit", "sparse_frontier_pallas"),
+    ("sparse_frontier_pallas", "sparse_frontier"),
+])
+def test_handoff_bit_exact(start, target, monkeypatch):
+    trace = _adaptive_vs_static(start, target, monkeypatch)
+    assert trace.final_runner == target
+    assert len(trace.switches) == 1
+    ev = trace.switches[0]
+    assert (ev.from_runner, ev.to_runner) == (start, target)
+    assert ev.est_to < ev.est_from
+
+
+@pytest.mark.skipif(NDEV < 2, reason="sharded hand-off needs >= 2 "
+                    "devices (XLA_FLAGS=--xla_force_host_platform_"
+                    "device_count=8)")
+@pytest.mark.parametrize("start,target", [
+    ("sparse_jit", "sparse_sharded"),
+    ("sparse_sharded", "sparse_frontier"),
+])
+def test_sharded_handoff_bit_exact(start, target, monkeypatch):
+    from repro.launch.mesh import make_graph_mesh
+    mesh = make_graph_mesh(2)
+    trace = _adaptive_vs_static(start, target, monkeypatch, mesh=mesh)
+    assert trace.final_runner == target
+
+
+def test_sharded_candidate_dropped_without_mesh(monkeypatch):
+    """No mesh in the context → the sharded candidate silently drops
+    out instead of crashing the executor."""
+    trace = _adaptive_vs_static("sparse_jit", "sparse_frontier",
+                                monkeypatch)
+    edges, n = _chain_hub()
+    ctx = runners_mod.make_context(edges, _one_hot(n), "bool", 10_000)
+    monkeypatch.setattr(adaptive, "ADAPTIVE_COST",
+                        _Favor("sparse_sharded"))
+    y, iters, tr = runners_mod.adaptive_fixpoint(
+        ctx, start="sparse_jit",
+        candidates=("sparse_sharded", "sparse_jit"))
+    assert tr.switches == []  # infeasible challenger never switched in
+    assert trace is not None
+
+
+def test_trop_handoff_bit_exact(monkeypatch):
+    """Hand-offs are exact on the tropical semiring too (⊖ = masked
+    keep; weighted shortest paths)."""
+    g = datasets.erdos_renyi(60, 3.0, seed=7, weighted=True)
+    rel = g.sparse_adjacency(semiring="trop").as_jnp()
+    srn = np.full(60, np.inf, np.float32)
+    srn[0] = 0.0
+    y_ref, it_ref = fx.fixpoint(rel, srn, mode="jit")
+    monkeypatch.setattr(adaptive, "ADAPTIVE_COST",
+                        _Favor("sparse_frontier"))
+    ctx = runners_mod.make_context(rel, srn, "trop", 10_000)
+    y, iters, trace = runners_mod.adaptive_fixpoint(
+        ctx, start="sparse_jit", candidates=("sparse_frontier",),
+        policy=adaptive.ReplanPolicy(chunk_iters=2))
+    assert np.array_equal(np.asarray(y), np.asarray(y_ref))
+    assert int(np.asarray(iters)) == int(it_ref)
+
+
+# --------------------------------------------------------------------------
+# ReplanPolicy thrash guards
+# --------------------------------------------------------------------------
+
+
+class _Oscillate:
+    """Adversarial pricing: the cheapest runner flips every call, the
+    worst case the policy's hysteresis + spacing guards must bound."""
+
+    def __init__(self):
+        self.calls = 0
+
+    def round_ns(self, runner, **kw):
+        self.calls += 1
+        flip = (self.calls // 2) % 2 == 0
+        cheap = "sparse_jit" if flip else "sparse_frontier"
+        return 1.0 if runner == cheap else 100.0
+
+
+def test_thrash_guard_bounds_switches(monkeypatch):
+    edges, n = _chain_hub(n_chain=60, hub=8)
+    init = _one_hot(n)
+    y_ref, it_ref = fx.fixpoint(edges, init, mode="jit")
+    monkeypatch.setattr(adaptive, "ADAPTIVE_COST", _Oscillate())
+    pol = adaptive.ReplanPolicy(chunk_iters=2, max_switches=2,
+                                min_chunks_between=2)
+    ctx = runners_mod.make_context(edges, init, "bool", 10_000)
+    y, iters, trace = runners_mod.adaptive_fixpoint(
+        ctx, start="sparse_jit", candidates=("sparse_frontier",),
+        policy=pol)
+    assert len(trace.switches) <= pol.max_switches
+    # spacing guard: consecutive switches are >= min_chunks_between apart
+    for a, b in zip(trace.switches, trace.switches[1:]):
+        assert b.chunk - a.chunk >= pol.min_chunks_between
+    assert np.array_equal(np.asarray(y), np.asarray(y_ref))
+    assert int(np.asarray(iters)) == int(it_ref)
+
+
+def test_should_switch_guards():
+    pol = adaptive.ReplanPolicy(chunk_iters=4, hysteresis=2.0,
+                                min_chunks_between=2, max_switches=1,
+                                warmup_chunks=1)
+    ok = dict(chunk_index=3, chunks_since_switch=4, switches=0)
+    assert pol.should_switch(100.0, 10.0, **ok)
+    # hysteresis: 2× cheaper is the floor
+    assert not pol.should_switch(100.0, 60.0, **ok)
+    assert pol.should_switch(100.0, 50.0, **ok)
+    # warmup: no switch after the first observed chunk
+    assert not pol.should_switch(100.0, 10.0, chunk_index=0,
+                                 chunks_since_switch=1, switches=0)
+    # spacing
+    assert not pol.should_switch(100.0, 10.0, chunk_index=3,
+                                 chunks_since_switch=1, switches=0)
+    # hard cap
+    assert not pol.should_switch(100.0, 10.0, chunk_index=9,
+                                 chunks_since_switch=5, switches=1)
+
+
+# --------------------------------------------------------------------------
+# Planner integration: PlanHints + adaptive execution + explain
+# --------------------------------------------------------------------------
+
+
+def _bm_db(n=120, avg_deg=3.0, seed=2):
+    g = datasets.erdos_renyi(n, avg_deg, seed=seed)
+    schema = programs.bm(a=0).original.schema
+    return engine.Database(schema, {"id": n},
+                           {"E": g.sparse_adjacency(),
+                            "V": jnp.ones((n,), bool)})
+
+
+def test_plan_hints_legacy_dict_warns():
+    db = _bm_db()
+    prog = programs.bm(a=0).optimized
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        p1 = planner.plan_program(prog, db, hints={})
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    p2 = planner.plan_program(prog, db, hints=planner.PlanHints())
+    assert p1.signature == p2.signature
+    with pytest.raises(TypeError):
+        planner.plan_program(prog, db, hints=42)
+
+
+def test_plan_hints_validation():
+    with pytest.raises(TypeError):
+        planner.PlanHints(sorts={1: "asc"})
+    with pytest.raises(TypeError):
+        planner.PlanHints(replan="yes")
+    ph = planner.PlanHints(adaptive=True,
+                           replan=adaptive.ReplanPolicy(chunk_iters=2))
+    assert ph.cache_key()[1] is True
+
+
+def test_adaptive_execution_matches_static_and_logs():
+    db = _bm_db()
+    prog = programs.bm(a=0).optimized
+    ref, _ = run_program(prog, db, mode="naive")
+    plan = planner.plan_program(prog, db,
+                                hints=planner.PlanHints(adaptive=True))
+    assert plan.adaptive
+    out, stats = planner.execute_plan(plan, prog, db)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+    sp = plan.strata[0]
+    assert sp.switch_log is not None
+    assert sp.switch_log.chunks  # at least one chunk observed
+    txt = planner.explain(plan)
+    assert "adaptive" in txt
+    assert f"finished on {sp.switch_log.final_runner}" in txt
+
+
+def test_adaptive_switch_rendered_in_explain(monkeypatch):
+    # the auto plan picks the frontier runner on CPU and keeps the
+    # staged runner in `considered` — the adaptive candidates; pricing
+    # the staged runner cheapest forces a mid-fixpoint switch
+    db = _bm_db()
+    prog = programs.bm(a=0).optimized
+    ref, _ = run_program(prog, db, mode="naive")
+    plan = planner.plan_program(prog, db)
+    start = plan.strata[0].runner
+    target = next(c for c in plan.strata[0].considered
+                  if c != start and runners_mod.get(c).chunkable)
+    monkeypatch.setattr(adaptive, "ADAPTIVE_COST", _Favor(target))
+    pol = adaptive.ReplanPolicy(chunk_iters=1)
+    out, _ = planner.execute_plan(
+        plan, prog, db,
+        hints=planner.PlanHints(adaptive=True, replan=pol))
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+    tr = plan.strata[0].switch_log
+    assert tr is not None and tr.policy is pol
+    txt = planner.explain(plan)
+    if tr.switches:  # the BM fixpoint is deep enough on this seed
+        assert "switch" in txt
+        assert f"{start} → {target}" in txt
+
+
+def test_adaptive_forced_plan_still_converges():
+    """A forced single-runner plan has no `considered` alternatives —
+    the adaptive executor must still chunk it to convergence."""
+    db = _bm_db()
+    prog = programs.bm(a=0).optimized
+    ref, _ = run_program(prog, db, mode="naive")
+    plan = planner.plan_program(prog, db, mode="sparse_jit")
+    out, _ = planner.execute_plan(
+        plan, prog, db, hints=planner.PlanHints(adaptive=True))
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+    tr = plan.strata[0].switch_log
+    assert tr is not None and tr.switches == []
+
+
+def test_explain_without_adaptive_run_has_no_switch_lines():
+    db = _bm_db()
+    prog = programs.bm(a=0).optimized
+    plan = planner.plan_program(prog, db)
+    txt = planner.explain(plan)
+    assert "adaptive " not in txt and "switch " not in txt
