@@ -36,6 +36,9 @@
 #                      times the hardware backend.
 #   make test-kernel — fast fused-kernel parity suite in Pallas
 #                      interpret mode (CI test matrix step)
+#   make docs-check  — docs gate (CI lint step): every §N pointer in
+#                      the tree resolves to a DESIGN.md section and
+#                      every README ```python example executes
 
 PY      ?= python
 PYPATH  := src
@@ -101,6 +104,9 @@ bench-kernel:
 test-kernel:
 	REPRO_PALLAS_INTERPRET=1 PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q tests/test_coo_spmm.py
 
+docs-check:
+	PYTHONPATH=$(PYPATH) $(PY) tools/docs_check.py
+
 .PHONY: test test-all test-dist lint bench-smoke bench-sparse \
 	bench-serve bench-plan bench-incremental bench-sharded bench-replan \
-	bench-check bench-kernel test-kernel
+	bench-check bench-kernel test-kernel docs-check

@@ -248,3 +248,37 @@ SEMIRING_RULES: list[tuple[Term, Term]] = [
     # cast algebra: [P]⊗[P] = [P]
     (("mul", ("cast", "?p"), ("cast", "?p")), ("cast", "?p")),
 ]
+
+
+#: structural rules over maintenance-rule terms (DESIGN.md §11).  A
+#: candidate is an s-expression ``("recount", cone(seed("delta")))``;
+#: these rewrites canonicalize it — closure operators are idempotent,
+#: the forward closure absorbs the tight closure it contains, a
+#: seed-only "cone" is the identity on its seed set, and the full cone
+#: is the whole vertex universe no matter what seeded it, at which point
+#: the recount *is* a cold fixpoint.  The synthesizer uses the last fact
+#: to reject the degenerate candidate by proof instead of by pricing.
+MAINTENANCE_RULES: list[tuple[Term, Term]] = [
+    (("cone_tight", ("cone_tight", "?x")), ("cone_tight", "?x")),
+    (("cone_forward", ("cone_forward", "?x")), ("cone_forward", "?x")),
+    (("cone_forward", ("cone_tight", "?x")), ("cone_forward", "?x")),
+    (("cone_one_hop", ("cone_seeds", "?x")), ("cone_one_hop", "?x")),
+    (("cone_seeds", "?x"), "?x"),
+    (("cone_all", "?x"), "univ"),
+    (("cone_tight", "univ"), "univ"),
+    (("cone_forward", "univ"), "univ"),
+    (("recount", "univ"), "cold_fixpoint"),
+]
+
+
+def normalize(term: Term, rules: list[tuple[Term, Term]] | None = None,
+              *, iters: int = 8) -> Term:
+    """Saturate ``term`` under ``rules`` (default
+    :data:`MAINTENANCE_RULES`) and extract the smallest equivalent —
+    the canonical form cached and surfaced by ``explain()``."""
+    g = EGraph()
+    cid = g.add_term(term)
+    g.run_rules(list(rules if rules is not None else MAINTENANCE_RULES),
+                iters=iters)
+    out = g.extract(cid)
+    return term if out is None else out

@@ -94,9 +94,11 @@ class Database:
         ``op="merge"`` is the ⊕-merge ``R′ = R ⊕ Δ`` — a COO append for
         sparse relations (:meth:`SparseRelation.apply_delta`, capacity
         doubling beyond the padded buffer) and a ⊕-combining scatter for
-        dense ones.  ``op="delete"`` removes keys outright (the
-        non-monotone mutation; warm fixpoint state over the relation must
-        be recomputed — see DESIGN.md §5).
+        dense ones.  ``op="delete"`` removes keys outright and
+        ``op="increase"`` replaces stored values with larger ones
+        (delete-the-old ⊕ insert-the-new) — the non-monotone mutations;
+        warm fixpoint state over the relation is repaired by a
+        synthesized maintenance rule or recomputed (DESIGN.md §11).
         """
         from repro.sparse.coo import SparseRelation
         entries = getattr(delta, "entries", delta)
@@ -106,6 +108,9 @@ class Database:
             if isinstance(arr, SparseRelation):
                 if ent.op == "delete":
                     rels[ent.relation] = arr.delete_keys(ent.coords)
+                elif ent.op == "increase":
+                    rels[ent.relation] = arr.delete_keys(
+                        ent.coords).apply_delta(ent.coords, ent.values)
                 else:
                     rels[ent.relation] = arr.apply_delta(ent.coords,
                                                          ent.values)
@@ -122,6 +127,13 @@ class Database:
                     out[idx] = sr.zero
                 else:
                     out = arr.at[idx].set(sr.zero)
+            elif ent.op == "increase":
+                vals = np.asarray(ent.values, sr.dtype)
+                if isinstance(arr, np.ndarray):
+                    out = arr.copy()
+                    out[idx] = vals
+                else:
+                    out = arr.at[idx].set(jnp.asarray(vals))
             else:
                 vals = (np.full(len(coords), sr.one, sr.dtype)
                         if ent.values is None
@@ -226,6 +238,8 @@ def _rel_factor(a: ir.RelAtom, db: Database, target: sr_mod.Semiring,
             # stays sparse: consumed by the SpMV/SpMM contraction paths
             return _Factor(tuple(vars_only), arr)
         arr = arr.to_dense()  # constants/diagonals/negation/casts: dense
+    if xp is np and not isinstance(arr, np.ndarray):
+        arr = np.asarray(arr)  # jnp-backed storage under an np evaluation
     # index out constant arguments (each collapses one axis)
     vars_out: list[str] = []
     axis = 0

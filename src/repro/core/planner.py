@@ -55,13 +55,18 @@ from repro.sparse.coo import SparseRelation
 #: physical runners, in tie-break preference order (earlier wins ties).
 #: "delta_restart" is the incremental-maintenance strategy (DESIGN.md §5):
 #: it resumes the previous solution instead of recomputing, so at equal
-#: priced cost it can only do less work — hence it leads the order.  It
-#: is only ever *considered* under ``objective="incremental"`` and is
-#: executed by :func:`repro.incremental.refresh_program`, never by
-#: :func:`execute_plan` (which has no previous solution to restart from).
-RUNNERS = ("delta_restart", "sparse_sharded", "sparse_frontier_pallas",
-           "sparse_jit", "sparse_frontier", "vector_dense", "dense_gsn",
-           "dense_naive", "dense_host")
+#: priced cost it can only do less work — hence it leads the order.
+#: "synth_maintenance" is its non-monotone sibling (DESIGN.md §11): a
+#: CEGIS-verified ⊖/recount rule repairing deletes/weight-increases from
+#: the warm solution; it is only *considered* under
+#: ``objective="incremental"`` with a non-merge ``delta_op`` and a
+#: verified rule already in the maintenance cache.  Both are executed by
+#: :func:`repro.incremental.refresh_program` (or the serve loop), never
+#: by :func:`execute_plan` (which has no previous solution to restart
+#: from).
+RUNNERS = ("synth_maintenance", "delta_restart", "sparse_sharded",
+           "sparse_frontier_pallas", "sparse_jit", "sparse_frontier",
+           "vector_dense", "dense_gsn", "dense_naive", "dense_host")
 
 #: single-device runners that execute the vector equation
 #: ``x = init ⊕ x ⊗ E``.  "sparse_frontier_pallas" is the fused-kernel
@@ -384,15 +389,24 @@ def plan_program(prog, db: engine.Database, hints=None, *,
                  edges=None, adapt_storage: bool = True,
                  require_vector: bool = False,
                  delta_nnz: int | None = None,
+                 delta_op: str = "merge",
                  mesh=None) -> ExecutionPlan:
     """Choose a physical runner + storage for every stratum of ``prog``.
 
     ``objective`` is "latency" (one query; host frontier worklists are in
     play on CPU), "throughput" (batched serving; only staged runners), or
     "incremental" (a warm previous solution exists and ``delta_nnz``
-    tuples just changed monotonically — the "delta_restart" strategy is
-    priced at O(nnz(Δ) · affected-trip-count) against every full-
-    recompute candidate, DESIGN.md §5).  ``mode`` other than "auto"
+    tuples just changed — the "delta_restart" strategy is priced at
+    O(nnz(Δ) · affected-trip-count) against every full-recompute
+    candidate, DESIGN.md §5).  ``delta_op`` classifies the update for
+    the incremental objective: ``"merge"`` (monotone ⊕, the default)
+    keeps delta-restart in play, while ``"delete"``/``"increase"``/
+    ``"mixed"`` reject it with a recorded reason and instead consider
+    the "synth_maintenance" runner whenever a CEGIS-verified ⊖/recount
+    rule for (program signature, semiring, op) is already cached
+    (:func:`repro.incremental.maintenance.cached_rule`; planning never
+    synthesizes — callers run :func:`repro.incremental.maintenance.
+    ensure_rule` first, see DESIGN.md §11).  ``mode`` other than "auto"
     forces a runner on every stratum (legacy ``run_program`` strings
     compile to forced plans).  ``edges`` overrides the extracted linear
     operator of a single-stratum vector program (the serve loop's
@@ -425,9 +439,9 @@ def plan_program(prog, db: engine.Database, hints=None, *,
     if mode != "auto":
         forced = mode if mode in RUNNERS else \
             LEGACY_MODES.get(mode, "dense_host")
-        if forced == "delta_restart":
+        if forced in ("delta_restart", "synth_maintenance"):
             raise ValueError(
-                "delta_restart cannot be forced by mode= — it needs a "
+                f"{forced} cannot be forced by mode= — it needs a "
                 "previous solution; use objective='incremental' and "
                 "repro.incremental.refresh_program")
         if forced == "sparse_sharded" and mesh is None:
@@ -443,7 +457,7 @@ def plan_program(prog, db: engine.Database, hints=None, *,
             adapt_storage=adapt_storage and forced is None,
             max_iters=max_iters,
             delta_nnz=delta_nnz if si == 0 else None,
-            mesh=mesh))
+            delta_op=delta_op, mesh=mesh))
     plan = ExecutionPlan(
         prog.name, objective, mode, plans,
         tuple(r.head for r in prog.outputs), prog.post is not None,
@@ -550,7 +564,8 @@ def _term_flops(term: ir.Term, sorts: Mapping[str, str],
 
 def _plan_stratum(prog, stratum, si, db, hints, *, objective, forced,
                   cost_model, edges, adapt_storage, max_iters,
-                  delta_nnz=None, mesh=None) -> StratumPlan:
+                  delta_nnz=None, delta_op="merge",
+                  mesh=None) -> StratumPlan:
     # ``reads`` keeps every referenced relation name — including IDBs of
     # *earlier strata*, which exist only at execution time; the executor
     # fingerprints the input database over the union of all strata's
@@ -820,28 +835,65 @@ def _plan_stratum(prog, stratum, si, db, hints, *, objective, forced,
             raise ValueError(f"{prog.name}: edges override cannot be "
                              f"honored: {_vector_rejection(rejected)}")
 
-    # -- incremental maintenance: the delta-restart strategy ---------------
-    # priced at O(nnz(Δ) · affected-trip-count): the warm restart seeds
+    # -- incremental maintenance: delta-restart / synth_maintenance --------
+    # priced at O(nnz(Δ) · affected-trip-count): the warm repair seeds
     # its frontier from the nnz(Δ) touched edges, and per round the
     # affected region grows by ~the average degree, never beyond nnz(E)
     # (full-recompute per-round work).  Only offered under
     # objective="incremental" so latency/throughput plans are unchanged.
+    # Monotone ⊕-merges take "delta_restart" (DESIGN.md §5); deletes and
+    # weight increases void its pre-fixpoint property and instead take
+    # "synth_maintenance" — but only when a CEGIS-verified ⊖/recount
+    # rule is already cached for (signature, semiring, op); planning has
+    # no side effects, so it never synthesizes one (DESIGN.md §11).
+    synth_rule = None
     if objective == "incremental":
         if delta_nnz is None:
             rejected["delta_restart"] = (
                 "no update delta recorded — pass delta_nnz "
                 "(repro.incremental.refresh_program does)")
+            rejected["synth_maintenance"] = rejected["delta_restart"]
         elif vf is None:
             rejected["delta_restart"] = _vector_rejection(rejected)
+            rejected["synth_maintenance"] = rejected["delta_restart"]
         elif e_nnz is None:
             rejected["delta_restart"] = (
                 "linear operator materializes dense — delta seeding "
                 "needs the sparse fast path")
-        else:
+            rejected["synth_maintenance"] = rejected["delta_restart"]
+        elif delta_op == "merge":
             deg = max(1.0, e_nnz / max(n_vec, 1))
             affected = min(float(e_nnz), float(delta_nnz) * deg)
             considered["delta_restart"] = CostEstimate(
                 affected + 1.0, 12.0 * affected, trips)
+            rejected["synth_maintenance"] = (
+                "update is a monotone ⊕-merge — delta-restart needs no "
+                "synthesized ⊖/recount rule")
+        else:
+            rejected["delta_restart"] = (
+                f"{delta_op} is non-monotone (not a ⊕-merge) — the old "
+                f"solution is no pre-fixpoint of the new operator and a "
+                f"warm restart could over-derive (DESIGN.md §11)")
+            from repro.incremental import maintenance as _mt
+            rule = _mt.cached_rule(vf.signature, vf.semiring, delta_op)
+            if rule is None:
+                rejected["synth_maintenance"] = (
+                    f"no maintenance rule cached for ({vf.semiring}, "
+                    f"{delta_op}) — run repro.incremental.maintenance."
+                    f"ensure_rule first")
+            elif not rule.verified:
+                rejected["synth_maintenance"] = (
+                    f"rule synthesis failed: {rule.reason}")
+            else:
+                synth_rule = rule
+                # seeds ≤ nnz(Δ); the tight cone grows by ~deg per hop
+                # and its in-edge recount re-reads each cone vertex's
+                # in-adjacency once — a constant factor over the
+                # delta-restart frontier estimate
+                deg = max(1.0, e_nnz / max(n_vec, 1))
+                affected = min(float(e_nnz), float(delta_nnz) * deg)
+                considered["synth_maintenance"] = CostEstimate(
+                    2.0 * affected + 1.0, 16.0 * affected, trips)
 
     if cost_model == "hlo":
         considered = _hlo_costs(considered, prog, stratum, db, hints, vf,
@@ -862,6 +914,9 @@ def _plan_stratum(prog, stratum, si, db, hints, *, objective, forced,
     if runner == "delta_restart":
         reason += (f" (warm restart: nnz(Δ)={int(delta_nnz)} seeds the "
                    f"frontier)")
+    if runner == "synth_maintenance":
+        reason += (f" (synthesized rule {synth_rule.name} repairs the "
+                   f"{delta_op} in-place: {synth_rule.reason})")
     return StratumPlan(si, tuple(stratum.idbs), runner, reason, storage,
                        notes, reads, cost, considered, rejected, vf, edges,
                        partition if runner == "sparse_sharded" else None)
@@ -940,8 +995,8 @@ def _hlo_costs(considered, prog, stratum, db, hints, vf, edges, trips,
         return CostEstimate(max(c.flops, 1.0), c.bytes, trips, "hlo")
 
     for runner in list(out):
-        if runner in ("delta_restart", "sparse_sharded",
-                      "sparse_frontier_pallas"):
+        if runner in ("delta_restart", "synth_maintenance",
+                      "sparse_sharded", "sparse_frontier_pallas"):
             # none has a single-device staged step to walk (the sharded
             # per-iteration HLO is per-shard; the fused kernel's
             # geometry is host-planned) — analytic stands, except the

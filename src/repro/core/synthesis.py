@@ -24,6 +24,12 @@ The CEGIS loop (paper Sec. 6.2.1), adapted to the ⊕-of-terms structure:
 This mirrors Rosette's generate/verify duel; we replace the SMT-encoded
 choice variables with the admissibility filter + cached-evaluation DFS
 (DESIGN.md §4), which keeps the explored space in the paper's 10–150 range.
+
+The same sketch/verify/refine shape is reused a second time by
+:mod:`repro.incremental.maintenance` (DESIGN.md §11), where the grammar
+ranges over ⊖/recount *maintenance* rules instead of query rewrites and
+the counterexamples are update probes (:func:`repro.core.verify.
+sample_update_probes`) rather than orbit databases.
 """
 
 from __future__ import annotations

@@ -14,6 +14,12 @@ Refutation is sound (a mismatch is a real counterexample — returned to the
 synthesizer as CEGIS feedback).  Acceptance is exhaustive over tiny boolean
 domains plus randomized over larger ones; the final program additionally
 passes a full Π₁-vs-Π₂ answer comparison.
+
+Also here: :class:`UpdateProbe` / :func:`sample_update_probes`, the probe
+generator for the *maintenance*-rule CEGIS loop (DESIGN.md §11) — small
+adversarial graphs (chains, diamonds, slack paths, cycles feeding tails)
+plus randomized digraphs, each with a deletion/increase batch, on which
+``maintain(y*, ΔE) ≡ fixpoint(E ⊖ ΔE)`` is checked numerically.
 """
 
 from __future__ import annotations
@@ -214,6 +220,113 @@ def verify_h(task: FGHTask, h_body: ir.SSP, *, rng: np.random.Generator,
             if not values_equal(got, pt.target):
                 return VerifyResult(False, pt, checked)
     return VerifyResult(True, None, checked)
+
+
+# --------------------------------------------------------------------------
+# Update-maintenance probes (DESIGN.md §11)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class UpdateProbe:
+    """One bounded-model instance for maintenance-rule verification: a
+    small vector fixpoint ``x = init ⊕ x ⊗ E`` plus a non-monotone
+    update against ``E``.  The CEGIS loop in
+    :mod:`repro.incremental.maintenance` replays each candidate rule on
+    these and compares against a from-scratch solve — the maintenance
+    analogue of :func:`sample_dbs` + :func:`orbit_points`."""
+
+    name: str
+    edges: object          # SparseRelation over the probe semiring
+    init: np.ndarray       # (n,) init vector (a query source)
+    coords: np.ndarray     # (k, 2) updated edge keys
+    new_values: np.ndarray | None = None  # increase op: the heavier values
+
+
+def _probe_rel(coords, values, n, semiring):
+    from repro.sparse.coo import SparseRelation
+    return SparseRelation.from_coo(coords, values, (n, n), semiring,
+                                   capacity=max(1, 2 * len(coords)),
+                                   lib="np")
+
+
+def sample_update_probes(semiring: str, rng: np.random.Generator,
+                         count: int = 8, *, op: str = "delete"
+                         ) -> list[UpdateProbe]:
+    """Adversarial + randomized probes for non-monotone maintenance.
+
+    The deterministic set is chosen to *refute* every unsound candidate
+    in the rule grammar (DESIGN.md §11): chains kill no-closure and
+    one-hop cones, cyclic support kills DRed-style support counting
+    (a cycle keeps itself "supported" after its external feed is
+    deleted).  ``maxplus`` probes are DAGs only — a positive cycle has
+    no finite longest path, so cyclic instances would not even have a
+    from-scratch ground truth to compare against.
+    """
+    sr = sr_mod.get(semiring, lib="np")
+    cyclic_ok = semiring != "maxplus"
+
+    def mk(name, coords, dels, *, n=None, w=None, inc=None):
+        coords = np.asarray(coords, np.int64)
+        n = n or int(coords.max()) + 1
+        if semiring == "bool":
+            vals = np.ones(len(coords), bool)
+        else:
+            vals = np.asarray(w if w is not None
+                              else np.ones(len(coords)), sr.dtype)
+        init = np.full(n, sr.zero, sr.dtype)
+        init[0] = sr.one
+        return UpdateProbe(name, _probe_rel(coords, vals, n, semiring),
+                           init, np.asarray(dels, np.int64),
+                           None if inc is None
+                           else np.asarray(inc, sr.dtype))
+
+    probes = [
+        # chain: effects propagate ≥ 3 hops past the deleted edge
+        mk("chain", [(0, 1), (1, 2), (2, 3), (3, 4)], [(0, 1)]),
+        # diamond: surviving alternate support must be kept, not dropped
+        mk("diamond", [(0, 1), (0, 2), (1, 3), (2, 3)], [(0, 1)],
+           w=[1, 5, 1, 1]),
+        # slack: deleting a non-tight edge must be a no-op
+        mk("slack", [(0, 1), (1, 2), (0, 2)], [(0, 2)], w=[1, 1, 9]),
+        # batch: two deletes in one update
+        mk("batch", [(0, 1), (1, 2), (2, 3), (3, 4)],
+           [(0, 1), (2, 3)]),
+    ]
+    if cyclic_ok:
+        probes += [
+            # cyclic support: 1⇄2 keep each other "supported" after the
+            # external feed (0,1) is deleted — the DRed counterexample
+            mk("cycle-feed", [(0, 1), (1, 2), (2, 1)], [(0, 1)]),
+            # self-loop support (the 1-cycle variant)
+            mk("self-loop", [(0, 1), (1, 1)], [(0, 1)],
+               w=[1, 0] if semiring != "bool" else None),
+            # a cycle with a tail hanging off it
+            mk("cycle-tail", [(0, 1), (1, 2), (2, 3), (3, 1), (1, 4)],
+               [(0, 1)]),
+        ]
+    for i in range(count):
+        n = int(rng.integers(6, 10))
+        mask = rng.random((n, n)) < 0.3
+        np.fill_diagonal(mask, False)
+        if not cyclic_ok:
+            mask = np.triu(mask)  # DAG
+        coords = np.argwhere(mask)
+        if len(coords) == 0:
+            coords = np.asarray([(0, 1)])
+        w = rng.integers(1, 6, len(coords))
+        k = int(rng.integers(1, min(4, len(coords)) + 1))
+        dels = coords[rng.choice(len(coords), size=k, replace=False)]
+        probes.append(mk(f"rand{i}", coords, dels, n=n, w=w))
+    if op == "increase":
+        for p in probes:
+            k = len(p.coords)
+            bump = rng.integers(1, 5, k)
+            if semiring == "bool":
+                p.new_values = np.ones(k, bool)
+            else:
+                p.new_values = np.asarray(bump * 3 + 1, sr.dtype)
+    return probes
 
 
 def verify_programs_equal(p1: Program, p2: Program, dbs, *,

@@ -1,32 +1,46 @@
-"""Incremental fixpoint maintenance (DESIGN.md §5).
+"""Incremental fixpoint maintenance (DESIGN.md §5 and §11).
 
 Keeps fixpoint solutions warm across database mutations instead of
 recomputing from ⊥ on every change:
 
 * :class:`DeltaLog` — a typed log of streaming relation updates:
   ⊕-merge edge insertions (and monotone weight decreases for
-  trop/minplus, where ⊕ = min absorbs them) plus explicit deletions,
-  which are the non-monotone case.
+  trop/minplus, where ⊕ = min absorbs them) plus the non-monotone
+  mutations — explicit deletions and weight increases.
 * :func:`delta_restart_fixpoint` — re-converge ``x = init ⊕ x ⊗ E′``
   from the previous solution ``y*``, seeding the GSN frontier with only
   the rows reachable from touched edges (``d₀ = (y* ⊗ ΔE) ⊖ y*``,
   O(nnz(Δ))); exactness is guaranteed by semiring monotonicity.  A 2-D
   ``(B, n)`` previous solution repairs a whole batch of warm answers in
-  one SpMM pass per round.
+  one SpMM pass per round (DESIGN.md §5).
+* :func:`maintain_nonmonotone` / :func:`synthesize_maintenance`
+  (:mod:`repro.incremental.maintenance`) — the non-monotone repair: a
+  CEGIS loop over a small ⊕/⊗/⊖/recount rule grammar synthesizes, and
+  a probe-based verifier certifies, the maintenance program
+  ``maintain(y*, ΔE) ≡ fixpoint(E ⊖ ΔE)``; the e-graph-normalized
+  winner is cached per (program signature, semiring, update op) and
+  executed as a warm-start carry — reset the support cone, recount its
+  in-edges, resume GSN (DESIGN.md §11).
 * :func:`refresh_program` — the policy layer: applies a
   :class:`DeltaLog` through :meth:`repro.core.engine.Database.
   apply_delta`, asks the cost-based planner (``objective="incremental"``)
-  whether delta-restart beats full recomputation, and falls back to a
-  full recompute — with an explicit reason — for non-monotone updates,
-  missing previous solutions, or deltas large enough that restarting
-  loses.
+  whether delta-restart (monotone logs) or the synthesized maintenance
+  rule (deletes / weight increases) beats full recomputation, and falls
+  back to a full recompute — with an explicit reason — whenever
+  synthesis times out, verification fails, the previous solution is
+  missing, or the delta is large enough that repairing loses.
 """
 
 from repro.incremental.delta import DeltaEntry, DeltaLog
+from repro.incremental.maintenance import (MaintenanceRule, cached_rule,
+                                           ensure_rule,
+                                           maintain_nonmonotone,
+                                           synthesize_maintenance)
 from repro.incremental.restart import (RefreshReport, delta_restart_fixpoint,
                                        delta_seed, refresh_program)
 
 __all__ = [
-    "DeltaEntry", "DeltaLog", "RefreshReport", "delta_seed",
-    "delta_restart_fixpoint", "refresh_program",
+    "DeltaEntry", "DeltaLog", "MaintenanceRule", "RefreshReport",
+    "cached_rule", "delta_seed", "delta_restart_fixpoint", "ensure_rule",
+    "maintain_nonmonotone", "refresh_program", "synthesize_maintenance",
 ]

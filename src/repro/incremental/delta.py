@@ -13,7 +13,14 @@ recognizable without looking at the stored data:
 * ``delete`` — remove keys outright.  Not expressible as ⊕ on any of
   our semirings, hence non-monotone: the old solution may over-derive
   and warm restart is unsound.  :func:`repro.incremental.refresh_program`
-  falls back to a full recompute with this recorded as the reason.
+  repairs these through a CEGIS-verified ⊖/recount maintenance rule
+  (:mod:`repro.incremental.maintenance`, DESIGN.md §11) when one exists
+  for the program's (signature, semiring, op), and falls back to a full
+  recompute with a recorded reason otherwise.
+* ``increase`` — replace stored values with *larger* ones (a tropical
+  weight increase).  ⊕ = min would silently absorb it, so it is the
+  other non-monotone mutation: recorded as delete-the-old ⊕ insert-the-
+  new and routed through the same synthesized maintenance path.
 """
 
 from __future__ import annotations
@@ -33,7 +40,7 @@ class DeltaEntry:
     relation: str
     coords: np.ndarray           # (k, arity) int
     values: np.ndarray | None    # (k,) semiring values; None → 1̄ each
-    op: str                      # "merge" | "delete"
+    op: str                      # "merge" | "delete" | "increase"
 
     @property
     def size(self) -> int:
@@ -75,6 +82,19 @@ class DeltaLog:
         self.entries.append(DeltaEntry(relation, coords, None, "delete"))
         return self
 
+    def increase(self, relation: str, coords, values) -> "DeltaLog":
+        """Replace the stored values at ``coords`` with the (larger)
+        ``values`` — a tropical weight increase, the mutation ⊕ = min
+        would silently absorb.  Semantically delete-then-insert; the
+        maintenance path seeds from the deleted old values and merges
+        the new ones (DESIGN.md §11)."""
+        coords = np.atleast_2d(np.asarray(coords, np.int64))
+        values = np.asarray(values).reshape(-1)
+        assert len(values) == len(coords), (coords.shape, values.shape)
+        self.entries.append(DeltaEntry(relation, coords, values,
+                                       "increase"))
+        return self
+
     # -- classification ------------------------------------------------------
     def monotone(self) -> tuple[bool, str | None]:
         """Whether every entry is a ⊕-merge (so the post-update least
@@ -89,6 +109,16 @@ class DeltaLog:
                                f"solution could over-derive")
         return True, None
 
+    def nonmonotone_op(self) -> str | None:
+        """The update-op class the maintenance rule cache is keyed on:
+        ``None`` for all-merge logs, else ``"delete"``/``"increase"``
+        when one kind of non-monotone entry appears, ``"mixed"`` when
+        both do (repaired with the delete rule plus merge seeding)."""
+        ops = {e.op for e in self.entries} - {"merge"}
+        if not ops:
+            return None
+        return ops.pop() if len(ops) == 1 else "mixed"
+
     def touched(self) -> set[str]:
         return {e.relation for e in self.entries}
 
@@ -99,14 +129,29 @@ class DeltaLog:
                    if relation is None or e.relation == relation)
 
     # -- materialization -----------------------------------------------------
+    def removed_coords(self, relation: str) -> np.ndarray:
+        """Keys whose stored value stops holding: ``delete`` entries
+        plus the old keys of ``increase`` entries (an increase is
+        delete-the-old ⊕ insert-the-new).  What the maintenance rule's
+        seed selector distrusts (DESIGN.md §11)."""
+        coords = [e.coords for e in self.entries
+                  if e.relation == relation
+                  and e.op in ("delete", "increase")]
+        if not coords:
+            return np.zeros((0, 2), np.int64)
+        return np.concatenate(coords)
+
     def merged(self, relation: str, shape, semiring: str, *,
                lib: str = "np") -> SparseRelation:
-        """All ``merge`` entries for ``relation`` coalesced into one
-        sparse Δ relation (the seed operand of delta-restart)."""
+        """All ⊕-contributing entries for ``relation`` coalesced into
+        one sparse Δ relation (the seed operand of delta-restart):
+        ``merge`` entries plus the *new* values of ``increase`` entries
+        (their old keys come back via :meth:`removed_coords`)."""
         sr = sr_mod.get(semiring, lib="np")
         coords, values = [], []
         for e in self.entries:
-            if e.relation != relation or e.op != "merge":
+            if e.relation != relation or e.op not in ("merge",
+                                                      "increase"):
                 continue
             coords.append(e.coords)
             values.append(np.full(e.size, sr.one, sr.dtype)

@@ -1,0 +1,431 @@
+"""Synthesized ⊖/recount maintenance for non-monotone updates (DESIGN.md §11).
+
+Deleting an edge (or increasing its weight) voids the pre-fixpoint
+property that delta-restart (DESIGN.md §5) rides on: the old solution
+``y*`` may *over-derive* under the shrunk operator, and on a plain
+semiring there is no subtraction to cancel the lost derivations with.
+On the idempotent complete lattices (𝔹, trop, maxplus) an exact repair
+still exists, but its shape is a program, not a formula — which seeds to
+distrust, how far the distrust propagates, and what to recount.  Rather
+than hand-writing that program, this module *synthesizes* it the same
+way the rest of the repo synthesizes H from F and G (paper Sec. 4–5):
+
+* a small **rule grammar** over ⊕/⊗/⊖/recount primitives — terms
+  ``recount(cone(seed(Δ)))`` with seeds ∈ {touched, supported,
+  unsupported} and cones ∈ {seeds, one_hop, tight, forward, all};
+* a **CEGIS loop**: candidates are enumerated cheapest-first, replayed
+  on adversarial + randomized probes (:func:`repro.core.verify.
+  sample_update_probes`) against a from-scratch ground truth, and every
+  refutation is kept as a counterexample that future candidates must
+  pass first (the cyclic probes are what kill DRed-style support
+  counting);
+* **e-graph normalization** (:func:`repro.core.egraph.normalize` under
+  :data:`repro.core.egraph.MAINTENANCE_RULES`) canonicalizes each
+  candidate and rejects by *proof* the degenerate full-cone rule, whose
+  recount collapses to a cold fixpoint;
+* the verified winner is **cached** per (program signature, semiring,
+  update op) so a serve loop synthesizes once and repairs forever.
+
+The winning rule on all three lattices is ``recount(cone_tight(
+seed_supported(Δ)))``: distrust the endpoints whose deleted in-edge
+actually carried their value (*supported* seeds), grow the distrust
+through *tight* surviving edges (``y*[dst] = y*[src] ⊗ w``), reset the
+cone to 0̄, recount its in-edges once against the intact exterior, and
+resume the ordinary GSN loop from that carry.  Everything outside the
+cone keeps a valid support chain, so the carry is a pre-fixpoint below
+``lfp F′`` and the resume converges to the exact from-scratch answer
+(correctness argument in DESIGN.md §11).  Semirings without ⊖ (nat,
+real) record a synthesis failure and the callers fall back to a full
+recompute — semantics never change, only speed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import egraph
+from repro.core import semiring as sr_mod
+from repro.core import verify
+from repro.sparse import fixpoint as fx
+from repro.sparse.coo import SparseRelation
+from repro.sparse.fixpoint import FixpointState, fixpoint
+
+# -- rule grammar -----------------------------------------------------------
+
+#: seed selectors: which update endpoints to distrust.
+#: * ``touched`` — every dst of an updated edge;
+#: * ``supported`` — only dsts whose deleted edge was tight under y*
+#:   (it actually carried the stored value);
+#: * ``unsupported`` — supported dsts whose remaining in-edges carry no
+#:   support (DRed-style counting — *unsound* on cyclic support, kept in
+#:   the grammar precisely so CEGIS refutes it with the cycle probes).
+SEED_KINDS = ("supported", "touched", "unsupported")
+
+#: cone selectors: how far the distrust propagates from the seeds.
+#: ``seeds``/``one_hop`` are unsound (effects chain), ``tight`` is the
+#: minimal sound closure, ``forward`` a sound over-approximation, and
+#: ``all`` the degenerate whole-universe cone (≡ cold fixpoint —
+#: rejected by e-graph proof, not by probing).
+CONE_KINDS = ("seeds", "one_hop", "tight", "forward", "all")
+
+_SEED_COST = {"supported": 0, "touched": 1, "unsupported": 2}
+_CONE_COST = {"seeds": 0, "one_hop": 1, "tight": 2, "forward": 3, "all": 4}
+
+
+@dataclasses.dataclass(frozen=True)
+class MaintenanceRule:
+    """One (possibly verified) maintenance program from the grammar."""
+
+    seeds: str
+    cone: str
+    semiring: str
+    op: str                       # "delete" | "increase"
+    verified: bool
+    reason: str                   # why verified / why rejected
+    term: tuple = ()              # normalized s-expression
+    probes: int = 0               # ground-truth comparisons passed
+    refuted: tuple = ()           # ((seeds, cone, probe-name), ...) trail
+
+    @property
+    def name(self) -> str:
+        """The display name ``explain()`` and reports surface."""
+        return f"⊖-recount[seed={self.seeds}, cone={self.cone}]"
+
+
+def rule_term(seeds: str, cone: str) -> tuple:
+    return ("recount", (f"cone_{cone}", (f"seed_{seeds}", "delta")))
+
+
+def _candidates():
+    cands = [(s, c) for c in CONE_KINDS for s in SEED_KINDS]
+    cands.sort(key=lambda sc: (_CONE_COST[sc[1]], _SEED_COST[sc[0]]))
+    return cands
+
+
+# -- rule cache -------------------------------------------------------------
+
+_RULE_CACHE: dict[tuple[str, str, str], MaintenanceRule] = {}
+
+
+def cached_rule(signature: str, semiring: str, op: str
+                ) -> MaintenanceRule | None:
+    """The cached synthesis outcome for this (program, semiring, op) —
+    positive *or* negative; ``None`` means never attempted.  The planner
+    consults this without side effects; :func:`ensure_rule` populates it."""
+    return _RULE_CACHE.get((signature, semiring, op))
+
+
+def clear_rule_cache() -> None:
+    _RULE_CACHE.clear()
+
+
+def ensure_rule(signature: str, semiring: str, op: str = "delete", *,
+                budget_s: float = 5.0, probes: int = 8,
+                seed: int = 0) -> MaintenanceRule:
+    """Return the cached rule for this key, synthesizing (and caching the
+    outcome, including failures) on a miss."""
+    key = (signature, semiring, op)
+    rule = _RULE_CACHE.get(key)
+    if rule is None:
+        rule = synthesize_maintenance(semiring, op, budget_s=budget_s,
+                                      probes=probes, seed=seed)
+        _RULE_CACHE[key] = rule
+    return rule
+
+
+# -- CEGIS ------------------------------------------------------------------
+
+
+def synthesize_maintenance(semiring: str, op: str = "delete", *,
+                           budget_s: float = 5.0, probes: int = 8,
+                           seed: int = 0) -> MaintenanceRule:
+    """CEGIS over the rule grammar: enumerate cheapest-first, reject the
+    degenerate cone by e-graph proof, replay survivors on accumulated
+    counterexamples before fresh probes, and return the first candidate
+    whose repairs match the from-scratch ground truth everywhere."""
+    sr = sr_mod.get(semiring, lib="np")
+    if sr.minus is None:
+        return MaintenanceRule(
+            "-", "-", semiring, op, False,
+            f"semiring {semiring} has no ⊖ (not an idempotent complete "
+            f"lattice) — maintenance carries are inexpressible; full "
+            f"recompute is the only exact refresh")
+    if op == "increase" and semiring == "bool":
+        return MaintenanceRule(
+            "-", "-", semiring, op, False,
+            "weight increase is not expressible on 𝔹 (edges are "
+            "unweighted) — record it as delete ⊕ insert instead")
+    rng = np.random.default_rng(seed)
+    pool = verify.sample_update_probes(semiring, rng, probes, op=op)
+    counterexamples: list[verify.UpdateProbe] = []
+    refuted: list[tuple[str, str, str]] = []
+    deadline = time.monotonic() + budget_s
+    for seeds, cone in _candidates():
+        term = egraph.normalize(rule_term(seeds, cone))
+        if term == "cold_fixpoint" or "univ" in _leaves(term):
+            refuted.append((seeds, cone,
+                            "egraph: normalizes to cold_fixpoint "
+                            "(≡ full recompute)"))
+            continue
+        if time.monotonic() > deadline:
+            return MaintenanceRule(
+                seeds, cone, semiring, op, False,
+                f"synthesis budget ({budget_s:.1f}s) exhausted after "
+                f"{len(refuted)} refutations — falling back to full "
+                f"recompute", term, 0, tuple(refuted))
+        cand = MaintenanceRule(seeds, cone, semiring, op, False, "",
+                               term)
+        bad = _first_failure(cand, counterexamples) \
+            or _first_failure(cand, pool)
+        if bad is not None:
+            if bad not in counterexamples:
+                counterexamples.append(bad)
+            refuted.append((seeds, cone, f"counterexample: {bad.name}"))
+            continue
+        checked = len(counterexamples) + len(pool)
+        return MaintenanceRule(
+            seeds, cone, semiring, op, True,
+            f"verified on {checked} probe(s) "
+            f"({len(counterexamples)} CEGIS counterexample(s) reused)",
+            term, checked, tuple(refuted))
+    return MaintenanceRule(
+        "-", "-", semiring, op, False,
+        f"no candidate in the {len(_candidates())}-rule grammar "
+        f"survived verification", (), 0, tuple(refuted))
+
+
+def _leaves(term) -> set:
+    if isinstance(term, str):
+        return {term}
+    out = set()
+    for c in term[1:]:
+        out |= _leaves(c)
+    return out
+
+
+def _first_failure(rule: MaintenanceRule, probes
+                   ) -> verify.UpdateProbe | None:
+    """Replay ``rule`` on each probe against the from-scratch ground
+    truth (sound refutation: a mismatch is a real counterexample)."""
+    for p in probes:
+        if not _check_probe(rule, p):
+            return p
+    return None
+
+
+def _check_probe(rule: MaintenanceRule, p: verify.UpdateProbe) -> bool:
+    # stamp the candidate executable for the replay: CEGIS is exactly the
+    # process that decides whether the stamp is deserved
+    rule = dataclasses.replace(rule, verified=True,
+                               reason="candidate under CEGIS replay")
+    old = p.edges
+    dvals = _gather_values(old, p.coords)
+    new = old.delete_keys(p.coords)
+    merge = None
+    if rule.op == "increase" and p.new_values is not None:
+        new = new.apply_delta(p.coords, p.new_values)
+        merge = SparseRelation.from_coo(p.coords, p.new_values,
+                                        old.shape, old.semiring, lib="np")
+    y_star, _ = fixpoint(old, p.init, mode="frontier", max_iters=512)
+    y_true, _ = fixpoint(new, p.init, mode="frontier", max_iters=512)
+    y_got, _ = maintain_nonmonotone(new, p.coords, dvals,
+                                    np.asarray(y_star), p.init, rule,
+                                    merge_delta=merge, max_iters=512,
+                                    mode="frontier")
+    return verify.values_equal(np.asarray(y_got), np.asarray(y_true))
+
+
+def _gather_values(rel: SparseRelation, coords) -> np.ndarray:
+    """Old stored values at ``coords`` (0̄ where absent) — what the
+    tightness test of a deleted edge is evaluated against."""
+    sr = sr_mod.get(rel.semiring, lib="np")
+    host = rel.as_np()
+    k = int(host.nnz)
+    out = np.full(len(np.asarray(coords).reshape(-1, rel.arity)),
+                  sr.zero, sr.dtype)
+    if k == 0:
+        return out
+    keys = host._flat_keys(host.coords[:k])
+    want = host._flat_keys(coords)
+    order = np.argsort(keys, kind="stable")
+    sk, sv = keys[order], host.values[:k][order]
+    lo = np.searchsorted(sk, want, "left")
+    hi = np.searchsorted(sk, want, "right")
+    for i in range(len(want)):  # |Δ| is small; duplicates ⊕-combine
+        if hi[i] > lo[i]:
+            v = sv[lo[i]]
+            for j in range(lo[i] + 1, hi[i]):
+                v = sr.add(v, sv[j])
+            out[i] = v
+    return out
+
+
+# -- executor ---------------------------------------------------------------
+
+
+def maintain_nonmonotone(edges_new: SparseRelation, deleted_coords,
+                         deleted_values, prev, init,
+                         rule: MaintenanceRule, *, merge_delta=None,
+                         max_iters: int = 10_000, mode: str = "auto"):
+    """Repair ``y* = lfp(x ↦ init ⊕ x ⊗ E)`` after the non-monotone
+    update that produced ``edges_new`` from ``E``, using a verified
+    maintenance ``rule``:
+
+    1. **seed** — select the distrusted endpoints of the deleted edges
+       (``deleted_coords``/``deleted_values`` are the *old* keys and
+       stored values; tightness is judged against ``prev``);
+    2. **cone** — close the seeds under the rule's cone relation over
+       ``edges_new`` (tight edges walk the cached forward CSR; deleted
+       entries are 0̄-poisoned there, so they can never carry support);
+    3. **reset ⊕ recount** — ``y₀ = prev`` outside the cone, 0̄ on it;
+       ``d₀ = F′(y₀) ⊖ y₀`` is recounted over the cone's in-edges alone
+       (transposed CSR, :func:`repro.sparse.fixpoint.csr_index` with
+       ``transpose=True``) — in-cone contributions vanish at 0̄, so one
+       pass against the intact exterior is exact;
+    4. **resume** — hand ``(y₀, d₀)`` to the unified GSN entrypoint
+       (:func:`repro.sparse.fixpoint.fixpoint`) as an ordinary warm
+       carry.  Any ⊕-merges riding in the same update batch seed extra
+       frontier via :func:`repro.incremental.restart.delta_seed` on top
+       (idempotent ⊕ makes the overlap harmless).
+
+    ``prev``/``init`` may be ``(n,)`` or a ``(B, n)`` pack of warm
+    solutions with per-row inits (the serve loop's batched repair).
+    Returns ``(y′*, iters)`` like :func:`delta_restart_fixpoint`.
+    """
+    if not rule.verified:
+        raise ValueError(f"refusing to execute unverified rule "
+                         f"{rule.name}: {rule.reason}")
+    sr = sr_mod.get(edges_new.semiring, lib="np")
+    prev = np.asarray(prev, sr.dtype)
+    init = np.asarray(init, sr.dtype)
+    batched = prev.ndim == 2
+    rows = prev if batched else prev[None]
+    inits = init if batched else init[None]
+    assert inits.shape == rows.shape, (inits.shape, rows.shape)
+    coords = np.asarray(deleted_coords, np.int64).reshape(-1, 2)
+    dvals = np.asarray(deleted_values, sr.dtype).reshape(-1)
+    y0 = np.empty_like(rows)
+    d0 = np.full(rows.shape, sr.zero, sr.dtype)
+    for b in range(rows.shape[0]):
+        cone = _cone(rule, rows[b], coords, dvals, edges_new, sr)
+        y0[b] = rows[b]
+        y0[b, cone] = sr.zero
+        if len(cone):
+            d0[b, cone] = _recount(cone, y0[b], inits[b], edges_new, sr)
+    if merge_delta is not None and int(np.asarray(merge_delta.nnz)):
+        from repro.incremental.restart import delta_seed
+        d0 = sr.add(d0, delta_seed(merge_delta, y0, backend="np"))
+    st = FixpointState(y0, d0, np.zeros(rows.shape[0], np.int32),
+                       edges_new.semiring, batched)
+    return fixpoint(edges_new, state=st, max_iters=max_iters, mode=mode)
+
+
+def _tight_mask(y: np.ndarray, src, w, dst, sr) -> np.ndarray:
+    """Which edges (src, w, dst) carry their dst's stored value."""
+    if sr.name == "bool":
+        return y[src] & np.asarray(w, bool) & y[dst]
+    return (y[dst] != sr.zero) & (y[dst] == sr.mul(y[src], w))
+
+
+def _cone(rule: MaintenanceRule, y: np.ndarray, coords, dvals,
+          edges_new: SparseRelation, sr) -> np.ndarray:
+    src, dst = coords[:, 0], coords[:, 1]
+    if rule.seeds == "touched":
+        seeds = np.unique(dst)
+    else:
+        sup = _tight_mask(y, src, dvals, dst, sr)
+        seeds = np.unique(dst[sup])
+        if rule.seeds == "unsupported" and len(seeds):
+            # DRed-style: drop seeds that still have a tight in-edge in
+            # the new graph (unsound on cyclic support — the grammar
+            # keeps it so the cycle probes can refute it)
+            tidx = fx.csr_index(edges_new, transpose=True)
+            keep = []
+            for a in seeds:
+                lo, hi = tidx.starts[a], tidx.starts[a] + tidx.counts[a]
+                z, w = tidx.dst[lo:hi], tidx.w[lo:hi]
+                alive = bool(_tight_mask(y, z, w, np.full(len(z), a),
+                                         sr).any())
+                if len(tidx.xsrc) and not alive:
+                    m = tidx.xsrc == a
+                    alive = bool(_tight_mask(
+                        y, tidx.xdst[m], tidx.xw[m],
+                        np.full(int(m.sum()), a), sr).any())
+                if not alive:
+                    keep.append(a)
+            seeds = np.asarray(keep, np.int64)
+    n = edges_new.shape[1]
+    seeds = seeds[(seeds >= 0) & (seeds < n)]
+    if rule.cone == "seeds" or len(seeds) == 0:
+        return seeds
+    if rule.cone == "all":
+        return np.arange(n)
+    idx = fx.csr_index(edges_new)
+    visited = np.zeros(n, bool)
+    visited[seeds] = True
+    frontier = seeds
+    hops = 0
+    while len(frontier):
+        deg = idx.counts[frontier]
+        rep = np.repeat(np.arange(len(frontier)), deg)
+        nxt = np.zeros(0, np.int64)
+        if len(rep):
+            run = np.arange(len(rep)) - np.repeat(
+                np.concatenate([[0], np.cumsum(deg)[:-1]]), deg)
+            esel = idx.starts[frontier[rep]] + run
+            a, b, w = frontier[rep], idx.dst[esel], idx.w[esel]
+            follow = _follow_mask(rule.cone, y, a, w, b, sr)
+            nxt = b[follow]
+        if len(idx.xsrc):
+            m = visited[idx.xsrc] if hops else np.isin(idx.xsrc, frontier)
+            m &= ~visited[idx.xdst]
+            if m.any():
+                follow = _follow_mask(rule.cone, y, idx.xsrc[m],
+                                      idx.xw[m], idx.xdst[m], sr)
+                nxt = np.concatenate([nxt, idx.xdst[m][follow]])
+        nxt = np.unique(nxt)
+        nxt = nxt[~visited[nxt]]
+        visited[nxt] = True
+        frontier = nxt
+        hops += 1
+        if rule.cone == "one_hop" and hops >= 1:
+            break
+    return np.flatnonzero(visited)
+
+
+def _follow_mask(cone: str, y, src, w, dst, sr) -> np.ndarray:
+    if cone == "tight":
+        return _tight_mask(y, src, w, dst, sr)
+    # one_hop / forward: any surviving (non-0̄) edge propagates
+    return (np.asarray(w, bool) if sr.name == "bool"
+            else np.asarray(w) != sr.zero)
+
+
+def _recount(cone: np.ndarray, y0: np.ndarray, init: np.ndarray,
+             edges_new: SparseRelation, sr) -> np.ndarray:
+    """``d₀[a] = init[a] ⊕ ⊕_z y₀[z] ⊗ E′[z, a]`` for each cone vertex
+    ``a`` — one pass over the cone's in-edges via the transposed CSR.
+    In-cone sources hold 0̄ in ``y₀`` and annihilate under ⊗, so only
+    the intact exterior contributes, which is exactly ``F′(y₀)`` there."""
+    tidx = fx.csr_index(edges_new, transpose=True)
+    raw = np.asarray(init, sr.dtype)[cone].copy()
+    deg = tidx.counts[cone]
+    rep = np.repeat(np.arange(len(cone)), deg)
+    if len(rep):
+        run = np.arange(len(rep)) - np.repeat(
+            np.concatenate([[0], np.cumsum(deg)[:-1]]), deg)
+        esel = tidx.starts[cone[rep]] + run
+        sr_mod.NP_COMBINE[sr.name].at(
+            raw, rep, sr.mul(y0[tidx.dst[esel]], tidx.w[esel]))
+    if len(tidx.xsrc):
+        loc = np.full(len(y0), -1, np.int64)
+        loc[cone] = np.arange(len(cone))
+        m = loc[tidx.xsrc] >= 0
+        if m.any():
+            sr_mod.NP_COMBINE[sr.name].at(
+                raw, loc[tidx.xsrc[m]],
+                sr.mul(y0[tidx.xdst[m]], tidx.xw[m]))
+    return raw

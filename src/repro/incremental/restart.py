@@ -15,8 +15,12 @@ costs O(nnz(Δ)) to derive — not O(nnz(E)).  GSN iteration from
 ``(y*, d₀)`` under ``E′`` converges to the least fixpoint above ``y*``,
 which by monotonicity (``y* ≤ lfp F′``) is exactly ``lfp F′`` — the
 from-scratch answer, reached while expanding only the affected region.
-Non-monotone updates (deletions) void the pre-fixpoint property; they
-fall back to a full recompute with an explicit reason.
+Non-monotone updates (deletions, weight increases) void the
+pre-fixpoint property; :func:`refresh_program` routes them through a
+CEGIS-verified ⊖/recount maintenance rule
+(:mod:`repro.incremental.maintenance`, DESIGN.md §11) when synthesis
+succeeds and the planner prices it under a full recompute, and falls
+back to the full recompute with an explicit reason otherwise.
 """
 
 from __future__ import annotations
@@ -113,34 +117,44 @@ def delta_restart_fixpoint(edges: SparseRelation, delta: SparseRelation,
 class RefreshReport:
     """How one refresh was executed and why."""
 
-    strategy: str                 # "delta_restart" | "full"
+    strategy: str        # "delta_restart" | "synth_maintenance" | "full"
     reason: str
     iters: int = 0
     delta_nnz: int = 0
     plan: object | None = None    # the consulted ExecutionPlan, if any
+    rule: object | None = None    # the MaintenanceRule executed, if any
 
 
 def refresh_program(prog, db, prev, log: DeltaLog, *, hints=None,
-                    max_iters: int = 10_000, mode: str = "auto"):
-    """Apply ``log`` to ``db`` and return the fresh answer, delta-
-    restarting from ``prev`` when the planner prices it cheaper.
+                    max_iters: int = 10_000, mode: str = "auto",
+                    synth_budget_s: float = 5.0):
+    """Apply ``log`` to ``db`` and return the fresh answer, repairing
+    ``prev`` in place when the planner prices that cheaper.
 
     Returns ``(answer, updated_db, RefreshReport)``.  ``prev`` is the
     program's previous answer on ``db`` (``None`` → full recompute).
     The decision is the cost-based planner's
-    (``objective="incremental"``): delta-restart is considered at
-    O(nnz(Δ) · affected-trip-count) against every full-recompute
-    candidate, so large deltas naturally fall back.  Non-monotone logs
-    and logs touching relations outside the linear operator fall back
-    with an explicit reason.
+    (``objective="incremental"``): a monotone log considers
+    delta-restart at O(nnz(Δ) · affected-trip-count) against every
+    full-recompute candidate (DESIGN.md §5); a non-monotone log
+    (deletes / weight increases) first ensures a CEGIS-verified
+    maintenance rule for (program signature, semiring, op) — synthesized
+    once within ``synth_budget_s``, then cached — and considers the
+    ``synth_maintenance`` repair instead (DESIGN.md §11).  Whenever
+    synthesis fails, verification is refused, the planner prices the
+    repair out, or the log touches relations outside the linear
+    operator, the refresh falls back to a full recompute with the
+    recorded reason — semantics never change.
     """
-    db2 = db.apply_delta(log)
     ph = planner.PlanHints.of(hints, defaults=prog.sort_hints)
     hints = dict(ph.sorts)
 
-    ok, why = log.monotone()
-    if not ok:
-        return _full(prog, db2, log, why, max_iters)
+    nm_op = log.nonmonotone_op()
+    if nm_op is not None:
+        return _refresh_nonmonotone(prog, db, prev, log, nm_op, ph,
+                                    hints, max_iters, mode,
+                                    synth_budget_s)
+    db2 = db.apply_delta(log)
     if prev is None:
         return _full(prog, db2, log, "no previous solution to restart "
                      "from", max_iters)
@@ -155,33 +169,121 @@ def refresh_program(prog, db, prev, log: DeltaLog, *, hints=None,
             f"planner: {sp.rejected.get('delta_restart', 'infeasible')}"
         return _full(prog, db2, log, reason, max_iters, plan=plan)
 
-    a = vectorize.edge_atom(sp.vf)
-    touched = log.touched()
-    if a is None or touched - {a.name}:
-        extra = sorted(touched - ({a.name} if a else set()))
-        return _full(prog, db2, log,
-                     f"delta touches relations outside the linear "
-                     f"operator ({extra}) — the init term may have "
-                     f"changed", max_iters, plan=plan)
-    if vectorize.init_reads(sp.vf, a.name):
-        return _full(prog, db2, log,
-                     f"edge relation {a.name} also feeds the init term — "
-                     f"a delta seed from y* ⊗ ΔE alone would miss its "
-                     f"contribution", max_iters, plan=plan)
+    bail = _outside_operator(sp.vf, log)
+    if bail is not None:
+        return _full(prog, db2, log, bail, max_iters, plan=plan)
 
-    rel = db2.relations[a.name]
-    delta = log.merged(a.name, rel.shape, rel.semiring
-                       if isinstance(rel, SparseRelation)
-                       else db2.schema[a.name].semiring)
-    if tuple(a.args) != sp.vf.edge.head:
-        delta = delta.transpose()
-    delta = vectorize._sparse_into_semiring(delta, sp.vf.semiring)
+    a = vectorize.edge_atom(sp.vf)
+    delta = _oriented(log.merged(a.name, *_rel_frame(db2, a.name)),
+                      a, sp.vf)
     edges = planner.materialize_edges(plan, db2, hints)
     y, iters = delta_restart_fixpoint(edges, delta, prev,
                                       max_iters=max_iters, mode=mode)
     rep = RefreshReport("delta_restart", sp.reason, int(np.asarray(iters)),
                         log.nnz(), plan)
     return y, db2, rep
+
+
+def _refresh_nonmonotone(prog, db, prev, log, nm_op, ph, hints,
+                         max_iters, mode, synth_budget_s):
+    """The delete/increase path: synthesize-or-recall the maintenance
+    rule, let the planner price it, gather the *old* stored values of
+    the removed keys before mutating, and execute the verified repair."""
+    from repro.incremental import maintenance
+
+    if prev is None:
+        return _full(prog, db.apply_delta(log),
+                     log, "no previous solution to restart from",
+                     max_iters)
+    try:
+        vf = vectorize.vector_form(prog)
+    except ValueError as e:
+        return _full(prog, db.apply_delta(log), log,
+                     f"{nm_op} maintenance needs the vector form: {e}",
+                     max_iters)
+    bail = _outside_operator(vf, log)
+    if bail is not None:
+        return _full(prog, db.apply_delta(log), log, bail, max_iters)
+
+    rule_op = "delete" if nm_op == "mixed" else nm_op
+    rule = maintenance.ensure_rule(vf.signature, vf.semiring, rule_op,
+                                   budget_s=synth_budget_s)
+
+    # the removed keys' *old* stored values decide which deletions were
+    # support-carrying — gather them before apply_delta drops them
+    a = vectorize.edge_atom(vf)
+    rcoords = log.removed_coords(a.name)
+    removed = _oriented(_removed_rel(db, a.name, rcoords), a, vf)
+
+    db2 = db.apply_delta(log)
+    plan = planner.plan_program(prog, db2, ph,
+                                objective="incremental",
+                                delta_nnz=log.nnz(), delta_op=rule_op,
+                                max_iters=max_iters)
+    sp = plan.strata[0] if plan.strata else None
+    if sp is None or sp.runner != "synth_maintenance":
+        reason = "planner: full recompute priced cheaper" if sp is None \
+            or "synth_maintenance" in sp.considered else \
+            f"planner: {sp.rejected.get('synth_maintenance', 'infeasible')}"
+        return _full(prog, db2, log, reason, max_iters, plan=plan)
+
+    merged = log.merged(a.name, *_rel_frame(db2, a.name))
+    merged = _oriented(merged, a, vf) if int(np.asarray(merged.nnz)) \
+        else None
+    edges = planner.materialize_edges(plan, db2, hints)
+    init = np.asarray(vectorize.init_vector(vf, db2, hints,
+                                            backend="np"))
+    rh = removed.as_np()
+    k = int(rh.nnz)
+    y, iters = maintenance.maintain_nonmonotone(
+        edges, rh.coords[:k], rh.values[:k], prev, init, rule,
+        merge_delta=merged, max_iters=max_iters, mode=mode)
+    rep = RefreshReport("synth_maintenance", sp.reason,
+                        int(np.asarray(iters)), log.nnz(), plan, rule)
+    return y, db2, rep
+
+
+def _outside_operator(vf, log: DeltaLog) -> str | None:
+    """The shared feasibility guards of both maintenance strategies."""
+    a = vectorize.edge_atom(vf)
+    touched = log.touched()
+    if a is None or touched - {a.name}:
+        extra = sorted(touched - ({a.name} if a else set()))
+        return (f"delta touches relations outside the linear operator "
+                f"({extra}) — the init term may have changed")
+    if vectorize.init_reads(vf, a.name):
+        return (f"edge relation {a.name} also feeds the init term — a "
+                f"delta seed from y* ⊗ ΔE alone would miss its "
+                f"contribution")
+    return None
+
+
+def _rel_frame(db, name: str) -> tuple:
+    rel = db.relations[name]
+    return rel.shape, (rel.semiring if isinstance(rel, SparseRelation)
+                       else db.schema[name].semiring)
+
+
+def _oriented(delta: SparseRelation, a, vf) -> SparseRelation:
+    if tuple(a.args) != vf.edge.head:
+        delta = delta.transpose()
+    return vectorize._sparse_into_semiring(delta, vf.semiring)
+
+
+def _removed_rel(db, name: str, coords) -> SparseRelation:
+    """The removed keys with their old stored values, as a sparse Δ in
+    the relation's own frame (keys absent from the relation carry 0̄ and
+    coalesce away — deleting a non-edge repairs nothing)."""
+    from repro.incremental.maintenance import _gather_values
+    rel = db.relations[name]
+    shape, semiring = _rel_frame(db, name)
+    if isinstance(rel, SparseRelation):
+        vals = _gather_values(rel, coords)
+    else:
+        host = np.asarray(rel)
+        vals = host[tuple(np.asarray(coords, np.int64).T)]
+    return SparseRelation.from_coo(coords, vals, shape, semiring,
+                                   lib="np")
 
 
 def _full(prog, db2, log, reason, max_iters, *, plan=None):

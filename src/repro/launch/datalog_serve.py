@@ -119,8 +119,10 @@ class DatalogServer:
         if family not in self._families:
             raise KeyError(f"unknown family {family!r}; "
                            f"registered: {sorted(self._families)}")
-        if op not in ("merge", "delete"):
+        if op not in ("merge", "delete", "increase"):
             raise ValueError(f"unknown update op {op!r}")
+        if op == "increase" and values is None:
+            raise ValueError("op='increase' needs the new (larger) values")
         req = UpdateRequest(family,
                             np.atleast_2d(np.asarray(coords, np.int64)),
                             None if values is None

@@ -9,9 +9,11 @@ extracted so the continuous-batching scheduler
 (:class:`repro.serve.scheduler.ContinuousServer`) and the packed-FIFO
 compatibility shim share one registration, init-evaluation, and
 streaming-update implementation — the update semantics (monotone
-⊕-merge appends with batched delta-restart warm repair, non-monotone
-deletes that rebuild the operator and drop warm answers) are identical
-under both schedulers by construction.
+⊕-merge appends with batched delta-restart warm repair; non-monotone
+deletes applied in place at unchanged capacity, with warm answers
+repaired through the synthesized ⊖/recount maintenance rule of
+DESIGN.md §11 when one is verified for the family's signature, dropped
+otherwise) are identical under both schedulers by construction.
 
 Also here: the **single-request latency path**.  A (1, n) batched
 fixpoint pays full SpMM scatters per iteration for one live row — the
@@ -69,7 +71,10 @@ class UpdateRequest:
     """One batch of edge mutations against a family's linear operator.
 
     ``op="merge"`` is the monotone ⊕-merge (edge insertion; tropical
-    weight decrease); ``op="delete"`` removes keys and is non-monotone.
+    weight decrease); ``op="delete"`` removes keys and ``op="increase"``
+    replaces stored values with larger ones — both non-monotone,
+    repaired through the synthesized maintenance rule when one verifies
+    (DESIGN.md §11).
     Coordinates live in the space the family's operator was built from:
     the stored edge relation ``E(i, j)`` when one exists (the server
     re-orients them for the operator), else the ``edges=`` override
@@ -401,7 +406,8 @@ def apply_updates(fam: Family, ups: list, stats: dict,
         if ups[0].op == "merge":
             _merge_edges(fam, coords, values, stats, graph_mesh)
         else:
-            _delete_edges(fam, coords, stats, graph_mesh)
+            _nonmono_edges(fam, coords, values, ups[0].op, stats,
+                           graph_mesh)
     except Exception as e:  # a bad update must not kill the queue
         for u in ups:
             u.error = f"{type(e).__name__}: {e}"
@@ -512,31 +518,82 @@ def _merge_edges(fam: Family, coords, values, stats: dict,
     stats["answers_repaired"] += len(sources)
 
 
-def _delete_edges(fam: Family, coords, stats: dict, graph_mesh) -> None:
-    from repro.incremental import DeltaEntry
+def _nonmono_edges(fam: Family, coords, values, op: str, stats: dict,
+                   graph_mesh) -> None:
+    """The non-monotone update path: ``op="delete"`` removes keys,
+    ``op="increase"`` replaces stored values with larger ones (delete
+    the old ⊕ merge the new)."""
+    from repro.incremental import (DeltaEntry, ensure_rule,
+                                   maintain_nonmonotone)
+    from repro.incremental import maintenance
     fam.kernel_cache.clear()
+    vf = fam.plan.strata[0].vf
+    # gather the touched keys' *old* stored values (in operator space)
+    # before mutating — they decide which removals were support-carrying
+    # when the maintenance rule repairs warm answers below
+    dcoords = dvals = new_delta = None
+    if isinstance(fam.edges, SparseRelation):
+        dh = operator_delta(fam, coords, None).as_np()
+        dcoords = np.asarray(dh.coords[:int(dh.nnz)])
+        dvals = maintenance._gather_values(fam.edges.as_np(), dcoords)
+        if op == "increase":
+            new_delta = operator_delta(fam, coords, values)
     if fam.edge_rel is not None:
-        ent = [DeltaEntry(fam.edge_rel, coords, None, "delete")]
+        ent = [DeltaEntry(fam.edge_rel, coords,
+                          values if op == "increase" else None, op)]
         fam.db = fam.db.apply_delta(ent)
         fam.host_db = fam.host_db.apply_delta(ent)
+    if dcoords is not None:
+        # mutate in place at the same capacity: shapes, plan, and every
+        # compiled runner keyed on them survive untouched
+        fam.edges = fam.edges.delete_keys(dcoords)
+        if new_delta is not None:
+            nh = new_delta.as_np()
+            fam.edges = fam.edges.apply_delta(
+                nh.coords[:int(nh.nnz)], nh.values[:int(nh.nnz)])
+    elif fam.edge_rel is not None:
         fam.edges = planner.materialize_edges(fam.plan, fam.db,
                                               fam.hints)
-    elif isinstance(fam.edges, SparseRelation):
-        delta_op = operator_delta(fam, coords, None)
-        dh = delta_op.as_np()
-        fam.edges = fam.edges.delete_keys(dh.coords[:int(dh.nnz)])
     else:
-        vf = fam.plan.strata[0].vf
         sr = sr_mod.get(vf.semiring)
         idx = tuple(np.asarray(np.atleast_2d(coords)).T)
-        fam.edges = jnp.asarray(fam.edges).at[idx].set(sr.zero)
+        new = (sr.zero if op == "delete"
+               else jnp.asarray(np.asarray(values, sr.dtype)))
+        fam.edges = jnp.asarray(fam.edges).at[idx].set(new)
     if fam.sharded is not None:
-        # a deletion rebuilt the operator — re-partition it (the
-        # compiled sharded runners survive unless capacity moved)
+        # re-partition the mutated operator (the compiled sharded
+        # runners survive unless per-shard capacity moved)
         from repro.distributed import datalog as dd
         fam.sharded = dd.shard_relation(fam.edges, graph_mesh)
-    # deletion is non-monotone: warm answers may over-derive — drop
-    # them (the plan and compiled runners survive untouched)
     if fam.init_reads_edges:
+        # the update also changed the init term — memoized inits and
+        # warm answers are both stale beyond what the rule repairs
         fam.init_cache.clear()
-    _drop_answers(fam, stats)
+        _drop_answers(fam, stats)
+        return
+    if not len(fam.answers):
+        return
+    # deletes/increases are non-monotone: warm answers may over-derive.
+    # A CEGIS-verified ⊖/recount rule (DESIGN.md §11) repairs them in
+    # place; without one (no ⊖ on the semiring, synthesis timed out,
+    # sharded operand) they are dropped as before.
+    if dcoords is None or fam.sharded is not None:
+        _drop_answers(fam, stats)
+        return
+    rule = ensure_rule(vf.signature, vf.semiring, op)
+    if not rule.verified:
+        _drop_answers(fam, stats)
+        return
+    sources = list(fam.answers.keys())
+    sr = sr_mod.get(vf.semiring, lib="np")
+    prev = np.stack([np.asarray(fam.answers.peek(s), sr.dtype)
+                     for s in sources])
+    init = np.stack([np.asarray(family_init(fam, s), sr.dtype)
+                     for s in sources])
+    y, _ = maintain_nonmonotone(fam.edges, dcoords, dvals, prev, init,
+                                rule, merge_delta=new_delta,
+                                max_iters=fam.max_iters)
+    y = np.asarray(y)
+    for i, s in enumerate(sources):
+        fam.answers.replace(s, y[i])
+    stats["answers_repaired"] += len(sources)

@@ -158,8 +158,10 @@ class ContinuousServer:
         never shed — dropping an acknowledged mutation would silently
         fork the graph state."""
         fs = self._state(family)
-        if op not in ("merge", "delete"):
+        if op not in ("merge", "delete", "increase"):
             raise ValueError(f"unknown update op {op!r}")
+        if op == "increase" and values is None:
+            raise ValueError("op='increase' needs the new (larger) values")
         req = UpdateRequest(family,
                             np.atleast_2d(np.asarray(coords, np.int64)),
                             None if values is None

@@ -245,21 +245,50 @@ class SparseRelation:
             fx.register_delta(self, out, coords, values)
         return out
 
+    def _flat_keys(self, coords) -> np.ndarray:
+        """Row-major flattened int64 key per coordinate tuple."""
+        coords = np.asarray(coords, np.int64).reshape(-1, self.arity)
+        return np.ravel_multi_index(tuple(coords.T), self.shape,
+                                    mode="clip")
+
     def delete_keys(self, coords) -> "SparseRelation":
-        """Remove the given keys entirely (host-side rebuild at the same
-        capacity).  Deletion is *not* a ⊕-merge — it is the non-monotone
-        mutation; callers owning warm fixpoint state must recompute from
-        scratch afterwards (see :mod:`repro.incremental`)."""
+        """Remove the given keys entirely (host-side, O(nnz) vectorized
+        mask + stable compaction at the same capacity — no re-sort, no
+        re-coalesce).  Deletion is *not* a ⊕-merge — it is the
+        non-monotone mutation; callers owning warm fixpoint state must
+        repair it via a synthesized maintenance rule or recompute from
+        scratch (see :mod:`repro.incremental.maintenance`, DESIGN.md §11).
+
+        Every live copy of a deleted key is removed, including
+        un-coalesced duplicates appended by :meth:`apply_delta`.
+        """
         coords = np.asarray(coords, np.int64).reshape(-1, self.arity)
         host = self.as_np()
         k = int(host.nnz)
-        gone = {tuple(c) for c in coords.tolist()}
-        keep = np.array([tuple(c) not in gone
-                         for c in host.coords[:k].tolist()], bool)
-        out = SparseRelation.from_coo(
-            host.coords[:k][keep], host.values[:k][keep], self.shape,
-            self.semiring, capacity=self.capacity, lib="np")
-        return out if self.lib == "np" else out.as_jnp()
+        if k == 0 or len(coords) == 0:
+            return self
+        gone = self._flat_keys(coords)
+        keep = ~np.isin(self._flat_keys(host.coords[:k]), gone)
+        kept = int(keep.sum())
+        if kept == k:
+            return self
+        pad = self.capacity - kept
+        sentinel = np.tile(np.asarray(self.shape, np.int64), (pad, 1))
+        sr = sr_mod.get(self.semiring, lib="np")
+        new_coords = np.concatenate(
+            [host.coords[:k][keep], sentinel]).astype(np.int32)
+        new_values = np.concatenate(
+            [host.values[:k][keep], np.full(pad, sr.zero, sr.dtype)])
+        out = SparseRelation(new_coords, new_values,
+                             np.asarray(kept, np.int32), self.shape,
+                             self.semiring)
+        out = out if self.lib == "np" else out.as_jnp()
+        if self.arity == 2:
+            # hand the child a 0̄-poisoned copy of any cached CSR index so
+            # warm frontier/maintenance solves never re-sort (DESIGN.md §11)
+            from repro.sparse import fixpoint as fx
+            fx.register_delete(self, out, coords)
+        return out
 
     def union(self, other: "SparseRelation", *,
               capacity: int | None = None) -> "SparseRelation":

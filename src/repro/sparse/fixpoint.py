@@ -645,22 +645,25 @@ class _CsrIndex:
     xw: np.ndarray
 
 
-_CSR_CACHE: dict[tuple[int, int], tuple[object, object, _CsrIndex]] = {}
+_CSR_CACHE: dict[tuple[int, int, bool],
+                 tuple[object, object, _CsrIndex]] = {}
 _EMPTY = np.zeros(0, np.int64)
 
 
-def _csr_lookup(rel: SparseRelation) -> _CsrIndex | None:
+def _csr_lookup(rel: SparseRelation, transpose: bool = False
+                ) -> _CsrIndex | None:
     # keyed on BOTH buffers: transposes share values and semiring casts
     # share coords — either alone would alias distinct relations
-    ent = _CSR_CACHE.get((id(rel.coords), id(rel.values)))
+    ent = _CSR_CACHE.get((id(rel.coords), id(rel.values), transpose))
     if ent is not None and ent[0]() is rel.coords \
             and ent[1]() is rel.values:
         return ent[2]
     return None
 
 
-def _csr_store(rel: SparseRelation, idx: _CsrIndex) -> None:
-    key = (id(rel.coords), id(rel.values))
+def _csr_store(rel: SparseRelation, idx: _CsrIndex,
+               transpose: bool = False) -> None:
+    key = (id(rel.coords), id(rel.values), transpose)
 
     def _evict(ref, k=key):
         cur = _CSR_CACHE.get(k)
@@ -674,22 +677,31 @@ def _csr_store(rel: SparseRelation, idx: _CsrIndex) -> None:
         pass
 
 
-def csr_index(edges: SparseRelation) -> _CsrIndex:
-    """The (cached) host CSR adjacency of a binary sparse relation."""
-    idx = _csr_lookup(edges)
+def csr_index(edges: SparseRelation, *,
+              transpose: bool = False) -> _CsrIndex:
+    """The (cached) host CSR adjacency of a binary sparse relation.
+
+    ``transpose=True`` indexes **in**-edges: row ``a`` of the index lists
+    the ``(z, E[z, a])`` pairs, which is what a maintenance recount
+    ``d₀[a] = init[a] ⊕ ⊕_z y₀[z] ⊗ E[z, a]`` walks (DESIGN.md §11).
+    Both orientations share the cache (separate key slots), so the
+    transpose is built once per buffer identity, not per recount.
+    """
+    idx = _csr_lookup(edges, transpose)
     if idx is None:
         eh = edges.as_np()
         k = int(eh.nnz)
-        src = eh.coords[:k, 0].astype(np.int64)
-        dst = eh.coords[:k, 1].astype(np.int64)
+        a, b = (1, 0) if transpose else (0, 1)
+        src = eh.coords[:k, a].astype(np.int64)
+        dst = eh.coords[:k, b].astype(np.int64)
         w = eh.values[:k]
         order = np.argsort(src, kind="stable")
         src, dst, w = src[order], dst[order], w[order]
-        counts = np.bincount(src, minlength=edges.shape[0])
+        counts = np.bincount(src, minlength=edges.shape[a])
         starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
         idx = _CsrIndex(counts, starts, src, dst, w,
                         _EMPTY, _EMPTY, w[:0])
-        _csr_store(edges, idx)
+        _csr_store(edges, idx, transpose)
     return idx
 
 
@@ -697,18 +709,66 @@ def register_delta(parent: SparseRelation, child: SparseRelation,
                    coords: np.ndarray, values: np.ndarray) -> None:
     """``child = parent ⊕ appended rows``: give the child the parent's
     cached CSR plus an O(nnz(Δ)) overlay (no-op when the parent was
-    never indexed, or when the grown overlay warrants a compaction)."""
-    pidx = _csr_lookup(parent)
-    if pidx is None:
-        return
-    xsrc = np.concatenate([pidx.xsrc, coords[:, 0].astype(np.int64)])
-    if len(xsrc) > max(1024, len(pidx.src) // 4):
-        return  # compaction point: child rebuilds a sorted base on use
-    xdst = np.concatenate([pidx.xdst, coords[:, 1].astype(np.int64)])
-    xw = np.concatenate([pidx.xw, values])
-    _csr_store(child,
-               _CsrIndex(pidx.counts, pidx.starts, pidx.src, pidx.dst,
-                         pidx.w, xsrc, xdst, xw))
+    never indexed, or when the grown overlay warrants a compaction).
+    Both orientations propagate when cached."""
+    for transpose in (False, True):
+        pidx = _csr_lookup(parent, transpose)
+        if pidx is None:
+            continue
+        a, b = (1, 0) if transpose else (0, 1)
+        xsrc = np.concatenate([pidx.xsrc, coords[:, a].astype(np.int64)])
+        if len(xsrc) > max(1024, len(pidx.src) // 4):
+            continue  # compaction point: child rebuilds a sorted base
+        xdst = np.concatenate([pidx.xdst, coords[:, b].astype(np.int64)])
+        xw = np.concatenate([pidx.xw, values])
+        _csr_store(child,
+                   _CsrIndex(pidx.counts, pidx.starts, pidx.src,
+                             pidx.dst, pidx.w, xsrc, xdst, xw),
+                   transpose)
+
+
+def register_delete(parent: SparseRelation, child: SparseRelation,
+                    coords: np.ndarray) -> None:
+    """``child = parent ∖ deleted keys``: hand the child a copy of any
+    cached CSR whose deleted entries have their weights set to 0̄.
+
+    A 0̄ weight annihilates under ⊗ (``x ⊗ 0̄ = 0̄`` in every semiring
+    here) and 0̄ is the ⊕-identity, so a poisoned entry contributes
+    nothing to frontier expansion or recount scatters — the row stays in
+    place and ``counts``/``starts`` are untouched, which is what makes a
+    one-edge delete O(deg) instead of an O(nnz log nnz) re-sort
+    (DESIGN.md §11).  Cost: O(nnz(Δ) · deg) probe into the sorted base
+    plus an O(overlay) key scan.
+    """
+    coords = np.asarray(coords, np.int64).reshape(-1, 2)
+    sr = sr_mod.get(parent.semiring, lib="np")
+    zero = np.asarray(sr.zero, sr.dtype)
+    for transpose in (False, True):
+        pidx = _csr_lookup(parent, transpose)
+        if pidx is None:
+            continue
+        a, b = (1, 0) if transpose else (0, 1)
+        dsrc = coords[:, a]
+        ddst = coords[:, b]
+        w = pidx.w.copy()
+        n_rows = len(pidx.counts)
+        for s, t in zip(dsrc, ddst):
+            if not (0 <= s < n_rows):
+                continue
+            lo = pidx.starts[s]
+            hi = lo + pidx.counts[s]
+            seg = pidx.dst[lo:hi]
+            w[lo:hi] = np.where(seg == t, zero, w[lo:hi])
+        xw = pidx.xw
+        if len(pidx.xsrc):
+            hit = np.zeros(len(pidx.xsrc), bool)
+            for s, t in zip(dsrc, ddst):
+                hit |= (pidx.xsrc == s) & (pidx.xdst == t)
+            xw = np.where(hit, zero, pidx.xw)
+        _csr_store(child,
+                   _CsrIndex(pidx.counts, pidx.starts, pidx.src,
+                             pidx.dst, w, pidx.xsrc, pidx.xdst, xw),
+                   transpose)
 
 
 def _batched_frontier_fixpoint(edges, init, max_iters, *, warm=None):

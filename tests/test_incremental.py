@@ -292,9 +292,22 @@ def test_refresh_fallback_reasons():
     prev, _ = run_program(prog, db)
     prev = np.asarray(prev)
 
+    # a delete no longer means full recompute: the synthesized
+    # maintenance rule (DESIGN.md §11) repairs it — but with a zero
+    # synthesis budget (and a cold rule cache) it falls back with the
+    # recorded failure
+    from repro.incremental.maintenance import clear_rule_cache
+    clear_rule_cache()
+    _, _, rep = refresh_program(prog, db, prev,
+                                DeltaLog().delete("E", [[0, 1]]),
+                                synth_budget_s=0.0)
+    assert rep.strategy == "full" and "synthesis" in rep.reason
+
+    clear_rule_cache()
     _, _, rep = refresh_program(prog, db, prev,
                                 DeltaLog().delete("E", [[0, 1]]))
-    assert rep.strategy == "full" and "non-monotone" in rep.reason
+    assert rep.strategy == "synth_maintenance"
+    assert "⊖-recount" in rep.reason
 
     _, _, rep = refresh_program(prog, db, None,
                                 DeltaLog().insert("E", [[0, 1]]))

@@ -1,0 +1,349 @@
+"""Synthesized ⊖/recount maintenance (DESIGN.md §11): CEGIS outcomes,
+randomized differential checks against from-scratch ground truth, the
+planner's synth_maintenance candidate, and the serve loop's warm-answer
+repair on deletes."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import egraph, engine, planner
+from repro.core.program import run_program
+from repro.datalog import datasets, programs
+from repro.incremental import (DeltaLog, cached_rule, ensure_rule,
+                               maintain_nonmonotone, refresh_program,
+                               synthesize_maintenance)
+from repro.incremental.maintenance import (MaintenanceRule, _gather_values,
+                                           clear_rule_cache, rule_term)
+from repro.sparse.coo import SparseRelation
+from repro.sparse.fixpoint import fixpoint
+from repro.core import semiring as sr_mod
+
+LATTICES = ("bool", "trop", "maxplus")
+
+
+def _random_rel(rng, n, semiring, avg_deg=2.5):
+    """Random digraph as an np-lib SparseRelation; DAG for maxplus
+    (positive cycles have no finite longest path)."""
+    p = min(1.0, avg_deg / n)
+    adj = rng.random((n, n)) < p
+    np.fill_diagonal(adj, False)
+    if semiring == "maxplus":
+        adj = np.triu(adj)
+    coords = np.argwhere(adj).astype(np.int64)
+    sr = sr_mod.get(semiring, lib="np")
+    values = (np.ones(len(coords), sr.dtype) if semiring == "bool"
+              else rng.integers(1, 6, len(coords)).astype(sr.dtype))
+    return SparseRelation.from_coo(coords, values, (n, n), semiring,
+                                   lib="np")
+
+
+def _one_hot(n, src, semiring):
+    sr = sr_mod.get(semiring, lib="np")
+    init = np.full(n, sr.zero, sr.dtype)
+    init[src] = sr.one
+    return init
+
+
+def _live_edges(rel):
+    h = rel.as_np()
+    return np.asarray(h.coords[:int(h.nnz)]), np.asarray(
+        h.values[:int(h.nnz)])
+
+
+# --------------------------------------------------------------------------
+# CEGIS outcomes
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("semiring", LATTICES)
+def test_cegis_delete_winner_is_supported_tight(semiring):
+    rule = synthesize_maintenance(semiring, "delete")
+    assert rule.verified
+    assert (rule.seeds, rule.cone) == ("supported", "tight")
+    assert rule.name == "⊖-recount[seed=supported, cone=tight]"
+    assert rule.probes > 0
+    # every cheaper candidate was refuted by a concrete counterexample
+    # (chains kill the no-closure cones; cycles kill DRed counting)
+    refuted = {(s, c) for s, c, _ in rule.refuted}
+    assert ("supported", "seeds") in refuted
+    assert ("supported", "one_hop") in refuted
+
+
+@pytest.mark.parametrize("semiring", ("bool", "trop"))
+def test_cyclic_probes_refute_dred_counting(semiring):
+    """DRed-style support counting (seed=unsupported) is unsound on
+    cyclic support: the cheapest-first winner shadows it in the normal
+    enumeration, so replay it directly — a cyclic probe must fail it."""
+    from repro.core import verify
+    from repro.incremental.maintenance import _first_failure
+    cand = MaintenanceRule("unsupported", "tight", semiring, "delete",
+                           False, "", rule_term("unsupported", "tight"))
+    pool = verify.sample_update_probes(semiring,
+                                       np.random.default_rng(0), 8)
+    bad = _first_failure(cand, pool)
+    assert bad is not None
+    assert "cycle" in bad.name or "loop" in bad.name
+
+
+def test_cegis_records_failure_without_minus():
+    rule = synthesize_maintenance("nat", "delete")
+    assert not rule.verified
+    assert "⊖" in rule.reason
+    with pytest.raises(ValueError, match="unverified"):
+        maintain_nonmonotone(
+            _random_rel(np.random.default_rng(0), 8, "bool"),
+            np.zeros((0, 2), np.int64), np.zeros(0),
+            _one_hot(8, 0, "bool"), _one_hot(8, 0, "bool"), rule)
+
+
+def test_cegis_increase_rules():
+    # ⊕ = max absorbs a weight increase's *lost* derivations only at the
+    # touched edge itself — CEGIS discovers no closure is needed
+    up = synthesize_maintenance("maxplus", "increase")
+    assert up.verified and up.cone == "seeds"
+    # trop ⊕ = min: an increase can unseat downstream minima — the same
+    # tight closure as deletion wins
+    tr = synthesize_maintenance("trop", "increase")
+    assert tr.verified and (tr.seeds, tr.cone) == ("supported", "tight")
+    bl = synthesize_maintenance("bool", "increase")
+    assert not bl.verified
+
+
+def test_egraph_rejects_full_cone_by_proof():
+    for seeds in ("supported", "touched", "unsupported"):
+        assert egraph.normalize(
+            rule_term(seeds, "all")) == "cold_fixpoint"
+    rule = synthesize_maintenance("bool", "delete")
+    assert all("egraph" in why for s, c, why in rule.refuted
+               if c == "all")
+
+
+def test_rule_cache_round_trip():
+    clear_rule_cache()
+    assert cached_rule("sig-x", "trop", "delete") is None
+    r1 = ensure_rule("sig-x", "trop", "delete")
+    assert r1.verified
+    assert cached_rule("sig-x", "trop", "delete") is r1
+    assert ensure_rule("sig-x", "trop", "delete") is r1
+    clear_rule_cache()
+
+
+# --------------------------------------------------------------------------
+# Randomized differential: maintenance ≡ from-scratch
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("semiring", LATTICES)
+def test_differential_random_deletes(semiring):
+    rule = synthesize_maintenance(semiring, "delete")
+    rng = np.random.default_rng(7)
+    for trial in range(12):
+        n = int(rng.integers(8, 40))
+        rel = _random_rel(rng, n, semiring)
+        coords, vals = _live_edges(rel)
+        if len(coords) < 2:
+            continue
+        init = _one_hot(n, int(rng.integers(n)), semiring)
+        y_star, _ = fixpoint(rel, init, mode="frontier")
+        k = int(rng.integers(1, min(6, len(coords))))
+        sel = rng.choice(len(coords), k, replace=False)
+        new = rel.delete_keys(coords[sel])
+        y_true, _ = fixpoint(new, init, mode="frontier")
+        y_got, _ = maintain_nonmonotone(new, coords[sel], vals[sel],
+                                        np.asarray(y_star), init, rule)
+        assert np.array_equal(np.asarray(y_got), np.asarray(y_true)), \
+            (semiring, trial, n, coords[sel])
+
+
+def test_differential_increase_trop():
+    rule = synthesize_maintenance("trop", "increase")
+    rng = np.random.default_rng(11)
+    for trial in range(8):
+        n = int(rng.integers(8, 30))
+        rel = _random_rel(rng, n, "trop")
+        coords, vals = _live_edges(rel)
+        if len(coords) < 2:
+            continue
+        init = _one_hot(n, int(rng.integers(n)), "trop")
+        y_star, _ = fixpoint(rel, init, mode="frontier")
+        k = int(rng.integers(1, min(4, len(coords))))
+        sel = rng.choice(len(coords), k, replace=False)
+        bigger = vals[sel] + rng.integers(1, 5, k)
+        new = rel.delete_keys(coords[sel]).apply_delta(coords[sel],
+                                                       bigger)
+        merge = SparseRelation.from_coo(coords[sel], bigger, rel.shape,
+                                        "trop", lib="np")
+        y_true, _ = fixpoint(new, init, mode="frontier")
+        y_got, _ = maintain_nonmonotone(new, coords[sel], vals[sel],
+                                        np.asarray(y_star), init, rule,
+                                        merge_delta=merge)
+        assert np.array_equal(np.asarray(y_got), np.asarray(y_true)), \
+            (trial, n)
+
+
+def test_delete_then_reinsert_round_trips():
+    """Delete a batch, repair, re-insert the same edges, repair again
+    (monotone leg) — lands exactly back on the original fixpoint."""
+    from repro.incremental import delta_restart_fixpoint
+    rule = synthesize_maintenance("trop", "delete")
+    rng = np.random.default_rng(3)
+    rel = _random_rel(rng, 25, "trop")
+    coords, vals = _live_edges(rel)
+    init = _one_hot(25, 0, "trop")
+    y_star, _ = fixpoint(rel, init, mode="frontier")
+    sel = rng.choice(len(coords), 3, replace=False)
+    shrunk = rel.delete_keys(coords[sel])
+    y_del, _ = maintain_nonmonotone(shrunk, coords[sel], vals[sel],
+                                    np.asarray(y_star), init, rule)
+    back = shrunk.apply_delta(coords[sel], vals[sel])
+    delta = SparseRelation.from_coo(coords[sel], vals[sel], rel.shape,
+                                    "trop", lib="np")
+    y_back, _ = delta_restart_fixpoint(back, delta, np.asarray(y_del),
+                                       mode="frontier")
+    assert np.array_equal(np.asarray(y_back), np.asarray(y_star))
+
+
+def test_batched_matches_per_row():
+    rule = synthesize_maintenance("trop", "delete")
+    rng = np.random.default_rng(5)
+    rel = _random_rel(rng, 30, "trop", avg_deg=3.0)
+    coords, vals = _live_edges(rel)
+    sel = rng.choice(len(coords), 4, replace=False)
+    new = rel.delete_keys(coords[sel])
+    sources = (0, 7, 19)
+    prev = np.stack([np.asarray(fixpoint(rel, _one_hot(30, s, "trop"),
+                                         mode="frontier")[0])
+                     for s in sources])
+    init = np.stack([_one_hot(30, s, "trop") for s in sources])
+    yb, ib = maintain_nonmonotone(new, coords[sel], vals[sel], prev,
+                                  init, rule)
+    for i, s in enumerate(sources):
+        y1, i1 = maintain_nonmonotone(new, coords[sel], vals[sel],
+                                      prev[i], init[i], rule)
+        assert np.array_equal(np.asarray(yb)[i], np.asarray(y1)), s
+        assert int(np.asarray(ib)[i]) == int(np.asarray(i1)), s
+
+
+# --------------------------------------------------------------------------
+# refresh_program: end-to-end, mixed streams, fallbacks
+# --------------------------------------------------------------------------
+
+
+def _bm_setup(n=40, seed=2):
+    g = datasets.erdos_renyi(n, 2.0, seed=seed)
+    db = engine.Database(programs.bm(a=0).original.schema, {"id": n},
+                         {"E": g.sparse_adjacency(),
+                          "V": jnp.ones((n,), bool)})
+    return programs.bm(a=0).optimized, db
+
+
+def test_refresh_delete_end_to_end():
+    prog, db = _bm_setup()
+    prev, _ = run_program(prog, db)
+    eh = db.relations["E"].as_np()
+    dels = np.asarray(eh.coords[:3])
+    y, db2, rep = refresh_program(prog, db, np.asarray(prev),
+                                  DeltaLog().delete("E", dels))
+    assert rep.strategy == "synth_maintenance"
+    assert "⊖-recount[seed=supported, cone=tight]" in rep.reason
+    y_true, _ = run_program(prog, db2)
+    assert np.array_equal(np.asarray(y), np.asarray(y_true))
+
+
+def test_refresh_mixed_delete_and_insert():
+    prog, db = _bm_setup(seed=9)
+    prev, _ = run_program(prog, db)
+    eh = db.relations["E"].as_np()
+    dels = np.asarray(eh.coords[:2])
+    log = DeltaLog().delete("E", dels).insert("E", [[1, 37], [37, 3]])
+    y, db2, rep = refresh_program(prog, db, np.asarray(prev), log)
+    assert rep.strategy == "synth_maintenance"
+    y_true, _ = run_program(prog, db2)
+    assert np.array_equal(np.asarray(y), np.asarray(y_true))
+
+
+def test_refresh_falls_back_when_synthesis_fails():
+    prog, db = _bm_setup()
+    prev, _ = run_program(prog, db)
+    clear_rule_cache()
+    _, _, rep = refresh_program(prog, db, np.asarray(prev),
+                                DeltaLog().delete("E", [[0, 1]]),
+                                synth_budget_s=0.0)
+    assert rep.strategy == "full"
+    clear_rule_cache()
+
+
+# --------------------------------------------------------------------------
+# Planner: the synth_maintenance candidate
+# --------------------------------------------------------------------------
+
+
+def test_planner_prices_cached_rule_only():
+    prog, db = _bm_setup(n=200, seed=5)
+    clear_rule_cache()
+    plan = planner.plan_program(prog, db, objective="incremental",
+                                delta_nnz=2, delta_op="delete")
+    sp = plan.strata[0]
+    # planning never synthesizes: no cached rule → rejection, not a run
+    assert sp.runner != "synth_maintenance"
+    assert "no maintenance rule cached" in sp.rejected["synth_maintenance"]
+    assert "non-monotone" in sp.rejected["delta_restart"]
+
+    ensure_rule(sp.vf.signature, sp.vf.semiring, "delete")
+    plan = planner.plan_program(prog, db, objective="incremental",
+                                delta_nnz=2, delta_op="delete")
+    sp = plan.strata[0]
+    assert sp.runner == "synth_maintenance"
+    assert "⊖-recount[seed=supported, cone=tight]" in sp.reason
+    assert "⊖-recount" in planner.explain(plan)
+
+    # a monotone merge must keep pricing delta-restart instead
+    plan = planner.plan_program(prog, db, objective="incremental",
+                                delta_nnz=2, delta_op="merge")
+    sp = plan.strata[0]
+    assert sp.runner == "delta_restart"
+    assert "synth_maintenance" in sp.rejected
+    clear_rule_cache()
+
+
+# --------------------------------------------------------------------------
+# Serve loop: deletes repair warm answers, compiled runners survive
+# --------------------------------------------------------------------------
+
+
+def test_serve_delete_repairs_and_keeps_compile_cache():
+    from repro.launch.datalog_serve import DatalogServer
+    n = 60
+    g = datasets.erdos_renyi(n, 2.5, seed=4)
+    db = engine.Database(programs.bm(a=0).original.schema, {"id": n},
+                         {"E": g.sparse_adjacency(),
+                          "V": jnp.ones((n,), bool)})
+    server = DatalogServer(max_batch=4)
+    fam = server.register("reach", lambda a: programs.bm(a=a).optimized,
+                          db)
+    sig0 = fam.plan.signature
+    for s in (0, 11, 23):
+        server.submit("reach", s)
+    server.run_until_idle()
+    misses0 = server.stats["cache_misses"]
+    eh = db.relations["E"].as_np()
+    u = server.submit_update("reach", np.asarray(eh.coords[:2]),
+                             op="delete")
+    reqs = [server.submit("reach", s) for s in (0, 11, 23)]
+    server.run_until_idle()
+    assert u.applied
+    assert server.stats["answers_dropped"] == 0
+    assert server.stats["answers_repaired"] >= 3
+    assert server.stats["cache_misses"] == misses0, \
+        "the delete re-lowered the staged fixpoint"
+    assert fam.plan.signature == sig0
+    db2 = engine.Database(db.schema, db.domains,
+                          {"E": db.relations["E"].delete_keys(
+                              np.asarray(eh.coords[:2])),
+                           "V": db.relations["V"]})
+    dense = db2.with_storage("E", "dense")
+    for req in reqs:
+        exp, _ = run_program(programs.bm(a=req.source).optimized, dense,
+                             mode="seminaive")
+        assert np.array_equal(req.result, np.asarray(exp)), req.source

@@ -376,18 +376,26 @@ def test_warm_answers_repaired_in_one_pass():
             req.source
 
 
-def test_delete_update_drops_warm_answers_but_serves_fresh():
+def test_delete_update_repairs_warm_answers_and_serves_fresh():
+    """A delete no longer drops the warm cache: the synthesized
+    ⊖/recount maintenance rule (DESIGN.md §11) repairs the cached
+    answer in place, and a post-delete query warm-hits the repair."""
     db, h = _bridge_db()
     server = DatalogServer(max_batch=4)
     server.register("reach", lambda a: programs.bm(a=a).optimized, db)
     server.submit("reach", 0)
     server.submit_update("reach", [[10, h]])
     server.run_until_idle()
+    repaired0 = server.stats["answers_repaired"]
+    hits0 = server.stats["warm_hits"]
     u = server.submit_update("reach", [[10, h]], op="delete")
     q = server.submit("reach", 0)
     server.run_until_idle()
     assert u.applied
-    assert server.stats["answers_dropped"] >= 1
+    assert server.stats["answers_dropped"] == 0
+    assert server.stats["answers_repaired"] == repaired0 + 1
+    assert server.stats["warm_hits"] == hits0 + 1, \
+        "the post-delete query should be a warm hit on the repair"
     assert not q.result[h:].any()
     assert np.array_equal(q.result, _expected_bm(db, 0))
 

@@ -259,7 +259,7 @@ def test_update_fence_orders_answers():
     assert after[9] and after.sum() == 8
 
 
-def test_update_delete_drops_warm_answers():
+def test_update_delete_repairs_warm_answers():
     _, db = _bm_db()
     cs = ContinuousServer(max_batch=4)
     cs.register("reach", lambda a: programs.bm(a=a).optimized, db)
@@ -271,13 +271,18 @@ def test_update_delete_drops_warm_answers():
     eh = db.relations["E"].as_np()
     e0 = np.asarray(eh.coords[:1])
     u = cs.submit_update("reach", e0, op="delete")
-    r_cold = cs.submit("reach", 5)
+    r_next = cs.submit("reach", 5)
     cs.run_until_idle()
-    assert u.applied and cs.stats()["answers_dropped"] >= 1
+    # the synthesized maintenance rule (DESIGN.md §11) repairs the
+    # cached answer in place instead of dropping it
+    assert u.applied and cs.stats()["answers_dropped"] == 0
+    assert cs.stats()["answers_repaired"] >= 1
+    assert cs.stats()["warm_hits"] == 2, \
+        "the post-delete query should warm-hit the repaired answer"
     db2 = engine.Database(db.schema, db.domains,
                           {"E": db.relations["E"].delete_keys(e0),
                            "V": db.relations["V"]})
-    assert np.array_equal(np.asarray(r_cold.result), _expected_bm(db2, 5))
+    assert np.array_equal(np.asarray(r_next.result), _expected_bm(db2, 5))
 
 
 def test_backpressure_sheds_at_queue_limit():
